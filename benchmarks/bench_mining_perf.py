@@ -1,0 +1,56 @@
+"""§Perf for the paper's own technique: the distributed mining step with
+the paper's optimisations toggled.
+
+  iteration 0 (naive):   per-embedding pattern exchange + per-embedding
+                         graph-isomorphism canonicalisation (Fig 11 naive)
+  iteration 1 (faithful): two-level aggregation — one domain-bitmap
+                         collective, iso checks only per quick pattern
+  iteration 2 (+ODAG):   frontier exchange compressed as DenseODAG
+
+Reports wall time, collective bytes and iso-check counts per variant.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.core import graph as G
+from repro.core.apps import FSMApp
+from repro.core.distributed import DistConfig, run_distributed
+
+
+def _run(cfg_kwargs, g, mesh):
+    app = FSMApp(support=4, max_size=3)
+    t0 = time.perf_counter()
+    res = run_distributed(g, app, mesh, DistConfig(**cfg_kwargs))
+    dt = time.perf_counter() - t0
+    coll = sum(s.collective_bytes for s in res.stats.steps)
+    iso = sum(s.n_iso_checks for s in res.stats.steps)
+    odag = sum(s.odag_bytes for s in res.stats.steps)
+    raw = sum(s.frontier_bytes for s in res.stats.steps)
+    return dt, coll, iso, odag, raw, len(res.patterns)
+
+
+def main():
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n,), ("data",))
+    g = G.citeseer_like(scale=0.12)
+
+    dt, coll, iso, _, raw, np_ = _run(dict(naive_aggregation=True), g, mesh)
+    emit("perf_mining.iter0_naive", dt * 1e6,
+         f"coll_bytes={coll};iso_checks={iso};patterns={np_}")
+
+    dt, coll, iso, _, raw, np_ = _run(dict(), g, mesh)
+    emit("perf_mining.iter1_two_level", dt * 1e6,
+         f"coll_bytes={coll};iso_checks={iso};patterns={np_}")
+
+    dt, coll, iso, odag, raw, np_ = _run(dict(use_odag_exchange=True), g, mesh)
+    emit("perf_mining.iter2_odag", dt * 1e6,
+         f"coll_bytes={coll};iso_checks={iso};"
+         f"frontier_raw={raw};frontier_odag={odag}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Summarise the dry-run roofline table (assignment §Roofline) from
+dryrun_results.json. Derived metrics are recomputed from the raw per-device
+FLOPs/bytes so the formulas can evolve without recompiling 80 cells."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+from repro.roofline.analysis import Roofline
+
+RESULTS = os.path.join(os.path.dirname(__file__), "dryrun_results.json")
+
+
+def load():
+    with open(RESULTS) as f:
+        return json.load(f)
+
+
+def recompute(entry):
+    r = entry["roofline"]
+    return Roofline(
+        flops=r["flops"],
+        hbm_bytes=r["hbm_bytes"],
+        coll_bytes=r["coll_bytes"],
+        chips=r["chips"],
+        model_flops=r["model_flops"],
+        per_device_hbm=r.get("per_device_hbm"),
+    )
+
+
+def main():
+    if not os.path.exists(RESULTS):
+        emit("roofline.missing", -1, "run python -m repro.launch.dryrun --all first")
+        return
+    res = load()
+    n_ok = n_skip = n_err = 0
+    for key in sorted(res):
+        v = res[key]
+        if v.get("status") == "skipped":
+            n_skip += 1
+            continue
+        if v.get("status") != "ok":
+            n_err += 1
+            emit(f"dryrun.{key}", -1, f"error={v.get('error','')[:60]}")
+            continue
+        n_ok += 1
+        if "roofline" not in v:
+            continue
+        roof = recompute(v)
+        step_time = max(roof.t_compute, roof.t_memory, roof.t_collective)
+        emit(
+            f"roofline.{key}",
+            step_time * 1e6,
+            f"bottleneck={roof.bottleneck};frac={roof.roofline_fraction:.3f};"
+            f"useful={roof.useful_flops_ratio:.2f};"
+            f"tc={roof.t_compute:.4f};tm={roof.t_memory:.4f};tx={roof.t_collective:.4f}",
+        )
+    emit("dryrun.summary", 0.0, f"ok={n_ok};skipped={n_skip};errors={n_err}")
+
+
+if __name__ == "__main__":
+    main()

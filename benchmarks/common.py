@@ -1,0 +1,17 @@
+"""Shared benchmark plumbing: CSV emission per the harness contract."""
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6

@@ -1,0 +1,50 @@
+"""Benchmark driver: one bench per paper table/figure (DESIGN.md §6).
+
+Prints ``name,us_per_call,derived`` CSV rows. The dry-run/roofline tables
+(assignment §Dry-run/§Roofline) live in dryrun_results.json, produced by
+``python -m repro.launch.dryrun``; ``bench_roofline`` summarises them here.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_breakdown,
+        bench_large,
+        bench_mining_perf,
+        bench_odag,
+        bench_paradigms,
+        bench_roofline,
+        bench_single_thread,
+        bench_scalability,
+        bench_two_level,
+    )
+
+    benches = [
+        ("paradigms(fig7)", bench_paradigms.main),
+        ("single_thread(table2)", bench_single_thread.main),
+        ("scalability(table3/fig8)", bench_scalability.main),
+        ("odag(fig9/10)", bench_odag.main),
+        ("two_level(table4/fig11)", bench_two_level.main),
+        ("breakdown(fig12)", bench_breakdown.main),
+        ("large(table5)", bench_large.main),
+        ("mining_perf(§Perf)", bench_mining_perf.main),
+        ("roofline(dry-run)", bench_roofline.main),
+    ]
+    failures = 0
+    for name, fn in benches:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""End-to-end driver: frequent subgraph mining on a CiteSeer-scale graph,
+reporting the paper's headline metrics (frequent patterns + supports,
+quick-pattern reduction, per-step stats). This is the paper-kind end-to-end
+run (a mining system's equivalent of a training run).
+
+    PYTHONPATH=src python examples/fsm_end_to_end.py [--support 8] [--scale 0.3]
+"""
+import argparse
+
+from repro.core import EngineConfig, graph, run
+from repro.core.apps import FSMApp
+from repro.core.pattern import pattern_to_networkx
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--support", type=int, default=8)
+    ap.add_argument("--max-size", type=int, default=3)
+    ap.add_argument("--scale", type=float, default=0.3)
+    args = ap.parse_args()
+
+    g = graph.citeseer_like(scale=args.scale)
+    print(f"graph: {g.n} vertices, {g.m} edges, {g.labels.max()+1} labels")
+    res = run(
+        g,
+        FSMApp(support=args.support, max_size=args.max_size),
+        EngineConfig(chunk_size=8192, initial_capacity=1 << 15),
+    )
+
+    print(f"\n{len(res.patterns)} frequent patterns (support >= {args.support}):")
+    for code, sup in sorted(res.patterns.items(), key=lambda kv: -kv[1])[:10]:
+        gx = pattern_to_networkx(code)
+        labels = [d["label"] for _, d in gx.nodes(data=True)]
+        print(f"  {gx.number_of_edges()} edges, labels={labels}: support={sup}")
+
+    print("\nper-step stats (paper Table 4 shape):")
+    print("step size frontier candidates canonical quick canon iso")
+    for s in res.stats.steps:
+        print(
+            f"{s.step:4d} {s.size:4d} {s.n_frontier:9d} {s.n_generated:10d} "
+            f"{s.n_canonical:9d} {s.n_quick_patterns:5d} "
+            f"{s.n_canonical_patterns:5d} {s.n_iso_checks:4d}"
+        )
+    print(f"\nwall time: {res.stats.wall_time:.2f}s; "
+          f"embeddings: {res.stats.total_embeddings}")
+
+
+if __name__ == "__main__":
+    main()

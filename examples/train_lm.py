@@ -1,0 +1,26 @@
+"""Train a ~130M-param LM (smollm-135m exact config) for a few hundred
+steps on synthetic data with checkpointing — the model-zoo end-to-end
+driver. On CPU this uses the reduced config by default; pass --full on a
+real accelerator.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full", action="store_true")
+    args, _ = ap.parse_known_args()
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "smollm-135m",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128",
+        "--ckpt-dir", "/tmp/repro_ckpt",
+    ]
+    if args.full:
+        cmd.append("--full")
+    sys.exit(subprocess.call(cmd))

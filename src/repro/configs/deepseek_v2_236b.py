@@ -1,0 +1,4 @@
+"""Assigned architecture config: deepseek-v2-236b (see registry.py for provenance)."""
+from repro.configs.registry import get_arch
+
+CONFIG = get_arch("deepseek-v2-236b")

@@ -1,0 +1,4 @@
+"""Assigned architecture config: internvl2-26b (see registry.py for provenance)."""
+from repro.configs.registry import get_arch
+
+CONFIG = get_arch("internvl2-26b")

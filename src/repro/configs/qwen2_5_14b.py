@@ -1,0 +1,4 @@
+"""Assigned architecture config: qwen2.5-14b (see registry.py for provenance)."""
+from repro.configs.registry import get_arch
+
+CONFIG = get_arch("qwen2.5-14b")

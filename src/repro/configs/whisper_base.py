@@ -1,0 +1,4 @@
+"""Assigned architecture config: whisper-base (see registry.py for provenance)."""
+from repro.configs.registry import get_arch
+
+CONFIG = get_arch("whisper-base")

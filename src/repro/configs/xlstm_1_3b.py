@@ -1,0 +1,4 @@
+"""Assigned architecture config: xlstm-1.3b (see registry.py for provenance)."""
+from repro.configs.registry import get_arch
+
+CONFIG = get_arch("xlstm-1.3b")

@@ -1,0 +1,4 @@
+"""Assigned architecture config: yi-34b (see registry.py for provenance)."""
+from repro.configs.registry import get_arch
+
+CONFIG = get_arch("yi-34b")

@@ -1,0 +1,4 @@
+"""Assigned architecture config: zamba2-2.7b (see registry.py for provenance)."""
+from repro.configs.registry import get_arch
+
+CONFIG = get_arch("zamba2-2.7b")

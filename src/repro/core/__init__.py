@@ -1,0 +1,20 @@
+"""Arabesque's contribution in JAX: the filter-process TLE mining engine."""
+import jax
+
+# Quick-pattern codes are genuine 64-bit keys (labels + structure bits); the
+# model zoo always passes explicit dtypes, so enabling x64 is safe globally.
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.api import MiningApp
+from repro.core.engine import EngineConfig, MiningResult, run
+from repro.core.graph import DeviceGraph, Graph, to_device
+
+__all__ = [
+    "MiningApp",
+    "EngineConfig",
+    "MiningResult",
+    "run",
+    "DeviceGraph",
+    "Graph",
+    "to_device",
+]

@@ -1,0 +1,176 @@
+"""Pattern-keyed aggregation (paper §4.1 map/reduce + §5.4 two levels).
+
+Level 1 runs on device over all embeddings of the step (counts, FSM domain
+bitmaps keyed by *quick*-pattern slot). Level 2 maps quick slots to canonical
+slots (host table from :mod:`repro.core.pattern`) and folds level-1 state —
+the only stage that ever touches graph isomorphism.
+
+In the distributed runtime the level-1 state is exactly what gets
+all-reduced: per-pattern scalars and domain bitmaps, never embeddings
+(DESIGN.md §4) — this is how the paper's Table-4 reduction becomes a
+collective-bytes reduction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pattern as pattern_lib
+
+
+class StepAggregates(NamedTuple):
+    """Aggregation output of one exploration step (canonical-pattern keyed)."""
+
+    canon_codes: np.ndarray    # (Pc, 3) int64
+    counts: np.ndarray         # (Pc,) int64 — #embeddings per pattern
+    supports: np.ndarray       # (Pc,) int64 — min-image support (== counts
+                               #   when domains were not requested)
+    n_quick: int               # distinct quick patterns this step (Table 4)
+    n_canonical: int           # distinct canonical patterns
+    n_iso_checks: int          # graph-isomorphism invocations
+
+
+def quick_slot_ids(codes: jnp.ndarray, valid: jnp.ndarray):
+    """Host-side unique over the (B, 3) quick codes -> (unique (Q,3), inv (B,)).
+
+    The two-level scheme makes Q tiny (Table 4), so one host unique per step
+    is cheap; rows with ``valid == False`` are mapped to slot -1.
+    """
+    codes_np = np.asarray(codes)
+    valid_np = np.asarray(valid)
+    if not valid_np.any():
+        return np.zeros((0, 3), np.int64), np.full(len(codes_np), -1, np.int32)
+    uniq, inv = np.unique(codes_np[valid_np], axis=0, return_inverse=True)
+    full_inv = np.full(len(codes_np), -1, dtype=np.int32)
+    full_inv[valid_np] = inv.astype(np.int32)
+    return uniq, full_inv
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots",))
+def count_by_slot(slot: jnp.ndarray, valid: jnp.ndarray, n_slots: int) -> jnp.ndarray:
+    """Embedding counts per quick slot (level-1 reduce)."""
+    return jax.ops.segment_sum(
+        valid.astype(jnp.int64), jnp.where(valid, slot, n_slots), n_slots + 1
+    )[:n_slots]
+
+
+@functools.partial(jax.jit, static_argnames=("n_canon", "n_vertices"))
+def domain_bitmaps(
+    canon_slot: jnp.ndarray,     # (B,) int32 canonical slot per embedding
+    verts_canonical: jnp.ndarray,  # (B, 8) int32 graph vertex at canonical pos
+    valid: jnp.ndarray,          # (B,) bool
+    n_canon: int,
+    n_vertices: int,
+) -> jnp.ndarray:
+    """FSM min-image domains (level-1): bool (Pc, 8, N) — vertex v appears at
+    canonical position p of some embedding of pattern pc.
+
+    One dense scatter; in the distributed engine this tensor is OR-allreduced
+    (bool max) across workers — the paper's domain merge as one collective.
+    """
+    b, kmax = verts_canonical.shape
+    flat = jnp.zeros((n_canon * kmax * n_vertices + 1,), dtype=bool)
+    slot_ok = valid[:, None] & (verts_canonical >= 0) & (canon_slot[:, None] >= 0)
+    idx = (
+        canon_slot[:, None].astype(jnp.int64) * (kmax * n_vertices)
+        + jnp.arange(kmax)[None, :] * n_vertices
+        + jnp.maximum(verts_canonical, 0)
+    )
+    idx = jnp.where(slot_ok, idx, n_canon * kmax * n_vertices)
+    flat = flat.at[idx.reshape(-1)].set(True)
+    return flat[:-1].reshape(n_canon, kmax, n_vertices)
+
+
+def min_image_support(
+    bitmaps: jnp.ndarray, canon_n_verts: np.ndarray, canon_orbits: np.ndarray
+) -> np.ndarray:
+    """Support(p) = min over pattern positions of |domain(position)| [7].
+
+    Domains are defined over *all* isomorphisms pattern->embedding; with one
+    fixed isomorphism per embedding the missing mappings are recovered by
+    OR-ing domains across each position's automorphism orbit
+    (pattern.automorphism_orbits).
+    """
+    bm = np.asarray(bitmaps)                          # (Pc, 8, N) bool
+    pc, kmax, n = bm.shape
+    merged = np.zeros_like(bm)
+    for p in range(pc):
+        for pos in range(kmax):
+            merged[p, pos] = bm[p, canon_orbits[p] == canon_orbits[p, pos]].any(axis=0)
+    counts = merged.sum(axis=2)                       # (Pc, 8)
+    pos_ok = np.arange(kmax)[None, :] < np.asarray(canon_n_verts)[:, None]
+    counts = np.where(pos_ok, counts, np.iinfo(np.int64).max)
+    return counts.min(axis=1).astype(np.int64)
+
+
+def map_to_canonical_positions(
+    table: pattern_lib.PatternTable,
+    quick_slot: np.ndarray,       # (B,) int32
+    local_verts: jnp.ndarray,     # (B, 8) int32
+) -> tuple[np.ndarray, jnp.ndarray]:
+    """Per-embedding canonical slot + vertices re-ordered to canonical
+    positions (position p holds local vertex with sigma[local]=p)."""
+    sigma = table.sigma[np.maximum(quick_slot, 0)]    # (B, 8) local -> canon
+    sigma_inv = np.argsort(sigma, axis=1)             # canon -> local
+    lv = np.asarray(local_verts)
+    verts_canon = np.take_along_axis(lv, sigma_inv, axis=1)
+    canon_slot = np.where(
+        quick_slot >= 0, table.quick_to_canon[np.maximum(quick_slot, 0)], -1
+    ).astype(np.int32)
+    return canon_slot, jnp.asarray(verts_canon)
+
+
+def aggregate_step(
+    g_n_vertices: int,
+    qp: pattern_lib.QuickPatterns,
+    valid: jnp.ndarray,
+    with_domains: bool,
+) -> tuple[StepAggregates, np.ndarray, pattern_lib.PatternTable]:
+    """Full two-level aggregation for one step's candidate embeddings.
+
+    Returns (aggregates, per-embedding canonical slot, pattern table).
+    """
+    uniq_quick, inv = quick_slot_ids(qp.codes, valid)
+    table = pattern_lib.build_pattern_table(uniq_quick)
+    q = len(uniq_quick)
+    pc = len(table.canon_codes)
+
+    if q == 0:
+        empty = StepAggregates(
+            canon_codes=np.zeros((0, 3), np.int64),
+            counts=np.zeros((0,), np.int64),
+            supports=np.zeros((0,), np.int64),
+            n_quick=0,
+            n_canonical=0,
+            n_iso_checks=0,
+        )
+        return empty, np.full(len(np.asarray(valid)), -1, np.int32), table
+
+    quick_counts = np.asarray(count_by_slot(jnp.asarray(inv), valid, q))
+    counts = np.zeros(pc, dtype=np.int64)
+    np.add.at(counts, table.quick_to_canon, quick_counts)
+
+    canon_slot, verts_canon = map_to_canonical_positions(table, inv, qp.local_verts)
+    if with_domains:
+        bitmaps = domain_bitmaps(
+            jnp.asarray(canon_slot), verts_canon, valid, pc, g_n_vertices
+        )
+        supports = min_image_support(
+            bitmaps, table.canon_n_verts, table.canon_orbits
+        )
+    else:
+        supports = counts.copy()
+
+    agg = StepAggregates(
+        canon_codes=table.canon_codes,
+        counts=counts,
+        supports=supports,
+        n_quick=q,
+        n_canonical=pc,
+        n_iso_checks=table.n_iso_checks,
+    )
+    return agg, canon_slot, table

@@ -1,0 +1,76 @@
+"""The filter-process programming model (paper §3, §4.1).
+
+Applications implement the paper's user-defined functions. The one TPU
+adaptation: functions are *vectorised* — they receive a batch of embeddings
+as arrays and return boolean masks, instead of being called per embedding.
+Automorphism invariance and anti-monotonicity (paper §3.1 "Guarantees and
+requirements") are still the application's obligation; the property tests
+check them for the bundled apps.
+
+Mapping to the paper's API (Figure 3):
+  filter              -> :meth:`MiningApp.filter`           (phi)
+  process             -> engine output collection + :meth:`process_outputs`
+  aggregationFilter   -> :meth:`MiningApp.aggregation_filter` (alpha)
+  aggregationProcess  -> :meth:`MiningApp.aggregation_process` (beta)
+  terminationFilter   -> :meth:`MiningApp.termination_filter`
+  map/reduce          -> pattern-keyed aggregation in the engine (§5.4)
+  readAggregate       -> the ``agg`` argument handed to alpha/beta
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import DeviceGraph
+
+
+@dataclasses.dataclass
+class MiningApp:
+    """Base class: explores everything up to ``max_size`` (no pruning)."""
+
+    #: 'vertex' (vertex-induced) or 'edge' (edge-induced) exploration (§3.1)
+    mode: str = "vertex"
+    #: stop after embeddings reach this many vertices (vertex mode) or edges
+    #: (edge mode); the terminationFilter optimisation of §4.1.
+    max_size: Optional[int] = None
+    #: run pattern aggregation each step (two-level, §5.4)
+    wants_patterns: bool = True
+    #: compute FSM-style min-image domains during aggregation
+    wants_domains: bool = False
+    #: keep explored embeddings in the result (paper ``output(e)``)
+    collect_embeddings: bool = False
+
+    # -- phi: candidate filter, vectorised ---------------------------------
+    def filter(
+        self,
+        g: DeviceGraph,
+        members: jnp.ndarray,   # (C, k) parent embeddings of the chunk
+        n_valid: jnp.ndarray,   # (C,)
+        rows: jnp.ndarray,      # (Ncand,) parent row per candidate
+        cand: jnp.ndarray,      # (Ncand,) extension vertex/edge id
+    ) -> jnp.ndarray:
+        """Anti-monotonic candidate predicate; default: accept all."""
+        return jnp.ones(rows.shape, dtype=bool)
+
+    # -- alpha: aggregation filter on the frontier, host-side --------------
+    def aggregation_filter(
+        self,
+        canon_slot: np.ndarray,     # (B,) canonical-pattern slot per frontier row
+        agg,                        # StepAggregates from the generating step
+    ) -> np.ndarray:
+        """Prune frontier rows using aggregates of their generating step;
+        default: keep all (paper: alpha defaults to true)."""
+        return np.ones(canon_slot.shape, dtype=bool)
+
+    # -- beta: aggregation process (outputs keyed by pattern) --------------
+    def aggregation_process(self, agg) -> Optional[dict]:
+        """Return the per-pattern outputs for this step (or None)."""
+        return None
+
+    # -- termination filter -------------------------------------------------
+    def termination_filter(self, size_after_step: int) -> bool:
+        """True -> stop expanding after this size (default: max_size)."""
+        return self.max_size is not None and size_after_step >= self.max_size

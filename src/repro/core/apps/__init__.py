@@ -1,0 +1,5 @@
+from repro.core.apps.cliques import CliquesApp
+from repro.core.apps.fsm import FSMApp
+from repro.core.apps.motifs import MotifsApp
+
+__all__ = ["CliquesApp", "FSMApp", "MotifsApp"]

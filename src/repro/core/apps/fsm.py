@@ -1,0 +1,41 @@
+"""Frequent subgraph mining (paper Fig. 4a): edge-induced exploration with
+min-image support [Bringmann & Nijssen] computed via domain aggregation.
+
+phi: size bound (anti-monotonic). map/reduce: domains merged per pattern —
+in this engine that is the (Pc, k, N) domain bitmap OR-reduce. alpha: prune
+embeddings whose pattern's support < theta. beta: output the frequent
+patterns with their supports.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import MiningApp
+from repro.core.graph import DeviceGraph
+
+
+@dataclasses.dataclass
+class FSMApp(MiningApp):
+    mode: str = "edge"
+    support: int = 2                 # theta
+    max_size: int = 4                # max edges (None = unbounded, paper default)
+    wants_patterns: bool = True
+    wants_domains: bool = True
+    max_vertices: int | None = None  # optional numVertices(e) <= MAX filter
+
+    def filter(self, g: DeviceGraph, members, n_valid, rows, cand):
+        if self.max_vertices is None:
+            return jnp.ones(rows.shape, dtype=bool)
+        # numVertices(e + cand) <= max_vertices: count distinct endpoints.
+        # Upper bound: a new edge adds at most one vertex to a connected
+        # subgraph, so #vertices <= #edges + 1; exact check is done at
+        # aggregation time, this is the cheap anti-monotonic bound.
+        n_edges = n_valid[rows] + 1
+        return n_edges + 1 <= self.max_vertices + 1
+
+    def aggregation_filter(self, canon_slot: np.ndarray, agg) -> np.ndarray:
+        sup = np.where(canon_slot >= 0, agg.supports[np.maximum(canon_slot, 0)], 0)
+        return sup >= self.support

@@ -1,0 +1,21 @@
+"""Counting motifs (paper Fig. 4b): exhaustive vertex-induced exploration up
+to ``max_size``, counting embeddings per pattern.
+
+Paper implementation is 18 lines; ours is the class below. ``filter`` is the
+default accept-all (the size bound is the termination filter), ``process`` is
+``mapOutput(pattern(e), 1)`` which is exactly the engine's pattern
+aggregation with counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.api import MiningApp
+
+
+@dataclasses.dataclass
+class MotifsApp(MiningApp):
+    mode: str = "vertex"
+    max_size: int = 3
+    wants_patterns: bool = True
+    wants_domains: bool = False

@@ -1,0 +1,167 @@
+"""Exact brute-force oracles (host, networkx) for validating the engine.
+
+These enumerate *all* connected vertex- or edge-induced embeddings by
+recursive expansion with set-dedup (no canonicality tricks), then compute
+pattern counts and min-image supports independently of every device code
+path. Only usable on tiny graphs; that is their job.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import defaultdict
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.core import pattern as pattern_lib
+
+
+def _adj_sets(g: Graph):
+    adj = [set() for _ in range(g.n)]
+    for u, v in g.edges:
+        adj[int(u)].add(int(v))
+        adj[int(v)].add(int(u))
+    return adj
+
+
+def enumerate_vertex_embeddings(g: Graph, max_size: int) -> dict[int, set]:
+    """All connected vertex sets of size 1..max_size, as frozensets."""
+    adj = _adj_sets(g)
+    levels: dict[int, set] = {1: {frozenset([v]) for v in range(g.n)}}
+    for k in range(2, max_size + 1):
+        nxt = set()
+        for emb in levels[k - 1]:
+            border = set().union(*(adj[v] for v in emb)) - set(emb)
+            for v in border:
+                nxt.add(emb | {v})
+        levels[k] = nxt
+    return levels
+
+
+def enumerate_edge_embeddings(g: Graph, max_size: int) -> dict[int, set]:
+    """All connected edge-id sets of size 1..max_size."""
+    incident = [set() for _ in range(g.n)]
+    for eid, (u, v) in enumerate(g.edges):
+        incident[int(u)].add(eid)
+        incident[int(v)].add(eid)
+    levels: dict[int, set] = {1: {frozenset([e]) for e in range(g.m)}}
+    for k in range(2, max_size + 1):
+        nxt = set()
+        for emb in levels[k - 1]:
+            verts = set()
+            for e in emb:
+                verts.update(g.edges[e])
+            border = set().union(*(incident[v] for v in verts)) - set(emb)
+            for e in border:
+                nxt.add(emb | {e})
+        levels[k] = nxt
+    return levels
+
+
+def _vertex_embedding_code(g: Graph, emb: frozenset):
+    """Canonical pattern code of a vertex-induced embedding (host path,
+    independent of the device quick-pattern code)."""
+    vs = sorted(emb)
+    nv = len(vs)
+    idx = {v: i for i, v in enumerate(vs)}
+    adj = np.zeros((nv, nv), dtype=bool)
+    es = set(map(tuple, np.sort(g.edges, axis=1).tolist()))
+    for a, b in itertools.combinations(vs, 2):
+        if (a, b) in es or (b, a) in es:
+            adj[idx[a], idx[b]] = adj[idx[b], idx[a]] = True
+    labels = g.labels[vs]
+    quick = pattern_lib.encode(nv, adj, labels)
+    code, _ = pattern_lib.canonicalize_one(quick)
+    return code
+
+
+def _edge_embedding_code_and_vertmaps(g: Graph, emb: frozenset):
+    """Canonical code + *all* {canonical position -> graph vertex} maps of an
+    edge-induced embedding (one per isomorphism pattern->embedding; the
+    paper's domain definition ranges over all of them)."""
+    eids = sorted(emb)
+    vs = sorted({int(x) for e in eids for x in g.edges[e]})
+    nv = len(vs)
+    idx = {v: i for i, v in enumerate(vs)}
+    adj = np.zeros((nv, nv), dtype=bool)
+    for e in eids:
+        u, v = (int(x) for x in g.edges[e])
+        adj[idx[u], idx[v]] = adj[idx[v], idx[u]] = True
+    labels = g.labels[vs]
+    quick = pattern_lib.encode(nv, adj, labels)
+    code, _ = pattern_lib.canonicalize_one(quick)
+    # every permutation achieving the canonical code is an isomorphism
+    maps = []
+    for perm in itertools.permutations(range(nv)):
+        perm = np.array(perm)
+        padj = adj[np.ix_(perm, perm)]
+        plab = labels[perm]
+        if pattern_lib.encode(nv, padj, plab) == code:
+            # canonical position i corresponds to local vertex perm[i]
+            maps.append({i: vs[perm[i]] for i in range(nv)})
+    return code, maps
+
+
+def motif_counts(g: Graph, max_size: int) -> dict[tuple, int]:
+    """Pattern -> #vertex-induced embeddings, sizes 1..max_size."""
+    counts: dict[tuple, int] = defaultdict(int)
+    levels = enumerate_vertex_embeddings(g, max_size)
+    for k in range(1, max_size + 1):
+        for emb in levels[k]:
+            counts[_vertex_embedding_code(g, emb)] += 1
+    return dict(counts)
+
+
+def clique_counts(g: Graph, max_size: int) -> dict[int, int]:
+    """size -> #cliques (vertex-induced complete subgraphs)."""
+    adj = _adj_sets(g)
+    levels = enumerate_vertex_embeddings(g, max_size)
+    out = {}
+    for k in range(1, max_size + 1):
+        cnt = 0
+        for emb in levels[k]:
+            if all(b in adj[a] for a, b in itertools.combinations(emb, 2)):
+                cnt += 1
+        out[k] = cnt
+    return out
+
+
+def fsm_supports(g: Graph, max_size: int, support: int) -> dict[tuple, int]:
+    """Frequent edge-induced patterns with min-image supports, honouring
+    anti-monotonic level-wise pruning exactly as the engine does (embeddings
+    of infrequent patterns are not expanded)."""
+    incident = [set() for _ in range(g.n)]
+    for eid, (u, v) in enumerate(g.edges):
+        incident[int(u)].add(eid)
+        incident[int(v)].add(eid)
+
+    frequent: dict[tuple, int] = {}
+    frontier = {frozenset([e]) for e in range(g.m)}
+    for k in range(1, max_size + 1):
+        if not frontier:
+            break
+        domains: dict[tuple, dict[int, set]] = defaultdict(lambda: defaultdict(set))
+        by_pattern: dict[tuple, list] = defaultdict(list)
+        for emb in frontier:
+            code, vmaps = _edge_embedding_code_and_vertmaps(g, emb)
+            by_pattern[code].append(emb)
+            for vmap in vmaps:
+                for pos, vert in vmap.items():
+                    domains[code][pos].add(vert)
+        survivors = set()
+        for code, embs in by_pattern.items():
+            sup = min(len(s) for s in domains[code].values())
+            if sup >= support:
+                frequent[code] = sup
+                survivors.update(embs)
+        nxt = set()
+        if k < max_size:
+            for emb in survivors:
+                verts = set()
+                for e in emb:
+                    verts.update(int(x) for x in g.edges[e])
+                border = set().union(*(incident[v] for v in verts)) - set(emb)
+                for e in border:
+                    nxt.add(emb | {e})
+        frontier = nxt
+    return frequent

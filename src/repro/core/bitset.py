@@ -1,0 +1,58 @@
+"""Dense bitset utilities (uint32-packed) used for O(1) adjacency queries.
+
+The Giraph implementation of Arabesque chases adjacency-list pointers per
+candidate; on TPU we replace that with a packed bitset adjacency matrix so the
+canonicality check (Algorithm 2) becomes a fused, branch-free mask expression.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+
+
+def n_words(n_bits: int) -> int:
+    return (int(n_bits) + WORD_BITS - 1) // WORD_BITS
+
+
+def pack_bool_matrix(dense: np.ndarray) -> np.ndarray:
+    """Pack a (R, N) bool matrix into (R, ceil(N/32)) uint32, LSB-first."""
+    dense = np.asarray(dense, dtype=bool)
+    r, n = dense.shape
+    w = n_words(n)
+    padded = np.zeros((r, w * WORD_BITS), dtype=bool)
+    padded[:, :n] = dense
+    bits = padded.reshape(r, w, WORD_BITS)
+    weights = (1 << np.arange(WORD_BITS, dtype=np.uint64)).astype(np.uint64)
+    return (bits.astype(np.uint64) * weights).sum(axis=2).astype(np.uint32)
+
+
+def test_bit(words: jnp.ndarray, row: jnp.ndarray, col: jnp.ndarray) -> jnp.ndarray:
+    """Query bit (row, col) of a packed (R, W) uint32 matrix.
+
+    ``row``/``col`` may be any (broadcastable) integer arrays. Out-of-range
+    indices (negative) return False.
+    """
+    row = jnp.asarray(row)
+    col = jnp.asarray(col)
+    ok = (row >= 0) & (col >= 0)
+    r = jnp.maximum(row, 0)
+    c = jnp.maximum(col, 0)
+    word = words[r, c // WORD_BITS]
+    bit = (word >> (c % WORD_BITS).astype(jnp.uint32)) & jnp.uint32(1)
+    return ok & (bit == 1)
+
+
+def popcount_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-element population count of a uint32 array (SWAR)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def count_bits(words: jnp.ndarray, axis=-1) -> jnp.ndarray:
+    """Total set bits along ``axis`` of a packed uint32 array."""
+    return popcount_u32(words).sum(axis=axis)

@@ -1,0 +1,135 @@
+"""Vectorised incremental embedding-canonicality checks (paper Alg. 2).
+
+Uniqueness + extendibility (paper Appendix, Thm 2/3) guarantee that pruning
+non-canonical candidates removes every automorphic duplicate while keeping
+exactly one representative, with no cross-worker coordination. Our tests
+verify both properties against brute-force oracles (hypothesis property
+tests in ``tests/test_property_canonical.py``).
+
+The checks here are branch-free mask expressions evaluated for a whole batch
+of candidates at once (one lane per candidate): the TPU-native form of the
+paper's per-embedding linear scan.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.graph import DeviceGraph
+
+
+def vertex_check(
+    g: DeviceGraph,
+    members: jnp.ndarray,   # (B, k) int32 parent vertices in visit order, pad -1
+    n_valid: jnp.ndarray,   # (B,) int32 number of valid members
+    cand: jnp.ndarray,      # (B,) int32 candidate extension vertex
+) -> jnp.ndarray:
+    """True iff ``members[:n_valid] + [cand]`` is canonical (Alg. 2).
+
+    Assumes the parent itself is canonical (inductive invariant maintained by
+    the engine) and that ``cand`` is adjacent to at least one member (true by
+    construction of the candidate set). Rows with ``n_valid == 0`` are the
+    bootstrap case: every single vertex is canonical.
+    """
+    b, k = members.shape
+    pos = jnp.arange(k)[None, :]
+    valid = pos < n_valid[:, None]
+
+    # Alg.2 line 1: if v1 > v -> false.
+    first_ok = jnp.where(n_valid > 0, members[:, 0] < cand, True)
+
+    # neighbour mask of cand among the (valid) members.
+    neigh = g.is_edge(members, cand[:, None]) & valid
+
+    # foundNeighbour becomes true strictly *after* the first neighbour index:
+    # elements before/at the first neighbour are exempt from the id test.
+    found_after = jnp.cumsum(neigh.astype(jnp.int32), axis=1) > 0
+    found_before = jnp.concatenate(
+        [jnp.zeros((b, 1), dtype=bool), found_after[:, :-1]], axis=1
+    )
+    violation = valid & found_before & (members > cand[:, None])
+    return first_ok & ~violation.any(axis=1)
+
+
+def edge_check(
+    g: DeviceGraph,
+    members: jnp.ndarray,   # (B, k) int32 parent edge ids in visit order, pad -1
+    n_valid: jnp.ndarray,   # (B,) int32
+    cand: jnp.ndarray,      # (B,) int32 candidate extension edge id
+) -> jnp.ndarray:
+    """Edge-based analogue of Alg. 2 (paper §5.1 "the edge-based case is
+    analogous").
+
+    Canonical order: start from the smallest incident-edge id and recursively
+    append the smallest-id edge sharing an endpoint with the current
+    subgraph. Incrementally: scan members for the first edge sharing an
+    endpoint with ``cand``; afterwards no member id may exceed ``cand``.
+    """
+    b, k = members.shape
+    pos = jnp.arange(k)[None, :]
+    valid = pos < n_valid[:, None]
+
+    first_ok = jnp.where(n_valid > 0, members[:, 0] < cand, True)
+
+    safe = jnp.maximum(members, 0)
+    mu = g.edge_uv[safe]                       # (B, k, 2)
+    cu = g.edge_uv[jnp.maximum(cand, 0)]       # (B, 2)
+    shares = (
+        (mu[..., 0] == cu[:, None, 0])
+        | (mu[..., 0] == cu[:, None, 1])
+        | (mu[..., 1] == cu[:, None, 0])
+        | (mu[..., 1] == cu[:, None, 1])
+    ) & valid
+
+    found_after = jnp.cumsum(shares.astype(jnp.int32), axis=1) > 0
+    found_before = jnp.concatenate(
+        [jnp.zeros((b, 1), dtype=bool), found_after[:, :-1]], axis=1
+    )
+    violation = valid & found_before & (members > cand[:, None])
+    return first_ok & ~violation.any(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Reference (non-incremental) canonical forms — used by oracles/tests and by
+# the ODAG spurious-path filter when it needs a from-scratch recheck.
+# ---------------------------------------------------------------------------
+
+def canonical_order_vertices(adj_query, vertices):
+    """Host-side reference: canonical visit order of a vertex set (Appendix
+    Thm 3 construction): start at min id; repeatedly append the min-id vertex
+    adjacent to the prefix."""
+    vs = sorted(int(v) for v in vertices)
+    order = [vs[0]]
+    rest = set(vs[1:])
+    while rest:
+        nxt = min(
+            (v for v in rest if any(adj_query(u, v) for u in order)),
+            default=None,
+        )
+        if nxt is None:  # disconnected: not a valid embedding
+            return None
+        order.append(nxt)
+        rest.remove(nxt)
+    return order
+
+
+def canonical_order_edges(edge_uv, edge_ids):
+    """Host-side reference canonical order for an edge set."""
+    es = sorted(int(e) for e in edge_ids)
+    order = [es[0]]
+    verts = set(edge_uv[es[0]])
+    rest = set(es[1:])
+    while rest:
+        nxt = min(
+            (
+                e
+                for e in rest
+                if edge_uv[e][0] in verts or edge_uv[e][1] in verts
+            ),
+            default=None,
+        )
+        if nxt is None:
+            return None
+        order.append(nxt)
+        verts.update(edge_uv[nxt])
+        rest.remove(nxt)
+    return order

@@ -1,0 +1,324 @@
+"""Distributed TLE exploration on a device mesh (paper §5.1/§5.3 on JAX).
+
+The Giraph BSP superstep becomes one jitted ``shard_map`` program per
+exploration step:
+
+  * expansion + canonicality is *coordination-free* (paper §5.1): each worker
+    expands its frontier slice with zero communication;
+  * pattern aggregation is ONE collective: per-pattern counts and FSM domain
+    bitmaps are ``psum``/OR-allreduced (two-level aggregation: bytes scale
+    with #patterns, never #embeddings — Table 4 as collective-bytes);
+  * frontier re-balancing is broadcast-then-partition (paper §5.3): an
+    all-gather of the (optionally DenseODAG-compressed) frontier followed by
+    deterministic block slicing, so every worker ends with |F|/W embeddings.
+
+``run_distributed`` mirrors ``engine.run`` and must produce identical
+results (integration-tested); ``mining_step_for_dryrun`` is the fixed-shape
+program the multi-pod dry-run lowers on the 512-chip mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import aggregation, explore, pattern as pattern_lib
+from repro.core.api import MiningApp
+from repro.core.engine import EngineConfig, MiningResult, _next_pow2
+from repro.core.graph import DeviceGraph, Graph, to_device
+from repro.core.stats import RunStats, StepStats, Timer
+
+
+def _mesh_axis_size(mesh: Mesh, axes) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def partition_frontier(frontier: np.ndarray, n_shards: int):
+    """Broadcast-then-partition (paper §5.3): even block split, padded."""
+    b, k = frontier.shape
+    per = -(-b // n_shards) if b else 1
+    padded = np.full((n_shards * per, k), -1, dtype=np.int32)
+    padded[:b] = frontier
+    counts = np.clip(b - per * np.arange(n_shards), 0, per).astype(np.int32)
+    return padded.reshape(n_shards, per, k), counts
+
+
+def make_sharded_expand(app: MiningApp, mesh: Mesh, axes=("data",)):
+    """One BSP superstep: coordination-free expand over the mesh."""
+
+    mode = app.mode
+    spec_in = P(axes)
+
+    @functools.partial(jax.jit, static_argnames=("out_cap",))
+    def step(g: DeviceGraph, members, n_valid, out_cap: int):
+        def worker(g, members, n_valid):
+            m = members[0]          # shard_map adds the leading shard dim
+            nv = n_valid[0]
+            if mode == "vertex":
+                exp = explore.expand_vertex(g, m, nv)
+            else:
+                exp = explore.expand_edge(g, m, nv)
+            keep = exp.keep & app.filter(g, m, nv, exp.rows, exp.cand)
+            children, count = explore.compact(m, exp, keep, out_cap)
+            return (
+                children[None],
+                count[None],
+                exp.n_generated[None],
+                exp.n_canonical[None],
+            )
+
+        return jax.shard_map(
+            functools.partial(worker, g),
+            mesh=mesh,
+            in_specs=(spec_in, spec_in),
+            out_specs=(spec_in, spec_in, spec_in, spec_in),
+        )(members, n_valid)
+
+    return step
+
+
+def make_sharded_aggregate(mesh: Mesh, axes=("data",)):
+    """Two-level aggregation's global reduce as ONE collective: counts psum +
+    domain-bitmap OR(max)-allreduce over the mesh axes."""
+
+    spec = P(axes)
+
+    @functools.partial(jax.jit, static_argnames=("n_canon", "n_vertices"))
+    def agg(canon_slot, verts_canon, valid, n_canon: int, n_vertices: int):
+        def worker(canon_slot, verts_canon, valid):
+            slot = canon_slot[0]
+            counts = jax.ops.segment_sum(
+                valid[0].astype(jnp.int64),
+                jnp.where(valid[0], slot, n_canon),
+                n_canon + 1,
+            )[:n_canon]
+            bitmaps = aggregation.domain_bitmaps(
+                slot, verts_canon[0], valid[0], n_canon, n_vertices
+            )
+            # THE collective: bytes ∝ #patterns, not #embeddings (Table 4)
+            counts = jax.lax.psum(counts, axes)
+            bitmaps = jax.lax.pmax(bitmaps.astype(jnp.int32), axes) > 0
+            return counts[None], bitmaps[None]
+
+        counts, bitmaps = jax.shard_map(
+            worker,
+            mesh=mesh,
+            in_specs=(spec, spec, spec),
+            out_specs=(spec, spec),
+        )(canon_slot, verts_canon, valid)
+        return counts[0], bitmaps[0]
+
+    return agg
+
+
+@dataclasses.dataclass
+class DistConfig:
+    axes: tuple = ("data",)
+    initial_capacity: int = 4096     # per-shard children capacity bucket
+    max_steps: int = 16
+    use_odag_exchange: bool = False  # account frontier exchange as DenseODAG
+    #: disable two-level aggregation (§Perf baseline): every worker
+    #: all-gathers all embeddings' quick codes and canonicalises each
+    #: embedding's pattern itself — the paper's Fig.11 naive scheme.
+    naive_aggregation: bool = False
+
+
+def run_distributed(
+    graph: Graph | DeviceGraph,
+    app: MiningApp,
+    mesh: Mesh,
+    config: Optional[DistConfig] = None,
+) -> MiningResult:
+    """Distributed mirror of ``engine.run`` (same MiningResult contract)."""
+    config = config or DistConfig()
+    g = to_device(graph) if isinstance(graph, Graph) else graph
+    n_shards = _mesh_axis_size(mesh, config.axes)
+    expand = make_sharded_expand(app, mesh, config.axes)
+    aggregate = make_sharded_aggregate(mesh, config.axes)
+
+    result = MiningResult(patterns={}, aggregates=[], stats=RunStats(), embeddings={})
+    t_start = time.perf_counter()
+
+    n0 = g.n if app.mode == "vertex" else g.m
+    frontier = np.arange(n0, dtype=np.int32)[:, None]
+    size = 1
+    cap = config.initial_capacity
+
+    for step_i in range(1, config.max_steps + 1):
+        b = len(frontier)
+        if b == 0:
+            break
+        st = StepStats(step=step_i, size=size, n_frontier=b)
+        st.frontier_bytes = frontier.size * 4
+        timer = Timer()
+
+        # ---- pattern aggregation (collective) ---------------------------
+        canon_slot = None
+        agg_out = None
+        if app.wants_patterns:
+            n_valid_h = jnp.full((b,), size, dtype=jnp.int32)
+            qp = (
+                pattern_lib.quick_pattern_vertex(g, jnp.asarray(frontier), n_valid_h)
+                if app.mode == "vertex"
+                else pattern_lib.quick_pattern_edge(g, jnp.asarray(frontier), n_valid_h)
+            )
+            if config.naive_aggregation:
+                # naive scheme: exchange per-EMBEDDING codes (an all-gather
+                # of B x 24 bytes x workers) and run pattern canonicalisation
+                # once per embedding instead of once per quick pattern.
+                st.collective_bytes += int(qp.codes.size * 8) * n_shards
+                for row in np.asarray(qp.codes):
+                    pattern_lib.canonicalize_one(row)       # B iso checks
+            uniq, inv = aggregation.quick_slot_ids(qp.codes, np.ones(b, bool))
+            table = pattern_lib.build_pattern_table(uniq)
+            pc = len(table.canon_codes)
+            canon_slot, verts_canon = aggregation.map_to_canonical_positions(
+                table, inv, qp.local_verts
+            )
+            # shard the level-1 inputs, reduce with the collective
+            slot_sh, slot_counts = partition_frontier(canon_slot[:, None], n_shards)
+            vc_sh, _ = partition_frontier(np.asarray(verts_canon), n_shards)
+            per = slot_sh.shape[1]
+            valid_sh = (
+                np.arange(per)[None, :] < slot_counts[:, None]
+            )
+            counts, bitmaps = aggregate(
+                jnp.asarray(slot_sh[:, :, 0]),
+                jnp.asarray(vc_sh.reshape(n_shards, per, -1)),
+                jnp.asarray(valid_sh),
+                n_canon=max(pc, 1),
+                n_vertices=g.n,
+            )
+            counts = np.asarray(counts[:pc])
+            if app.wants_domains:
+                supports = aggregation.min_image_support(
+                    bitmaps[:pc], table.canon_n_verts, table.canon_orbits
+                )
+            else:
+                supports = counts.copy()
+            agg_out = aggregation.StepAggregates(
+                canon_codes=table.canon_codes,
+                counts=counts.astype(np.int64),
+                supports=np.asarray(supports).astype(np.int64),
+                n_quick=len(uniq),
+                n_canonical=pc,
+                n_iso_checks=table.n_iso_checks,
+            )
+            result.aggregates.append(agg_out)
+            st.n_quick_patterns = agg_out.n_quick
+            st.n_canonical_patterns = agg_out.n_canonical
+            st.n_iso_checks = b if config.naive_aggregation else agg_out.n_iso_checks
+            st.collective_bytes += counts.nbytes + (
+                int(np.asarray(bitmaps[:pc]).size) // 8 if app.wants_domains else 0
+            )
+        st.t_aggregate = timer.lap()
+
+        # ---- alpha + outputs --------------------------------------------
+        if agg_out is not None:
+            alpha = app.aggregation_filter(canon_slot, agg_out)
+            for pcs in (np.unique(canon_slot[alpha]) if alpha.any() else []):
+                code = tuple(int(x) for x in agg_out.canon_codes[pcs])
+                value = int(
+                    agg_out.supports[pcs] if app.wants_domains else agg_out.counts[pcs]
+                )
+                result.patterns[code] = result.patterns.get(code, 0) + value
+            if not alpha.all():
+                frontier = frontier[alpha]
+                b = len(frontier)
+        if app.collect_embeddings and b:
+            result.embeddings[size] = frontier.copy()
+
+        if app.termination_filter(size) or b == 0 or step_i == config.max_steps:
+            result.stats.steps.append(st)
+            break
+
+        # ---- coordination-free sharded expansion -------------------------
+        shards, counts_sh = partition_frontier(frontier, n_shards)
+        per = shards.shape[1]
+        n_valid = (np.arange(per)[None, :] < counts_sh[:, None]) * size
+        while True:
+            children, ccount, ngen, ncanon = expand(
+                g,
+                jnp.asarray(shards),
+                jnp.asarray(n_valid.astype(np.int32)),
+                out_cap=cap,
+            )
+            ccount = np.asarray(ccount)
+            if int(ccount.max()) <= cap:
+                break
+            cap = _next_pow2(int(ccount.max()))
+        st.n_generated = int(np.asarray(ngen).sum())
+        st.n_canonical = int(np.asarray(ncanon).sum())
+
+        children = np.asarray(children)
+        parts = [children[s, : ccount[s]] for s in range(n_shards)]
+        frontier = (
+            np.concatenate(parts, axis=0)
+            if any(len(p) for p in parts)
+            else np.zeros((0, size + 1), np.int32)
+        )
+        # frontier exchange accounting (broadcast-then-partition)
+        if config.use_odag_exchange and len(frontier):
+            from repro.core import odag as odag_lib
+
+            st.odag_bytes = odag_lib.build(frontier).n_bytes
+        st.n_children = len(frontier)
+        st.t_expand = timer.lap()
+        result.stats.steps.append(st)
+        size += 1
+
+    result.stats.wall_time = time.perf_counter() - t_start
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape mining step for the multi-pod dry-run
+# ---------------------------------------------------------------------------
+
+def mining_step_for_dryrun(mesh: Mesh, axes=("pod", "data")):
+    """A single fully fixed-shape distributed exploration step suitable for
+    AOT lowering on the production mesh: expand + canonicality + quick
+    patterns + domain-bitmap psum. Pattern dictionary capacity is static.
+    """
+
+    def step(g: DeviceGraph, members, n_valid, quick_dict):
+        """members: (B, k) sharded over `axes`; quick_dict: (Q, 3) replicated."""
+
+        def worker(g, quick_dict, members, n_valid):
+            m, nv = members[0], n_valid[0]
+            exp = explore.expand_vertex(g, m, nv)
+            out_cap = m.shape[0]  # fixed children capacity = shard size
+            children, count = explore.compact(m, exp, exp.keep, out_cap)
+            child_nv = jnp.where(
+                jnp.arange(out_cap) < count, jnp.max(nv) + 1, 0
+            ).astype(jnp.int32)
+            qp = pattern_lib.quick_pattern_vertex(g, children, child_nv)
+            # static-capacity dictionary match (searchsorted on w0 then
+            # verify all three words)
+            q = quick_dict.shape[0]
+            eq = (qp.codes[:, None, :] == quick_dict[None, :, :]).all(-1)
+            slot = jnp.where(eq.any(1), jnp.argmax(eq, axis=1), q)
+            counts = jax.ops.segment_sum(
+                (child_nv > 0).astype(jnp.int32), slot, q + 1
+            )[:q]
+            counts = jax.lax.psum(counts, axes)
+            return children[None], count[None], counts[None]
+
+        spec = P(axes)
+        return jax.shard_map(
+            functools.partial(worker, g, quick_dict),
+            mesh=mesh,
+            in_specs=(spec, spec),
+            out_specs=(spec, spec, spec),
+        )(members, n_valid)
+
+    return step

@@ -1,0 +1,175 @@
+"""The exploration driver — Algorithm 1, BFS level-synchronous.
+
+Each exploration step is one (chunked) jitted device program; the host loop
+only orchestrates capacities and the pattern dictionary, mirroring the
+paper's BSP supersteps. Frontier arrays are bucketed to power-of-two
+capacities so XLA recompiles only per bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, explore, pattern as pattern_lib
+from repro.core.api import MiningApp
+from repro.core.graph import DeviceGraph, Graph, to_device
+from repro.core.stats import RunStats, StepStats, Timer
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    chunk_size: int = 4096        # frontier rows per expansion program
+    initial_capacity: int = 4096  # starting output-capacity bucket
+    max_steps: int = 16           # hard cap on exploration depth
+
+
+@dataclasses.dataclass
+class MiningResult:
+    patterns: Dict[tuple, int]                    # canon code -> count/support
+    aggregates: List[aggregation.StepAggregates]
+    stats: RunStats
+    embeddings: Dict[int, np.ndarray]             # size -> (B, size) arrays
+
+    def pattern_count(self, code) -> int:
+        return self.patterns.get(tuple(int(x) for x in code), 0)
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (int(x) - 1).bit_length())
+
+
+def _make_expand_fn(app: MiningApp, mode: str):
+    """Per-run jitted chunk program: expand + canonicality + app filter +
+    compaction. Recompiled per (width, capacity) bucket."""
+
+    @functools.partial(jax.jit, static_argnames=("out_cap",))
+    def fn(g: DeviceGraph, members, n_valid, out_cap: int):
+        if mode == "vertex":
+            exp = explore.expand_vertex(g, members, n_valid)
+        else:
+            exp = explore.expand_edge(g, members, n_valid)
+        keep = exp.keep & app.filter(g, members, n_valid, exp.rows, exp.cand)
+        children, count = explore.compact(members, exp, keep, out_cap)
+        return children, count, exp.n_generated, exp.n_canonical
+
+    return fn
+
+
+def _initial_frontier(g: DeviceGraph, mode: str) -> jnp.ndarray:
+    n0 = g.n if mode == "vertex" else g.m
+    return jnp.arange(n0, dtype=jnp.int32)[:, None]
+
+
+def _quick_patterns(g: DeviceGraph, mode: str, members, n_valid):
+    if mode == "vertex":
+        return pattern_lib.quick_pattern_vertex(g, members, n_valid)
+    return pattern_lib.quick_pattern_edge(g, members, n_valid)
+
+
+def run(
+    graph: Graph | DeviceGraph,
+    app: MiningApp,
+    config: Optional[EngineConfig] = None,
+) -> MiningResult:
+    config = config or EngineConfig()
+    g = to_device(graph) if isinstance(graph, Graph) else graph
+    mode = app.mode
+    expand_fn = _make_expand_fn(app, mode)
+
+    result = MiningResult(patterns={}, aggregates=[], stats=RunStats(), embeddings={})
+    t_start = time.perf_counter()
+
+    frontier = _initial_frontier(g, mode)  # (B, size) int32, all rows valid
+    size = 1
+
+    for step in range(1, config.max_steps + 1):
+        b = int(frontier.shape[0])
+        if b == 0:
+            break
+        st = StepStats(step=step, size=size, n_frontier=b)
+        st.frontier_bytes = int(frontier.size) * 4
+        timer = Timer()
+
+        # ---- pattern aggregation of this step's embeddings (end of the
+        # step that generated them, per Algorithm 1) ----------------------
+        canon_slot = None
+        agg = None
+        if app.wants_patterns:
+            n_valid = jnp.full((b,), size, dtype=jnp.int32)
+            qp = _quick_patterns(g, mode, frontier, n_valid)
+            agg, canon_slot, _ = aggregation.aggregate_step(
+                g.n, qp, jnp.ones((b,), dtype=bool), app.wants_domains
+            )
+            result.aggregates.append(agg)
+            st.n_quick_patterns = agg.n_quick
+            st.n_canonical_patterns = agg.n_canonical
+            st.n_iso_checks = agg.n_iso_checks
+        st.t_aggregate = timer.lap()
+
+        # ---- alpha: aggregation filter on the frontier -------------------
+        if app.wants_patterns and agg is not None:
+            alpha = app.aggregation_filter(canon_slot, agg)
+            # beta / outputs: record aggregates of surviving patterns
+            surviving = np.unique(canon_slot[alpha]) if alpha.any() else []
+            for pc in surviving:
+                code = tuple(int(x) for x in agg.canon_codes[pc])
+                value = int(
+                    agg.supports[pc] if app.wants_domains else agg.counts[pc]
+                )
+                result.patterns[code] = result.patterns.get(code, 0) + value
+
+            if not alpha.all():
+                frontier = frontier[np.asarray(alpha)]
+                b = int(frontier.shape[0])
+        if app.collect_embeddings and b:
+            result.embeddings[size] = np.asarray(frontier)
+
+        # ---- termination ---------------------------------------------------
+        if app.termination_filter(size) or b == 0 or step == config.max_steps:
+            result.stats.steps.append(st)
+            break
+
+        # ---- expansion (chunked, capacity-bucketed) ----------------------
+        children_parts = []
+        cap = max(config.initial_capacity, 1)
+        for lo in range(0, b, config.chunk_size):
+            chunk = frontier[lo : lo + config.chunk_size]
+            cb = int(chunk.shape[0])
+            bucket = min(config.chunk_size, _next_pow2(max(cb, 1)))
+            pad = bucket - cb
+            if pad:
+                chunk = jnp.concatenate(
+                    [chunk, jnp.full((pad, size), -1, jnp.int32)], axis=0
+                )
+            n_valid = jnp.concatenate(
+                [jnp.full((cb,), size, jnp.int32), jnp.zeros((pad,), jnp.int32)]
+            )
+
+            while True:
+                children, count, ngen, ncanon = expand_fn(g, chunk, n_valid, out_cap=cap)
+                count = int(count)
+                if count <= cap:
+                    break
+                cap = _next_pow2(count)
+            st.n_generated += int(ngen)
+            st.n_canonical += int(ncanon)
+            if count:
+                children_parts.append(children[:count])
+
+        st.t_expand = timer.lap()
+        st.n_children = sum(int(c.shape[0]) for c in children_parts)
+        result.stats.steps.append(st)
+
+        if not children_parts:
+            break
+        frontier = jnp.concatenate(children_parts, axis=0)
+        size += 1
+
+    result.stats.wall_time = time.perf_counter() - t_start
+    return result

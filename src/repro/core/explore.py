@@ -1,0 +1,177 @@
+"""Vectorised embedding expansion — the inner loop of Algorithm 1.
+
+One exploration step takes a frontier of canonical embeddings (each a row of
+vertex ids or edge ids in visit order) and produces every canonical child
+obtained by adding one incident vertex/edge, already deduplicated (within the
+parent) and filtered by the embedding-canonicality check.
+
+TPU adaptation (see DESIGN.md §2): instead of per-embedding adjacency-list
+walks, we materialise a dense padded candidate tensor ``(C, k, D)`` /
+``(C, 2k, D)`` from the padded neighbour table and evaluate *all* pruning
+rules as fused mask expressions. The engine chunks the frontier so this
+tensor stays bounded.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import canonical
+from repro.core.graph import DeviceGraph
+
+
+class Expansion(NamedTuple):
+    """Flattened candidate set for one frontier chunk (before compaction)."""
+
+    rows: jnp.ndarray        # (Ncand,) int32 parent row in the chunk
+    cand: jnp.ndarray        # (Ncand,) int32 extension vertex / edge id
+    keep: jnp.ndarray        # (Ncand,) bool — canonical, deduped, valid
+    n_generated: jnp.ndarray  # () int32 raw candidate slots that were valid
+    n_canonical: jnp.ndarray  # () int32 survivors of the canonicality check
+
+
+def expand_vertex(
+    g: DeviceGraph,
+    members: jnp.ndarray,   # (C, k) int32, pad -1
+    n_valid: jnp.ndarray,   # (C,) int32
+) -> Expansion:
+    """Candidates for vertex-induced exploration.
+
+    A candidate slot (c, i, j) is neighbour j of member i of embedding c.
+    Kept iff: slot valid; vertex not already a member; this is the *first*
+    occurrence (no earlier member is adjacent to it — neighbour lists are
+    sorted-unique so within one member's list it appears once); and the
+    extended embedding passes the incremental canonicality check.
+    """
+    c, k = members.shape
+    d = g.max_degree
+    safe = jnp.maximum(members, 0)
+    pos = jnp.arange(k)[None, :]
+    member_ok = pos < n_valid[:, None]                      # (C, k)
+
+    cand = jnp.where(member_ok[:, :, None], g.nbr[safe], -1)  # (C, k, D)
+    slot_ok = cand >= 0
+
+    # not already a member of the embedding
+    is_member = (cand[:, :, :, None] == members[:, None, None, :]).any(-1)
+
+    # first-occurrence dedup: drop if an *earlier* member is adjacent to cand.
+    adj_em = g.is_edge(members[:, :, None, None], cand[:, None, :, :])
+    adj_em = adj_em & member_ok[:, :, None, None]           # (C, k_m, k_i, D)
+    earlier = (
+        jnp.arange(k)[None, :, None, None] < jnp.arange(k)[None, None, :, None]
+    )
+    seen_earlier = (adj_em & earlier).any(axis=1)           # (C, k_i, D)
+
+    valid = slot_ok & ~is_member & ~seen_earlier
+
+    flat_cand = cand.reshape(c * k * d)
+    flat_rows = jnp.repeat(jnp.arange(c, dtype=jnp.int32), k * d)
+    flat_valid = valid.reshape(c * k * d)
+
+    canon = canonical.vertex_check(g, members[flat_rows], n_valid[flat_rows], flat_cand)
+    keep = flat_valid & canon
+    return Expansion(
+        rows=flat_rows,
+        cand=flat_cand,
+        keep=keep,
+        n_generated=flat_valid.sum().astype(jnp.int32),
+        n_canonical=keep.sum().astype(jnp.int32),
+    )
+
+
+def expand_edge(
+    g: DeviceGraph,
+    members: jnp.ndarray,   # (C, k) int32 edge ids, pad -1
+    n_valid: jnp.ndarray,   # (C,) int32
+) -> Expansion:
+    """Candidates for edge-induced exploration.
+
+    Endpoint slots: member i contributes endpoints (2i, 2i+1). A candidate
+    edge is drawn from the incident-edge list of an endpoint vertex; it is
+    kept only at its first producing slot: dropped if an earlier endpoint
+    slot holds the same vertex (whole incident list already enumerated) or
+    the candidate's other endpoint (edge enumerated from the other side).
+    """
+    c, k = members.shape
+    d = g.max_degree
+    k2 = 2 * k
+    safe = jnp.maximum(members, 0)
+    pos = jnp.arange(k)[None, :]
+    member_ok = pos < n_valid[:, None]                       # (C, k)
+
+    verts = g.edge_uv[safe].reshape(c, k2)                   # (C, 2k)
+    vert_ok = jnp.repeat(member_ok, 2, axis=1)               # (C, 2k)
+    verts = jnp.where(vert_ok, verts, -1)
+
+    safe_v = jnp.maximum(verts, 0)
+    cand = jnp.where(vert_ok[:, :, None], g.nbr_eid[safe_v], -1)   # (C, 2k, D)
+    other = jnp.where(vert_ok[:, :, None], g.nbr[safe_v], -1)      # (C, 2k, D)
+    slot_ok = cand >= 0
+
+    is_member = (cand[:, :, :, None] == members[:, None, None, :]).any(-1)
+
+    slot_idx = jnp.arange(k2)
+    earlier = slot_idx[None, :, None, None] < slot_idx[None, None, :, None]
+    same_vertex = verts[:, :, None, None] == verts[:, None, :, None]
+    hits_other = verts[:, :, None, None] == other[:, None, :, :]
+    dup = (same_vertex & earlier).any(axis=1) | (hits_other & earlier).any(axis=1)
+
+    valid = slot_ok & ~is_member & ~dup
+
+    flat_cand = cand.reshape(c * k2 * d)
+    flat_rows = jnp.repeat(jnp.arange(c, dtype=jnp.int32), k2 * d)
+    flat_valid = valid.reshape(c * k2 * d)
+
+    canon = canonical.edge_check(g, members[flat_rows], n_valid[flat_rows], flat_cand)
+    keep = flat_valid & canon
+    return Expansion(
+        rows=flat_rows,
+        cand=flat_cand,
+        keep=keep,
+        n_generated=flat_valid.sum().astype(jnp.int32),
+        n_canonical=keep.sum().astype(jnp.int32),
+    )
+
+
+def compact(
+    members: jnp.ndarray,   # (C, k) parents of the chunk
+    exp: Expansion,
+    keep: jnp.ndarray,      # (Ncand,) final keep mask (after app filter)
+    out_cap: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather kept candidates into a dense (out_cap, k+1) child frontier.
+
+    Returns (children, count). ``count`` may exceed ``out_cap``: the caller
+    must then retry with a larger capacity (bucketed recompilation).
+    """
+    c, k = members.shape
+    count = keep.sum().astype(jnp.int32)
+    (idx,) = jnp.nonzero(keep, size=out_cap, fill_value=0)
+    rows = exp.rows[idx]
+    cand = exp.cand[idx]
+    children = jnp.concatenate([members[rows], cand[:, None]], axis=1)
+    slot_valid = jnp.arange(out_cap) < count
+    children = jnp.where(slot_valid[:, None], children, -1)
+    return children, count
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "out_cap"))
+def expand_and_compact(
+    g: DeviceGraph,
+    members: jnp.ndarray,
+    n_valid: jnp.ndarray,
+    mode: str,
+    out_cap: int,
+):
+    """Fused expand + canonicality + compaction (no app filter) — used by
+    benchmarks and the distributed runtime where the app filter is fused in
+    separately."""
+    exp = expand_vertex(g, members, n_valid) if mode == "vertex" else expand_edge(
+        g, members, n_valid
+    )
+    children, count = compact(members, exp, exp.keep, out_cap)
+    return children, count, exp.n_generated, exp.n_canonical

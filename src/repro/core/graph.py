@@ -1,0 +1,250 @@
+"""Labeled immutable input graphs for mining.
+
+Two views:
+  * :class:`Graph` — host-side (numpy) construction / generators / IO.
+  * :class:`DeviceGraph` — a pytree of device arrays in the layout the
+    vectorised exploration kernels want: padded neighbour table, packed
+    adjacency bitset, edge endpoint table, per-vertex incident-edge table.
+
+The paper's datasets (CiteSeer, MiCo, Patents, ...) are not redistributable in
+this offline container, so ``generators`` provides statistically similar
+synthetic stand-ins (same |V|, |E|, label counts scaled to the container).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitset
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Undirected labeled graph (host side).
+
+    Attributes:
+      n: number of vertices (ids ``0..n-1``).
+      labels: ``(n,)`` int32 vertex labels (``0`` allowed; arbitrary ints).
+      edges: ``(m, 2)`` int32, each row ``(u, v)`` with ``u < v``, unique,
+        no self loops. Edge ids are row indices.
+      edge_labels: optional ``(m,)`` int32.
+    """
+
+    n: int
+    labels: np.ndarray
+    edges: np.ndarray
+    edge_labels: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        edges = np.asarray(self.edges, dtype=np.int32).reshape(-1, 2)
+        edges = np.sort(edges, axis=1)
+        if len(edges):
+            if (edges[:, 0] == edges[:, 1]).any():
+                raise ValueError("self loops are not supported")
+            edges = np.unique(edges, axis=0)
+        object.__setattr__(self, "edges", edges)
+        object.__setattr__(
+            self, "labels", np.asarray(self.labels, dtype=np.int32).reshape(self.n)
+        )
+        if self.edge_labels is not None:
+            object.__setattr__(
+                self,
+                "edge_labels",
+                np.asarray(self.edge_labels, dtype=np.int32).reshape(len(edges)),
+            )
+
+    # -- derived host-side structures ------------------------------------
+    @property
+    def m(self) -> int:
+        return len(self.edges)
+
+    def degrees(self) -> np.ndarray:
+        deg = np.zeros(self.n, dtype=np.int32)
+        np.add.at(deg, self.edges[:, 0], 1)
+        np.add.at(deg, self.edges[:, 1], 1)
+        return deg
+
+    def csr(self):
+        """Sorted CSR adjacency: (indptr (n+1,), indices (2m,), eids (2m,))."""
+        u = np.concatenate([self.edges[:, 0], self.edges[:, 1]])
+        v = np.concatenate([self.edges[:, 1], self.edges[:, 0]])
+        e = np.concatenate([np.arange(self.m), np.arange(self.m)]).astype(np.int32)
+        order = np.lexsort((v, u))
+        u, v, e = u[order], v[order], e[order]
+        indptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.add.at(indptr, u + 1, 1)
+        indptr = np.cumsum(indptr)
+        return indptr, v.astype(np.int32), e
+
+    def neighbor_table(self):
+        """Padded (n, D) neighbour table + matching edge-id table, pad = -1."""
+        indptr, indices, eids = self.csr()
+        deg = (indptr[1:] - indptr[:-1]).astype(np.int32)
+        d = max(1, int(deg.max()) if self.n else 1)
+        nbr = np.full((self.n, d), -1, dtype=np.int32)
+        ned = np.full((self.n, d), -1, dtype=np.int32)
+        for vtx in range(self.n):
+            s, t = indptr[vtx], indptr[vtx + 1]
+            nbr[vtx, : t - s] = indices[s:t]
+            ned[vtx, : t - s] = eids[s:t]
+        return nbr, ned, deg
+
+    def adjacency_bits(self) -> np.ndarray:
+        dense = np.zeros((self.n, self.n), dtype=bool)
+        if self.m:
+            dense[self.edges[:, 0], self.edges[:, 1]] = True
+            dense[self.edges[:, 1], self.edges[:, 0]] = True
+        return bitset.pack_bool_matrix(dense)
+
+    def to_networkx(self):
+        import networkx as nx
+
+        g = nx.Graph()
+        for i in range(self.n):
+            g.add_node(i, label=int(self.labels[i]))
+        for eid, (u, v) in enumerate(self.edges):
+            lbl = int(self.edge_labels[eid]) if self.edge_labels is not None else 0
+            g.add_edge(int(u), int(v), label=lbl)
+        return g
+
+
+class DeviceGraph(NamedTuple):
+    """Device-side graph pytree used by the exploration kernels."""
+
+    labels: jnp.ndarray       # (n,) int32
+    nbr: jnp.ndarray          # (n, D) int32 neighbour ids, pad -1
+    nbr_eid: jnp.ndarray      # (n, D) int32 incident edge ids, pad -1
+    deg: jnp.ndarray          # (n,) int32
+    adj_bits: jnp.ndarray     # (n, W) uint32 packed adjacency
+    edge_uv: jnp.ndarray      # (m, 2) int32 endpoints, u < v
+    edge_labels: jnp.ndarray  # (m,) int32 (zeros when unlabeled)
+
+    @property
+    def n(self) -> int:
+        return self.labels.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.edge_uv.shape[0]
+
+    @property
+    def max_degree(self) -> int:
+        return self.nbr.shape[1]
+
+    def is_edge(self, u, v):
+        """Vectorised O(1) edge query; False for negative ids."""
+        return bitset.test_bit(self.adj_bits, u, v)
+
+
+def to_device(g: Graph) -> DeviceGraph:
+    nbr, ned, deg = g.neighbor_table()
+    edge_labels = (
+        g.edge_labels
+        if g.edge_labels is not None
+        else np.zeros(g.m, dtype=np.int32)
+    )
+    return DeviceGraph(
+        labels=jnp.asarray(g.labels),
+        nbr=jnp.asarray(nbr),
+        nbr_eid=jnp.asarray(ned),
+        deg=jnp.asarray(deg),
+        adj_bits=jnp.asarray(g.adjacency_bits()),
+        edge_uv=jnp.asarray(g.edges.astype(np.int32)),
+        edge_labels=jnp.asarray(edge_labels),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Generators (synthetic stand-ins for the paper's datasets)
+# ---------------------------------------------------------------------------
+
+def random_labeled(
+    n: int,
+    m: int,
+    n_labels: int,
+    seed: int = 0,
+    power_law: bool = True,
+) -> Graph:
+    """Random labeled graph with roughly scale-free degrees (paper's graphs
+    are scale-free social/citation networks)."""
+    rng = np.random.default_rng(seed)
+    if power_law:
+        w = 1.0 / np.arange(1, n + 1) ** 0.75
+        w /= w.sum()
+    else:
+        w = np.full(n, 1.0 / n)
+    us = rng.choice(n, size=int(m * 1.6), p=w)
+    vs = rng.choice(n, size=int(m * 1.6), p=w)
+    keep = us != vs
+    e = np.stack([us[keep], vs[keep]], axis=1)
+    e = np.sort(e, axis=1)
+    e = np.unique(e, axis=0)
+    if len(e) > m:
+        idx = rng.choice(len(e), size=m, replace=False)
+        e = e[np.sort(idx)]
+    labels = rng.integers(0, n_labels, size=n).astype(np.int32)
+    return Graph(n=n, labels=labels, edges=e.astype(np.int32))
+
+
+def citeseer_like(scale: float = 1.0, seed: int = 7) -> Graph:
+    """CiteSeer-shaped: 3,312 vertices / 4,732 edges / 6 labels (Table 1)."""
+    n = max(8, int(3312 * scale))
+    m = max(8, int(4732 * scale))
+    return random_labeled(n, m, n_labels=6, seed=seed)
+
+
+def mico_like(scale: float = 0.02, seed: int = 11) -> Graph:
+    """MiCo-shaped: 100k vertices / 1.08M edges / 29 labels (Table 1),
+    scaled down by default for the container."""
+    n = max(16, int(100_000 * scale))
+    m = max(16, int(1_080_298 * scale))
+    return random_labeled(n, m, n_labels=29, seed=seed)
+
+
+def patents_like(scale: float = 0.001, seed: int = 13) -> Graph:
+    """Patents-shaped: 2.74M vertices / 13.97M edges / 37 labels (Table 1)."""
+    n = max(16, int(2_745_761 * scale))
+    m = max(16, int(13_965_409 * scale))
+    return random_labeled(n, m, n_labels=37, seed=seed)
+
+
+def unlabeled_sn_like(scale: float = 0.0005, seed: int = 17) -> Graph:
+    """SN-shaped: dense unlabeled social graph (avg degree 79, Table 1)."""
+    n = max(16, int(5_022_893 * scale))
+    m = max(32, int(n * 39.5))
+    g = random_labeled(n, m, n_labels=1, seed=seed, power_law=True)
+    return Graph(n=g.n, labels=np.zeros(g.n, dtype=np.int32), edges=g.edges)
+
+
+# -- tiny deterministic graphs used throughout the tests --------------------
+
+def paper_figure2() -> Graph:
+    """The 4-vertex graph of Figure 2: labels blue/yellow alternating on a
+    path 1-2-3-4 (we use ids 0..3; blue=0, yellow=1)."""
+    return Graph(
+        n=4,
+        labels=np.array([0, 1, 0, 1], dtype=np.int32),
+        edges=np.array([[0, 1], [1, 2], [2, 3]], dtype=np.int32),
+    )
+
+
+def triangle_plus_tail() -> Graph:
+    """Triangle 0-1-2 plus tail 2-3 (Figure 5's example shape)."""
+    return Graph(
+        n=5,
+        labels=np.zeros(5, dtype=np.int32),
+        edges=np.array([[0, 1], [0, 2], [1, 2], [2, 3], [3, 4]], dtype=np.int32),
+    )
+
+
+def complete(k: int, n_labels: int = 1, seed: int = 0) -> Graph:
+    rng = np.random.default_rng(seed)
+    e = np.array([(i, j) for i in range(k) for j in range(i + 1, k)], np.int32)
+    return Graph(
+        n=k,
+        labels=rng.integers(0, n_labels, size=k).astype(np.int32),
+        edges=e,
+    )

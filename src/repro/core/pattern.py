@@ -1,0 +1,277 @@
+"""Quick patterns and canonical patterns (paper §5.4, two-level aggregation).
+
+Level 1 (device, per embedding, linear time): a *quick pattern* is the
+order-dependent encoding of an embedding's structure — local vertex labels in
+visit order plus the adjacency bits among local positions. Automorphic *and*
+isomorphic embeddings may map to different quick patterns, but the number of
+distinct quick patterns is orders of magnitude smaller than the number of
+embeddings (paper Table 4).
+
+Level 2 (host, once per distinct quick pattern): canonicalisation — the
+minimum encoding over all vertex-position permutations. This replaces the
+paper's use of the ``bliss`` canonical-labeling library; pattern orders are
+small (k ≤ 8) so brute-force minimisation over k! permutations is exact and
+cheap *because* it only runs on quick patterns, never on embeddings — the
+paper's entire argument for the two-level scheme.
+
+Encoding (3 × int64 per pattern):
+  w0 = n_vertices | adj_bits << 4     (pair (a<b) -> bit b*(b-1)/2 + a)
+  w1 = labels[0..3], 8 bits each      (labels must be < 256)
+  w2 = labels[4..7], 8 bits each
+"""
+from __future__ import annotations
+
+import itertools
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import DeviceGraph
+
+MAX_PATTERN_VERTICES = 8
+
+
+def _pair_bit(a, b):
+    """Bit index for unordered position pair (a < b)."""
+    return (b * (b - 1)) // 2 + a
+
+
+class QuickPatterns(NamedTuple):
+    codes: jnp.ndarray        # (B, 3) int64 quick-pattern code per embedding
+    local_verts: jnp.ndarray  # (B, 8) int32 graph vertex at local position, pad -1
+    n_verts: jnp.ndarray      # (B,) int32
+
+
+def quick_pattern_vertex(
+    g: DeviceGraph, members: jnp.ndarray, n_valid: jnp.ndarray
+) -> QuickPatterns:
+    """Quick patterns of vertex-induced embeddings: local positions are the
+    members in visit order; adjacency = all graph edges among members."""
+    b, k = members.shape
+    pos = jnp.arange(k)
+    valid = pos[None, :] < n_valid[:, None]
+    mem = jnp.where(valid, members, -1)
+
+    adj = g.is_edge(mem[:, :, None], mem[:, None, :])            # (B, k, k)
+    bits = jnp.zeros((b,), dtype=jnp.int64)
+    for a in range(k):
+        for c in range(a + 1, k):
+            bits = bits | (adj[:, a, c].astype(jnp.int64) << _pair_bit(a, c))
+
+    labels = jnp.where(valid, g.labels[jnp.maximum(mem, 0)], 0)  # (B, k)
+    w1 = jnp.zeros((b,), dtype=jnp.int64)
+    w2 = jnp.zeros((b,), dtype=jnp.int64)
+    for i in range(min(k, 4)):
+        w1 = w1 | (labels[:, i].astype(jnp.int64) << (8 * i))
+    for i in range(4, min(k, 8)):
+        w2 = w2 | (labels[:, i].astype(jnp.int64) << (8 * (i - 4)))
+
+    w0 = n_valid.astype(jnp.int64) | (bits << 4)
+    codes = jnp.stack([w0, w1, w2], axis=1)
+    lv = jnp.full((b, MAX_PATTERN_VERTICES), -1, dtype=jnp.int32)
+    lv = lv.at[:, :k].set(jnp.where(valid, mem, -1))
+    return QuickPatterns(codes=codes, local_verts=lv, n_verts=n_valid)
+
+
+def quick_pattern_edge(
+    g: DeviceGraph, members: jnp.ndarray, n_valid: jnp.ndarray
+) -> QuickPatterns:
+    """Quick patterns of edge-induced embeddings.
+
+    Local vertices = endpoint sequence deduplicated in first-appearance
+    order; adjacency bits cover *member edges only* (edge-induced semantics:
+    non-member graph edges between the same vertices are excluded).
+    """
+    b, k = members.shape
+    k2 = 2 * k
+    pos = jnp.arange(k)
+    valid_e = pos[None, :] < n_valid[:, None]                    # (B, k)
+    safe = jnp.maximum(members, 0)
+    verts = g.edge_uv[safe].reshape(b, k2)                       # (B, 2k)
+    vert_ok = jnp.repeat(valid_e, 2, axis=1)
+    verts = jnp.where(vert_ok, verts, -1)
+
+    # first-appearance local ids
+    t = jnp.arange(k2)
+    same = (verts[:, :, None] == verts[:, None, :]) & vert_ok[:, :, None] & vert_ok[:, None, :]
+    first_idx = jnp.argmax(same, axis=1)                         # (B, 2k): min t' with equal vertex
+    is_first = (first_idx == t[None, :]) & vert_ok
+    rank = jnp.cumsum(is_first, axis=1) - 1                      # local id at first slots
+    local_id = jnp.take_along_axis(rank, first_idx, axis=1)      # (B, 2k)
+    local_id = jnp.where(vert_ok, local_id, -1)
+    n_verts = is_first.sum(axis=1).astype(jnp.int32)
+
+    # local vertex table: scatter first-appearance vertices to their rank
+    lv = jnp.full((b, MAX_PATTERN_VERTICES), -1, dtype=jnp.int32)
+    scatter_pos = jnp.where(is_first, rank, MAX_PATTERN_VERTICES)  # dump slot 8
+    lv_ext = jnp.full((b, MAX_PATTERN_VERTICES + 1), -1, dtype=jnp.int32)
+    lv = lv_ext.at[jnp.arange(b)[:, None], scatter_pos].set(
+        jnp.where(is_first, verts, -1)
+    )[:, :MAX_PATTERN_VERTICES]
+
+    # adjacency bits from member edges
+    a_id = local_id[:, 0::2]                                     # (B, k)
+    b_id = local_id[:, 1::2]
+    lo = jnp.minimum(a_id, b_id)
+    hi = jnp.maximum(a_id, b_id)
+    bit = jnp.where(valid_e, (hi * (hi - 1)) // 2 + lo, 0)
+    bits = jnp.zeros((b,), dtype=jnp.int64)
+    for j in range(k):
+        contrib = jnp.where(valid_e[:, j], jnp.int64(1) << bit[:, j].astype(jnp.int64), 0)
+        bits = bits | contrib
+
+    labels = jnp.where(lv >= 0, g.labels[jnp.maximum(lv, 0)], 0)  # (B, 8)
+    w1 = jnp.zeros((b,), dtype=jnp.int64)
+    w2 = jnp.zeros((b,), dtype=jnp.int64)
+    for i in range(4):
+        w1 = w1 | (labels[:, i].astype(jnp.int64) << (8 * i))
+        w2 = w2 | (labels[:, i + 4].astype(jnp.int64) << (8 * i))
+    w0 = n_verts.astype(jnp.int64) | (bits << 4)
+    return QuickPatterns(
+        codes=jnp.stack([w0, w1, w2], axis=1), local_verts=lv, n_verts=n_verts
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side decode / canonicalisation (level 2)
+# ---------------------------------------------------------------------------
+
+def decode(code) -> tuple[int, np.ndarray, np.ndarray]:
+    """(n_vertices, dense adjacency (nv, nv) bool, labels (nv,))."""
+    w0, w1, w2 = (int(x) for x in code)
+    nv = w0 & 0xF
+    bits = w0 >> 4
+    adj = np.zeros((nv, nv), dtype=bool)
+    for bb in range(1, nv):
+        for aa in range(bb):
+            if (bits >> _pair_bit(aa, bb)) & 1:
+                adj[aa, bb] = adj[bb, aa] = True
+    labels = np.array([(w1 >> (8 * i)) & 0xFF for i in range(4)]
+                      + [(w2 >> (8 * i)) & 0xFF for i in range(4)])[:nv]
+    return nv, adj, labels.astype(np.int32)
+
+
+def encode(nv: int, adj: np.ndarray, labels: np.ndarray) -> tuple[int, int, int]:
+    bits = 0
+    for bb in range(1, nv):
+        for aa in range(bb):
+            if adj[aa, bb]:
+                bits |= 1 << _pair_bit(aa, bb)
+    w0 = nv | (bits << 4)
+    w1 = w2 = 0
+    for i in range(min(nv, 4)):
+        w1 |= int(labels[i]) << (8 * i)
+    for i in range(4, min(nv, 8)):
+        w2 |= int(labels[i]) << (8 * (i - 4))
+    return w0, w1, w2
+
+
+_PERMS_CACHE: dict[int, np.ndarray] = {}
+
+
+def _perms(nv: int) -> np.ndarray:
+    if nv not in _PERMS_CACHE:
+        _PERMS_CACHE[nv] = np.array(list(itertools.permutations(range(nv))), np.int32)
+    return _PERMS_CACHE[nv]
+
+
+def canonicalize_one(code) -> tuple[tuple[int, int, int], np.ndarray]:
+    """Canonical code of one quick pattern + the permutation sigma with
+    sigma[local_pos] = canonical_pos achieving it (graph-isomorphism
+    canonical form; exact, replaces bliss)."""
+    nv, adj, labels = decode(code)
+    if nv <= 1:
+        return encode(nv, adj, labels), np.arange(MAX_PATTERN_VERTICES, dtype=np.int32)
+    perms = _perms(nv)                        # (p!, nv): perm[i] = new position? see below
+    best_key, best_sigma = None, None
+    for perm in perms:
+        # perm maps canonical position -> local position (a relabeling order)
+        padj = adj[np.ix_(perm, perm)]
+        plab = labels[perm]
+        key = encode(nv, padj, plab)
+        if best_key is None or key < best_key:
+            best_key = key
+            sigma = np.empty(nv, dtype=np.int32)
+            sigma[perm] = np.arange(nv, dtype=np.int32)  # local -> canonical
+            best_sigma = sigma
+    full = np.arange(MAX_PATTERN_VERTICES, dtype=np.int32)
+    full[:nv] = best_sigma
+    return best_key, full
+
+
+def automorphism_orbits(code) -> np.ndarray:
+    """Orbit representative per vertex position of a (canonical) pattern.
+
+    Min-image domains are defined over mappings from *any* automorphism of
+    an embedding (paper §4.2); with a single fixed isomorphism per embedding
+    (our sigma), the full domain of position p is the union of the
+    single-isomorphism domains over p's orbit under Aut(pattern). Positions
+    sharing a representative must have their domains OR-ed.
+    """
+    nv, adj, labels = decode(np.asarray(code))
+    rep = np.arange(MAX_PATTERN_VERTICES, dtype=np.int32)
+    if nv <= 1:
+        return rep
+    base = encode(nv, adj, labels)
+    for perm in _perms(nv):
+        padj = adj[np.ix_(perm, perm)]
+        plab = labels[perm]
+        if encode(nv, padj, plab) == base:
+            # perm maps new position i -> old position perm[i]; i and
+            # perm[i] are in the same orbit.
+            for i in range(nv):
+                a, b = rep[i], rep[perm[i]]
+                if a != b:
+                    lo, hi = (a, b) if a < b else (b, a)
+                    rep[rep == hi] = lo
+    return rep
+
+
+class PatternTable(NamedTuple):
+    """Mapping of the step's unique quick patterns to canonical patterns."""
+
+    quick_codes: np.ndarray      # (Q, 3) int64 unique quick codes
+    canon_codes: np.ndarray      # (Pc, 3) int64 unique canonical codes
+    quick_to_canon: np.ndarray   # (Q,) int32 canonical slot per quick slot
+    sigma: np.ndarray            # (Q, 8) int32 local pos -> canonical pos
+    canon_n_verts: np.ndarray    # (Pc,) int32
+    canon_orbits: np.ndarray     # (Pc, 8) int32 orbit representative per pos
+    n_iso_checks: int            # == Q: graph-isomorphism invocations (Table 4)
+
+
+def build_pattern_table(unique_quick: np.ndarray) -> PatternTable:
+    q = len(unique_quick)
+    canon = np.zeros((q, 3), dtype=np.int64)
+    sigma = np.zeros((q, MAX_PATTERN_VERTICES), dtype=np.int32)
+    for i in range(q):
+        key, sg = canonicalize_one(unique_quick[i])
+        canon[i] = key
+        sigma[i] = sg
+    uniq_canon, inv = np.unique(canon.reshape(q, 3), axis=0, return_inverse=True)
+    orbits = np.stack(
+        [automorphism_orbits(c) for c in uniq_canon], axis=0
+    ) if len(uniq_canon) else np.zeros((0, MAX_PATTERN_VERTICES), np.int32)
+    return PatternTable(
+        quick_codes=unique_quick,
+        canon_codes=uniq_canon,
+        quick_to_canon=inv.astype(np.int32),
+        sigma=sigma,
+        canon_n_verts=(uniq_canon[:, 0] & 0xF).astype(np.int32),
+        canon_orbits=orbits,
+        n_iso_checks=q,
+    )
+
+
+def pattern_to_networkx(code):
+    import networkx as nx
+
+    nv, adj, labels = decode(np.asarray(code))
+    g = nx.Graph()
+    for i in range(nv):
+        g.add_node(i, label=int(labels[i]))
+    for i in range(nv):
+        for j in range(i + 1, nv):
+            if adj[i, j]:
+                g.add_edge(i, j)
+    return g

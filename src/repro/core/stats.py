@@ -1,0 +1,56 @@
+"""Per-step execution statistics (feeds paper Figs 9/12, Tables 3/4)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+
+@dataclasses.dataclass
+class StepStats:
+    step: int = 0
+    size: int = 0                    # embedding size at this step's frontier
+    n_frontier: int = 0              # embeddings expanded
+    n_generated: int = 0             # valid candidate slots
+    n_canonical: int = 0             # survivors of the canonicality check
+    n_children: int = 0              # survivors of the app filter
+    n_quick_patterns: int = 0
+    n_canonical_patterns: int = 0
+    n_iso_checks: int = 0
+    frontier_bytes: int = 0          # raw embedding-list bytes (Fig 9 baseline)
+    odag_bytes: int = 0              # ODAG-compressed bytes (Fig 9)
+    collective_bytes: int = 0        # bytes exchanged in the distributed step
+    t_expand: float = 0.0            # G+C phases of Fig 12
+    t_aggregate: float = 0.0         # P phase
+    t_storage: float = 0.0           # W+R phases (ODAG build/extract)
+
+
+@dataclasses.dataclass
+class RunStats:
+    steps: List[StepStats] = dataclasses.field(default_factory=list)
+    wall_time: float = 0.0
+
+    @property
+    def total_embeddings(self) -> int:
+        return sum(s.n_children for s in self.steps) + (
+            self.steps[0].n_frontier if self.steps else 0
+        )
+
+    def summary(self) -> Dict:
+        return {
+            "steps": len(self.steps),
+            "total_embeddings": self.total_embeddings,
+            "total_iso_checks": sum(s.n_iso_checks for s in self.steps),
+            "wall_time_s": round(self.wall_time, 4),
+        }
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.perf_counter()
+
+    def lap(self) -> float:
+        t = time.perf_counter()
+        dt = t - self.t0
+        self.t0 = t
+        return dt

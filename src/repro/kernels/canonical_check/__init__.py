@@ -1,0 +1,3 @@
+from repro.kernels.canonical_check.ops import canonical_check
+
+__all__ = ["canonical_check"]

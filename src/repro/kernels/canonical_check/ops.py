@@ -1,0 +1,30 @@
+"""Public wrapper with padding + graph-size dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import canonical
+from repro.core.graph import DeviceGraph
+from repro.kernels.canonical_check.canonical_check import canonical_check_pallas
+
+VMEM_BITMAP_LIMIT = 8 * 2**20  # bytes of adjacency bitmap we allow in VMEM
+
+
+def canonical_check(g: DeviceGraph, members, n_valid, cand, block_b=1024,
+                    interpret=True):
+    """Kernel path for VMEM-sized graphs, jnp fallback otherwise."""
+    if g.adj_bits.size * 4 > VMEM_BITMAP_LIMIT:
+        return canonical.vertex_check(g, members, n_valid, cand)
+    b = members.shape[0]
+    block = min(block_b, b) if b else 1
+    pad = (-b) % block
+    if pad:
+        members = jnp.concatenate(
+            [members, jnp.full((pad, members.shape[1]), -1, members.dtype)]
+        )
+        n_valid = jnp.concatenate([n_valid, jnp.zeros((pad,), n_valid.dtype)])
+        cand = jnp.concatenate([cand, jnp.full((pad,), -1, cand.dtype)])
+    out = canonical_check_pallas(
+        members, n_valid, cand, g.adj_bits, block_b=block, interpret=interpret
+    )
+    return out[:b]

@@ -1,0 +1,7 @@
+"""Oracle: the engine's pure-jnp Algorithm-2 check."""
+from repro.core import canonical
+from repro.core.graph import DeviceGraph
+
+
+def canonical_check_ref(g: DeviceGraph, members, n_valid, cand):
+    return canonical.vertex_check(g, members, n_valid, cand)

@@ -1,0 +1,19 @@
+"""Jit'd public wrapper: GQA layout handling around the Pallas kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+
+def flash_attention(q, k, v, causal=True, interpret=True, **block_kw):
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D) with H a multiple of KV.
+    Returns (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qs = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    ks = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, -1, d)
+    vs = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(b * h, -1, d)
+    o = flash_attention_bhsd(qs, ks, vs, causal=causal, interpret=interpret, **block_kw)
+    return o.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for flash attention."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal=True):
+    """q: (BH, Sq, D); k/v: (BH, Sk, D)."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * d**-0.5
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        scores = jnp.where(mask[None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)

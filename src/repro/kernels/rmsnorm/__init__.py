@@ -1,0 +1,3 @@
+from repro.kernels.rmsnorm.ops import rmsnorm
+
+__all__ = ["rmsnorm"]

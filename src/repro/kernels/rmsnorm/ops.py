@@ -1,0 +1,19 @@
+"""Public wrapper: arbitrary leading dims + row padding."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_pallas
+
+
+def rmsnorm(x, scale, eps=1e-5, interpret=True):
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    r = x2.shape[0]
+    block = min(256, r)
+    pad = (-r) % block
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, d), x2.dtype)])
+    out = rmsnorm_pallas(x2, scale, eps=eps, block_rows=block, interpret=interpret)
+    return out[:r].reshape(shape)

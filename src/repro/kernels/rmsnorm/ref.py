@@ -1,0 +1,2 @@
+"""Oracle: the model stack's rmsnorm."""
+from repro.models.layers import rmsnorm as rmsnorm_ref  # noqa: F401

@@ -1,0 +1,36 @@
+"""Fused RMSNorm Pallas kernel: one VMEM pass (read x, fp32 reduce, scale,
+write) instead of XLA's separate reduce + broadcast-multiply HBM trips."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)              # (TB, D)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = ((x * jax.lax.rsqrt(var + eps)) * scale_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm_pallas(x2d, scale, eps=1e-5, block_rows=256, interpret=True):
+    """x2d (R, D), scale (D,) -> (R, D)."""
+    r, d = x2d.shape
+    block_rows = min(block_rows, r)
+    assert r % block_rows == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(r // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x2d.dtype),
+        interpret=interpret,
+    )(x2d, scale)

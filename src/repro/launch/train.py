@@ -1,0 +1,76 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 200 --batch 8 --seq 256 [--reduced] [--ckpt-dir ckpt/]
+
+On the container this runs reduced configs on CPU; on a real cluster the
+same entrypoint runs the full config on the production mesh (mesh axes and
+shardings come from launch.mesh + models.layers.spec rules; multi-host
+initialisation would go through jax.distributed.initialize, keyed off the
+TPU_WORKER_* env, before building the mesh).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_arch
+from repro.models import build_model
+from repro.training.data import DataConfig, global_batch
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
+    shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch, kind="train")
+
+    def batches():
+        for s in range(args.steps):
+            b = global_batch(dc, s)
+            if cfg.family == "vlm" or cfg.family == "encdec":
+                extra = model.make_batch(shape, jax.random.PRNGKey(s))
+                for k in ("patch_embeds", "frames"):
+                    if k in extra:
+                        b[k] = extra[k]
+            yield b
+
+    loop = TrainLoop(
+        model,
+        AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                    total_steps=args.steps),
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+    )
+    _, _, hist = loop.run(params, batches())
+    for h in hist:
+        if h["step"] % args.log_every == 0 or h["step"] == hist[-1]["step"]:
+            flag = " STRAGGLER" if h["straggler"] else ""
+            print(f"step {h['step']:5d} loss {h['loss']:.4f} "
+                  f"({h['time_s']*1e3:.0f} ms){flag}", flush=True)
+    print(f"final loss {hist[-1]['loss']:.4f} over {len(hist)} steps")
+
+
+if __name__ == "__main__":
+    main()

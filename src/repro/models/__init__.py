@@ -1,0 +1,3 @@
+from repro.models.lm import build_model
+
+__all__ = ["build_model"]

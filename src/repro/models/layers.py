@@ -1,0 +1,543 @@
+"""Shared model layers: init helpers, sharding rules, norms, RoPE,
+attention (GQA + MLA), MLP, MoE. Pure-pytree params (no flax), explicit
+dtypes everywhere (bf16 params/activations, fp32 reductions)."""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context (perf iteration 1, EXPERIMENTS.md §Perf):
+# without explicit activation constraints GSPMD reshards the residual
+# stream over 'model' and all-reduces attention scores (dh-contraction
+# partials) — measured at ~58 GB/layer/device on yi-34b train_4k. The
+# Megatron-style layout below pins: residual (dp, None, None), heads on
+# 'model' only when divisible, MLP hidden (dp, None, model).
+# ---------------------------------------------------------------------------
+
+_ACT_CTX: contextvars.ContextVar = contextvars.ContextVar("act_ctx", default=None)
+#: "opt" (ZeRO-1 weights + activation constraints + blocked attention) or
+#: "baseline" (FSDP-sharded weights, no constraints, naive attention) —
+#: the §Perf iteration ladder's endpoints.
+LAYOUT: contextvars.ContextVar = contextvars.ContextVar("layout", default="opt")
+
+
+@dataclasses.dataclass(frozen=True)
+class ActSharding:
+    dp: tuple          # data-parallel axes for the batch dim
+    tp: str            # tensor axis name
+    tp_size: int
+
+
+@contextlib.contextmanager
+def activation_sharding(dp_axes, tp_axis, tp_size):
+    token = _ACT_CTX.set(ActSharding(tuple(dp_axes), tp_axis, tp_size))
+    try:
+        yield
+    finally:
+        _ACT_CTX.reset(token)
+
+
+def constrain(x, *dims):
+    """with_sharding_constraint if an activation context is active.
+
+    ``dims`` entries: 'dp' (batch axes), 'tp:<size>' (tensor axis, applied
+    only when the dim is divisible), or None.
+    """
+    ctx = _ACT_CTX.get()
+    if ctx is None:
+        return x
+    parts = []
+    for i, d in enumerate(dims):
+        if d == "dp":
+            parts.append(ctx.dp if x.shape[i] > 1 else None)
+        elif d == "tp":
+            parts.append(ctx.tp if x.shape[i] % ctx.tp_size == 0 and x.shape[i] >= ctx.tp_size else None)
+        else:
+            parts.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+# ---------------------------------------------------------------------------
+# Param init + sharding rules
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, scale):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(DTYPE)
+
+
+class Init:
+    """Key-splitting param factory."""
+
+    def __init__(self, key):
+        self.key = key
+
+    def take(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def dense(self, d_in, d_out, scale=None, bias=False):
+        scale = scale if scale is not None else d_in ** -0.5
+        w = _normal(self.take(), (d_in, d_out), scale)
+        if bias:
+            return {"w": w, "b": jnp.zeros((d_out,), DTYPE)}
+        return {"w": w}
+
+    def stack(self, n, fn):
+        """Stacked params for scan-over-layers."""
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[fn() for _ in range(n)])
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def spec_for(path: str, shape, mesh_axis_sizes: dict, fsdp_axes, tp_axis="model"):
+    """Compute-param sharding rule (perf iteration 2, EXPERIMENTS.md §Perf):
+
+    ZeRO-1 layout — weights are TENSOR-PARALLEL ONLY and replicated over the
+    data axes; only optimizer state (opt_state_specs) is additionally
+    data-sharded. Sharding weight contracting dims over 'data' (FSDP-style,
+    the iteration-0/1 baselines) makes GSPMD regather ~1 GB of weights or
+    activations per matmul per layer; with ZeRO-1 the params move across
+    'data' ONCE per step, inside the optimizer.
+
+    Exception: MoE expert banks are also sharded over the data axes on d_in
+    (e.g. DeepSeek-V2's 472 GB of experts would not fit per-chip otherwise);
+    their per-layer regather is 1/n_experts-weighted and cheap.
+    """
+    tp = mesh_axis_sizes.get(tp_axis, 1)
+    fs = int(np.prod([mesh_axis_sizes.get(a, 1) for a in fsdp_axes])) if fsdp_axes else 1
+    nd = len(shape)
+    spec = [None] * nd
+    if nd == 0 or max(shape) < 256:
+        return P(*spec)
+
+    def put(dim, axis, size):
+        if spec[dim] is None and _divisible(shape[dim], size):
+            spec[dim] = axis
+            return True
+        return False
+
+    fsdp = tuple(fsdp_axes) if fs > 1 else None
+    p = path.lower()
+    row_parallel = any(t in p for t in ("wo", "w_out", "out_proj", "down"))
+    expert = "experts" in p
+    zero1 = LAYOUT.get() != "baseline"   # baseline = FSDP-everything (iter 0)
+    if expert and nd >= 3:
+        put(0, tp_axis, tp)
+        if fsdp:
+            put(1, fsdp, fs) or put(2, fsdp, fs)
+    elif "unembed" in p and nd == 2:
+        put(1, tp_axis, tp)
+        if fsdp and not zero1:
+            put(0, fsdp, fs)
+    elif "embed" in p and nd == 2:
+        # vocab over data: big tables, and the token-lookup gather is tiny
+        put(1, tp_axis, tp)
+        if fsdp:
+            put(0, fsdp, fs)
+    elif nd >= 2 and row_parallel:
+        put(nd - 2, tp_axis, tp)
+        if fsdp and not zero1:
+            put(nd - 1, fsdp, fs)
+    elif nd >= 2:
+        put(nd - 1, tp_axis, tp)
+        if fsdp and not zero1:
+            put(nd - 2, fsdp, fs)
+    return P(*spec)
+
+
+def build_param_specs(params, mesh, fsdp_axes):
+    """Spec tree parallel to a param tree via path-based rules. Stacked
+    (scan) leading layer dims are detected by name prefix 'layers' and left
+    unsharded on dim 0 (the scan axis)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def rule(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        shape = leaf.shape
+        stacked = pstr.startswith("layers") or "/layers" in pstr or "blocks" in pstr
+        if stacked and len(shape) >= 1:
+            inner = spec_for(pstr, shape[1:], sizes, fsdp_axes)
+            return P(None, *inner)
+        return spec_for(pstr, shape, sizes, fsdp_axes)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+# ---------------------------------------------------------------------------
+# Norms / RoPE / losses
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope_freqs(positions, dim, theta):
+    """positions (...,) -> cos/sin (..., dim//2) fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., H, dh) with cos/sin (..., dh//2); rotates pairs."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits, labels, vocab):
+    """Mean next-token loss; fp32, gather-based (never materialises a
+    one-hot of the vocab — critical at vocab>100k x 1M tokens)."""
+    del vocab
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+# ---------------------------------------------------------------------------
+# Attention: GQA (train + decode) and MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def init_gqa(cfg: ArchConfig, ini: Init):
+    dh = cfg.head_dim
+    return {
+        "wq": ini.dense(cfg.d_model, cfg.n_heads * dh, bias=cfg.qkv_bias),
+        "wk": ini.dense(cfg.d_model, cfg.n_kv_heads * dh, bias=cfg.qkv_bias),
+        "wv": ini.dense(cfg.d_model, cfg.n_kv_heads * dh, bias=cfg.qkv_bias),
+        "wo": ini.dense(cfg.n_heads * dh, cfg.d_model),
+    }
+
+
+def _proj(x, p):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+#: query-block size for blocked (flash-style) attention; 0 disables.
+ATTN_BLOCK = 512
+
+
+def _sdpa(q, k, v, q_pos, k_pos, scale, causal, window):
+    """Dense attention on one query block. q (B,QB,KV,G,D); k/v (B,S,KV,D)."""
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = q_pos[:, :, None] >= k_pos[:, None, :] if causal else None
+    if window:
+        near = k_pos[:, None, :] > q_pos[:, :, None] - window
+        mask = near if mask is None else (mask & near)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+
+
+def gqa_attention(cfg: ArchConfig, p, x, positions, *, causal=True, window=0):
+    """Training/prefill attention, blocked over queries (perf iteration 3,
+    EXPERIMENTS.md §Perf): the (S,S) score matrix is never materialised —
+    per q-block temps are (B,H,QB,S), an S/QB reduction of the dominant
+    memory-roofline term at prefill_32k. On real TPU the Pallas
+    flash_attention kernel (kernels/flash_attention) replaces this path.
+    """
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    q = _proj(x, p["wq"]).reshape(b, s, cfg.n_heads, dh)
+    k = _proj(x, p["wk"]).reshape(b, s, cfg.n_kv_heads, dh)
+    v = _proj(x, p["wv"]).reshape(b, s, cfg.n_kv_heads, dh)
+    # pin head-sharded layout: dh must stay unsharded or the scores einsum
+    # goes partial and GSPMD all-reduces (B,H,S,S) scores
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    cos, sin = rope_freqs(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    g = cfg.n_heads // cfg.n_kv_heads
+    q = q.reshape(b, s, cfg.n_kv_heads, g, dh)
+    o = blocked_attention(q, k, v, positions, dh**-0.5, causal, window,
+                          unroll=cfg.unroll)
+    o = o.reshape(b, s, cfg.n_heads * dh)
+    return constrain(_proj(o, p["wo"]), "dp", None, None)
+
+
+def blocked_attention(q, k, v, positions, scale, causal=True, window=0,
+                      unroll=False):
+    """q (B,S,KV,G,D); k/v (B,S,KV,Dk/Dv). Chunked over queries when the
+    optimised layout is active; dense otherwise (baseline). ``unroll``
+    python-unrolls the block loop (dry-run cost accounting: a lax.map body
+    would be counted once by cost_analysis)."""
+    b, s = q.shape[:2]
+    blk = ATTN_BLOCK if LAYOUT.get() != "baseline" else 0
+    if blk and s > blk and s % blk == 0:
+        nb = s // blk
+        qb = q.reshape((b, nb, blk) + q.shape[2:]).transpose(1, 0, 2, 3, 4, 5)
+        pb = positions.reshape(b, nb, blk).transpose(1, 0, 2)
+
+        def one_block(args):
+            qi, pi = args
+            return _sdpa(qi, k, v, pi, positions, scale, causal, window)
+
+        if unroll:
+            o = jnp.stack([one_block((qb[i], pb[i])) for i in range(nb)])
+        else:
+            o = jax.lax.map(one_block, (qb, pb))          # (nb,B,blk,KV,G,Dv)
+        return o.transpose(1, 0, 2, 3, 4, 5).reshape((b, s) + o.shape[3:])
+    return _sdpa(q, k, v, positions, positions, scale, causal, window)
+
+
+def gqa_decode(cfg: ArchConfig, p, x, cache_k, cache_v, pos):
+    """One-token decode. x (B,1,d); cache_k/v (B,S,kv,dh); pos () current
+    index. Returns (out, new_k, new_v)."""
+    b = x.shape[0]
+    dh = cfg.head_dim
+    s = cache_k.shape[1]
+    q = _proj(x, p["wq"]).reshape(b, 1, cfg.n_heads, dh)
+    k = _proj(x, p["wk"]).reshape(b, 1, cfg.n_kv_heads, dh)
+    v = _proj(x, p["wv"]).reshape(b, 1, cfg.n_kv_heads, dh)
+    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    cos, sin = rope_freqs(posv, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+
+    g = cfg.n_heads // cfg.n_kv_heads
+    q = q.reshape(b, cfg.n_kv_heads, g, dh)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", q, cache_k.astype(x.dtype),
+                        preferred_element_type=jnp.float32) * dh**-0.5
+    valid = jnp.arange(s)[None, :] <= pos
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhgk,bkhd->bhgd", w, cache_v.astype(x.dtype)).reshape(b, 1, cfg.n_heads * dh)
+    return _proj(o, p["wo"]), cache_k, cache_v
+
+
+# ---- MLA ------------------------------------------------------------------
+
+def init_mla(cfg: ArchConfig, ini: Init):
+    """DeepSeek-V2 Multi-head Latent Attention (arXiv:2405.04434 §2.1)."""
+    dq = cfg.nope_head_dim + cfg.rope_head_dim
+    return {
+        "wq_a": ini.dense(cfg.d_model, cfg.q_lora),       # q down
+        "q_norm": jnp.ones((cfg.q_lora,), DTYPE),
+        "wq_b": ini.dense(cfg.q_lora, cfg.n_heads * dq),  # q up (nope+rope)
+        "wkv_a": ini.dense(cfg.d_model, cfg.kv_lora + cfg.rope_head_dim),
+        "kv_norm": jnp.ones((cfg.kv_lora,), DTYPE),
+        "wk_b": ini.dense(cfg.kv_lora, cfg.n_heads * cfg.nope_head_dim),
+        "wv_b": ini.dense(cfg.kv_lora, cfg.n_heads * cfg.v_head_dim),
+        "wo": ini.dense(cfg.n_heads * cfg.v_head_dim, cfg.d_model),
+    }
+
+
+def mla_attention(cfg: ArchConfig, p, x, positions):
+    """Training/prefill MLA; materialises per-head K/V from the latent."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q = _proj(rmsnorm(_proj(x, p["wq_a"]), p["q_norm"], cfg.norm_eps), p["wq_b"])
+    q = q.reshape(b, s, h, dn + dr)
+    q = constrain(q, "dp", None, "tp", None)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+
+    kv = _proj(x, p["wkv_a"])
+    c_kv, k_rope = kv[..., : cfg.kv_lora], kv[..., cfg.kv_lora :]
+    c_kv = rmsnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+    c_kv = constrain(c_kv, "dp", None, None)
+    k_nope = constrain(_proj(c_kv, p["wk_b"]).reshape(b, s, h, dn), "dp", None, "tp", None)
+    v = constrain(_proj(c_kv, p["wv_b"]).reshape(b, s, h, dv), "dp", None, "tp", None)
+
+    cos, sin = rope_freqs(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # shared across heads
+
+    # fold rope+nope into one head dim and reuse the blocked MHA path
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)      # (b,s,h,dn+dr)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1
+    )
+    q_cat = constrain(q_cat, "dp", None, "tp", None)
+    k_cat = constrain(k_cat, "dp", None, "tp", None)
+    o = blocked_attention(
+        q_cat[:, :, :, None, :], k_cat, v, positions, (dn + dr) ** -0.5,
+        unroll=cfg.unroll,
+    )
+    o = o.reshape(b, s, h * dv)
+    return constrain(_proj(o, p["wo"]), "dp", None, None)
+
+
+def mla_decode(cfg: ArchConfig, p, x, cache_ckv, cache_krope, pos):
+    """Absorbed-weight MLA decode: the cache holds only the compressed
+    latent (kv_lora) + shared rope key (rope_head_dim) per token — the
+    paper's 93%-smaller KV cache. Score via W_k_b absorbed into q."""
+    b = x.shape[0]
+    h, dn, dr, dv = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    s = cache_ckv.shape[1]
+
+    q = _proj(rmsnorm(_proj(x, p["wq_a"]), p["q_norm"], cfg.norm_eps), p["wq_b"])
+    q = q.reshape(b, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    cos, sin = rope_freqs(posv, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope[:, None], cos, sin)[:, 0]
+
+    kv = _proj(x[:, 0], p["wkv_a"])
+    c_kv = rmsnorm(kv[..., : cfg.kv_lora], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[:, None, None, cfg.kv_lora :], cos, sin)[:, 0, 0]
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv[:, None].astype(cache_ckv.dtype), pos, axis=1
+    )
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, k_rope[:, None].astype(cache_krope.dtype), pos, axis=1
+    )
+
+    # absorb W_k_b into q: q_lat (b,h,kv_lora)
+    wkb = p["wk_b"]["w"].reshape(cfg.kv_lora, h, dn)
+    q_lat = jnp.einsum("bhd,chd->bhc", q_nope, wkb)
+    scores = (
+        jnp.einsum("bhc,bkc->bhk", q_lat, cache_ckv.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bhd,bkd->bhk", q_rope, cache_krope.astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    ) * (dn + dr) ** -0.5
+    valid = jnp.arange(s)[None, :] <= pos
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhk,bkc->bhc", w, cache_ckv.astype(x.dtype))
+    wvb = p["wv_b"]["w"].reshape(cfg.kv_lora, h, dv)
+    o = jnp.einsum("bhc,chd->bhd", o_lat, wvb).reshape(b, 1, h * dv)
+    return _proj(o, p["wo"]), cache_ckv, cache_krope
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(d_model, d_ff, ini: Init):
+    return {
+        "w_gate": ini.dense(d_model, d_ff),
+        "w_in": ini.dense(d_model, d_ff),
+        "w_out": ini.dense(d_ff, d_model),
+    }
+
+
+def mlp(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]["w"]) * (x @ p["w_in"]["w"])
+    if h.ndim == 3:
+        h = constrain(h, "dp", None, "tp")      # Megatron column-parallel hidden
+    out = h @ p["w_out"]["w"]
+    return constrain(out, *(["dp"] + [None] * (out.ndim - 1)))
+
+
+def init_moe(cfg: ArchConfig, ini: Init):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    params = {
+        "router": ini.dense(d, e, scale=0.02),
+        "experts": {
+            "w_gate": _normal(ini.take(), (e, d, f), d**-0.5),
+            "w_in": _normal(ini.take(), (e, d, f), d**-0.5),
+            "w_out": _normal(ini.take(), (e, f, d), f**-0.5),
+        },
+    }
+    if cfg.n_shared_experts:
+        params["shared"] = init_mlp(d, f * cfg.n_shared_experts, ini)
+    return params
+
+
+def _moe_groups(t: int) -> int:
+    """Token-group count for grouped dispatch (perf iteration 5): groups
+    align with the data axes so routing (sort/scatter) is group-LOCAL and
+    the only cross-device movement is the (G,E,C,d) dispatch all-to-all —
+    the GShard schedule. A global argsort dispatch makes GSPMD all-gather
+    the full token matrix per MoE layer (measured regression, §Perf)."""
+    ctx = _ACT_CTX.get()
+    target = 256 if ctx is not None else 8
+    g = min(target, t)
+    while t % g:
+        g -= 1
+    return max(g, 1)
+
+
+def _moe_cap(cfg: ArchConfig, tg: int) -> int:
+    e, k = cfg.n_experts, cfg.top_k
+    return max(4, min(int(cfg.capacity_factor * tg * k / e), tg * k))
+
+
+def _moe_one_group(cfg: ArchConfig, p, xt, cap: int):
+    """Sorted capacity-bounded dispatch for ONE token group. xt (Tg, d)."""
+    tg, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = (xt @ p["router"]["w"]).astype(jnp.float32)          # (Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                          # (Tg, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = topi.reshape(-1)                                     # (Tg*k,)
+    flat_t = jnp.repeat(jnp.arange(tg), k)
+    flat_w = topv.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sw = flat_e[order], flat_t[order], flat_w[order]
+    first = jnp.searchsorted(se, jnp.arange(e), side="left")
+    pos_in_e = jnp.arange(tg * k) - first[se]
+    keep = pos_in_e < cap
+
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)          # dropped -> dump
+    disp = jnp.zeros((e * cap + 1, d), DTYPE).at[slot].set(xt[st_])[:-1]
+    return disp.reshape(e, cap, d), (se, st_, sw, keep, pos_in_e)
+
+
+def _moe_combine_one_group(meta, out, tg, d, cap: int):
+    se, st_, sw, keep, pos_in_e = meta
+    contrib = out.reshape(-1, d)[jnp.where(keep, se * cap + pos_in_e, 0)]
+    contrib = contrib * jnp.where(keep, sw, 0.0).astype(DTYPE)[:, None]
+    return jnp.zeros((tg, d), DTYPE).at[st_].add(contrib)
+
+
+def moe(cfg: ArchConfig, p, x):
+    """Top-k token-choice MoE, grouped sorted dispatch (GShard schedule).
+
+    Tokens are split into groups (vmapped routing, no cross-group
+    coordination — the groups ARE the data shards at scale), dispatched into
+    a (G, E, C, d) tensor whose layout change (G on the data axes -> E on
+    'model') is the expert-parallel all-to-all.
+    """
+    b, s, d = x.shape
+    t = b * s
+    g = _moe_groups(t)
+    tg = t // g
+    cap = _moe_cap(cfg, tg)
+    xt = x.reshape(g, tg, d)
+
+    disp, meta = jax.vmap(lambda xg: _moe_one_group(cfg, p, xg, cap))(xt)
+    disp = constrain(disp, "dp", "tp", None, None)   # (G, E, C, d) all-to-all
+
+    h = jnp.einsum("gecd,edf->gecf", disp, p["experts"]["w_gate"])
+    h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", disp, p["experts"]["w_in"])
+    out = jnp.einsum("gecf,efd->gecd", h, p["experts"]["w_out"])
+    out = constrain(out, "dp", "tp", None, None)
+
+    y = jax.vmap(lambda m, o: _moe_combine_one_group(m, o, tg, d, cap))(meta, out)
+
+    if cfg.n_shared_experts:
+        y = y + jax.vmap(lambda xg: mlp(p["shared"], xg))(xt)
+    return constrain(y.reshape(b, s, d), "dp", None, None)

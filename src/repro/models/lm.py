@@ -1,0 +1,628 @@
+"""Model assembly for the 10 assigned architectures.
+
+Families:
+  dense / moe  — decoder-only transformer (GQA or MLA attention, SwiGLU or
+                 expert MLP), scan-over-layers.
+  hybrid       — Zamba2: Mamba2 backbone + ONE shared attention+MLP block
+                 applied every ``attn_every`` blocks (own KV per application).
+  ssm          — xLSTM: mLSTM blocks with an sLSTM block every
+                 ``slstm_every``.
+  encdec       — Whisper: bidirectional encoder over stub frame embeddings +
+                 causal decoder with cross-attention.
+  vlm          — InternVL2: LM backbone consuming stub patch embeddings
+                 prepended to the token sequence.
+
+All params are pure pytrees; layers are stacked on a leading axis and run
+under ``lax.scan`` (keeps HLO size O(1) in depth — essential for the 40-cell
+dry-run). ``build_model`` returns a :class:`Model` facade exposing init /
+loss / decode / cache / input_specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.layers import DTYPE, Init
+
+
+def _scan(body, x, xs, unroll: bool = False):
+    """lax.scan, or a python-unrolled equivalent when ``unroll`` is set.
+
+    The dry-run compiles small unrolled depths to recover true per-layer
+    FLOPs/bytes (XLA cost_analysis counts a while-loop body once)."""
+    if not unroll:
+        return jax.lax.scan(body, x, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x, y = body(x, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return x, ys
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks (dense / moe, GQA / MLA)
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ArchConfig, ini: Init, kind: str):
+    p = {"ln1": jnp.ones((cfg.d_model,), DTYPE), "ln2": jnp.ones((cfg.d_model,), DTYPE)}
+    p["attn"] = L.init_mla(cfg, ini) if cfg.use_mla else L.init_gqa(cfg, ini)
+    if kind == "moe":
+        p["moe"] = L.init_moe(cfg, ini)
+    else:
+        d_ff = cfg.dense_d_ff if kind == "dense_first" and cfg.dense_d_ff else cfg.d_ff
+        p["mlp"] = L.init_mlp(cfg.d_model, d_ff, ini)
+    return p
+
+
+def _block_fwd(cfg: ArchConfig, p, x, positions, kind: str, window=0):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        x = x + L.mla_attention(cfg, p["attn"], h, positions)
+    else:
+        x = x + L.gqa_attention(cfg, p["attn"], h, positions, window=window)
+    h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        x = x + L.moe(cfg, p["moe"], h)
+    else:
+        x = x + L.mlp(p["mlp"], h)
+    return x
+
+
+def _block_decode(cfg: ArchConfig, p, x, cache, pos, kind: str):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a, ckv, kr = L.mla_decode(cfg, p["attn"], h, cache["ckv"], cache["krope"], pos)
+        new_cache = {"ckv": ckv, "krope": kr}
+    else:
+        a, k, v = L.gqa_decode(cfg, p["attn"], h, cache["k"], cache["v"], pos)
+        new_cache = {"k": k, "v": v}
+    x = x + a
+    h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + (L.moe(cfg, p["moe"], h) if kind == "moe" else L.mlp(p["mlp"], h))
+    return x, new_cache
+
+
+def _attn_cache_struct(cfg: ArchConfig, b, s):
+    if cfg.use_mla:
+        return {
+            "ckv": jnp.zeros((b, s, cfg.kv_lora), DTYPE),
+            "krope": jnp.zeros((b, s, cfg.rope_head_dim), DTYPE),
+        }
+    dh = cfg.head_dim
+    return {
+        "k": jnp.zeros((b, s, cfg.n_kv_heads, dh), DTYPE),
+        "v": jnp.zeros((b, s, cfg.n_kv_heads, dh), DTYPE),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only LM (dense, moe, vlm backbones share this)
+# ---------------------------------------------------------------------------
+
+class DecoderLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.kind = "moe" if cfg.family == "moe" else "dense"
+        self.n_scan = cfg.n_layers - cfg.first_dense_layers
+
+    def init(self, rng):
+        cfg = self.cfg
+        ini = Init(rng)
+        params = {
+            "embed": L._normal(ini.take(), (cfg.vocab, cfg.d_model), 0.02),
+            "layers": ini.stack(self.n_scan, lambda: _init_block(cfg, ini, self.kind)),
+            "ln_f": jnp.ones((cfg.d_model,), DTYPE),
+            "unembed": L._normal(ini.take(), (cfg.d_model, cfg.vocab), cfg.d_model ** -0.5),
+        }
+        if cfg.first_dense_layers:
+            params["first"] = ini.stack(
+                cfg.first_dense_layers, lambda: _init_block(cfg, ini, "dense_first")
+            )
+        if cfg.family == "vlm":
+            params["patch_proj"] = ini.dense(cfg.d_model, cfg.d_model)
+        return params
+
+    def _backbone(self, params, x, positions):
+        cfg = self.cfg
+
+        if cfg.first_dense_layers:
+            def fbody(h, lp):
+                return _block_fwd(cfg, lp, h, positions, "dense_first"), None
+            if cfg.remat:
+                fbody = jax.checkpoint(fbody)
+            x, _ = _scan(fbody, x, params["first"], cfg.unroll)
+
+        def body(h, lp):
+            return _block_fwd(cfg, lp, h, positions, self.kind), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = _scan(body, x, params["layers"], cfg.unroll)
+        return L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+
+    def forward(self, params, tokens, patch_embeds=None):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        if patch_embeds is not None:
+            pe = patch_embeds.astype(DTYPE) @ params["patch_proj"]["w"]
+            x = jnp.concatenate([pe, x], axis=1)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        x = self._backbone(params, x, positions)
+        return x @ params["unembed"]
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["tokens"], batch.get("patch_embeds"))
+        if "patch_embeds" in batch:
+            logits = logits[:, batch["patch_embeds"].shape[1] :]
+        return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:], self.cfg.vocab)
+
+    # -- decode -----------------------------------------------------------
+    def init_cache(self, b, s):
+        cfg = self.cfg
+        cache = {
+            "layers": jax.tree.map(
+                lambda x: jnp.zeros((self.n_scan,) + x.shape, x.dtype),
+                _attn_cache_struct(cfg, b, s),
+            )
+        }
+        if cfg.first_dense_layers:
+            cache["first"] = jax.tree.map(
+                lambda x: jnp.zeros((cfg.first_dense_layers,) + x.shape, x.dtype),
+                _attn_cache_struct(cfg, b, s),
+            )
+        return cache
+
+    def decode_step(self, params, cache, token, pos):
+        """token (B,1) int32; pos () int32. Returns (logits (B,1,V), cache)."""
+        cfg = self.cfg
+        x = params["embed"][token]
+
+        new_cache = {}
+        if cfg.first_dense_layers:
+            def fbody(h, xs):
+                lp, c = xs
+                h, nc = _block_decode(cfg, lp, h, c, pos, "dense_first")
+                return h, nc
+            x, new_cache["first"] = _scan(
+                fbody, x, (params["first"], cache["first"])
+            , cfg.unroll)
+
+        def body(h, xs):
+            lp, c = xs
+            h, nc = _block_decode(cfg, lp, h, c, pos, self.kind)
+            return h, nc
+
+        x, new_cache["layers"] = _scan(
+            body, x, (params["layers"], cache["layers"])
+        , cfg.unroll)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return x @ params["unembed"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Zamba2-style hybrid
+# ---------------------------------------------------------------------------
+
+class HybridLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        assert cfg.n_layers % cfg.attn_every == 0
+        self.n_super = cfg.n_layers // cfg.attn_every
+
+    def init(self, rng):
+        cfg = self.cfg
+        ini = Init(rng)
+
+        def super_block():
+            return {
+                "mamba": ini.stack(
+                    cfg.attn_every, lambda: {"ln": jnp.ones((cfg.d_model,), DTYPE),
+                                             "m": S.init_mamba2(cfg, ini)}
+                )
+            }
+
+        return {
+            "embed": L._normal(ini.take(), (cfg.vocab, cfg.d_model), 0.02),
+            "blocks": ini.stack(self.n_super, super_block),
+            "shared": _init_block(cfg, ini, "dense"),   # ONE shared attn+MLP
+            "ln_f": jnp.ones((cfg.d_model,), DTYPE),
+            "unembed": L._normal(ini.take(), (cfg.d_model, cfg.vocab), cfg.d_model ** -0.5),
+        }
+
+    def forward(self, params, tokens, window=0):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+        def super_body(h, sp):
+            def mbody(hh, mp):
+                return hh + S.mamba2_forward(cfg, mp["m"], L.rmsnorm(hh, mp["ln"], cfg.norm_eps)), None
+            h, _ = _scan(mbody, h, sp["mamba"], cfg.unroll)
+            h = _block_fwd(cfg, params["shared"], h, positions, "dense", window=window)
+            return h, None
+
+        body = jax.checkpoint(super_body) if cfg.remat else super_body
+        x, _ = _scan(body, x, params["blocks"], cfg.unroll)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return x @ params["unembed"]
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["tokens"])
+        return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:], self.cfg.vocab)
+
+    def init_cache(self, b, s):
+        cfg = self.cfg
+        d_inner, h, n = S.mamba_dims(cfg)
+        s_attn = min(s, cfg.sliding_window_long) if s > 65536 else s
+        return {
+            "ssm": jnp.zeros(
+                (self.n_super, cfg.attn_every, b, h, n, S.MAMBA_HEADDIM), jnp.float32
+            ),
+            "conv": jnp.zeros(
+                (self.n_super, cfg.attn_every, b, S.MAMBA_CONV - 1, d_inner + 2 * n),
+                DTYPE,
+            ),
+            "attn": jax.tree.map(
+                lambda x: jnp.zeros((self.n_super,) + x.shape, x.dtype),
+                _attn_cache_struct(cfg, b, s_attn),
+            ),
+        }
+
+    def decode_step(self, params, cache, token, pos):
+        cfg = self.cfg
+        x = params["embed"][token]
+        s_attn = cache["attn"]["k"].shape[2]
+        attn_pos = jnp.minimum(pos, s_attn - 1)  # ring-buffer clamp for window
+
+        def super_body(h, xs):
+            sp, ssm_c, conv_c, attn_c = xs
+
+            def mbody(hh, ms):
+                mp, st, cv = ms
+                y, st2, cv2 = S.mamba2_decode(
+                    cfg, mp["m"], L.rmsnorm(hh, mp["ln"], cfg.norm_eps), st, cv
+                )
+                return hh + y, (st2, cv2)
+
+            h, (ssm2, conv2) = _scan(mbody, h, (sp["mamba"], ssm_c, conv_c), cfg.unroll)
+            h, attn2 = _block_decode(cfg, params["shared"], h, attn_c, attn_pos, "dense")
+            return h, (ssm2, conv2, attn2)
+
+        x, (ssm2, conv2, attn2) = _scan(
+            super_body, x, (params["blocks"], cache["ssm"], cache["conv"], cache["attn"])
+        , cfg.unroll)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return x @ params["unembed"], {"ssm": ssm2, "conv": conv2, "attn": attn2}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM
+# ---------------------------------------------------------------------------
+
+class XLSTMLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        assert cfg.n_layers % cfg.slstm_every == 0
+        self.n_super = cfg.n_layers // cfg.slstm_every
+        self.m_per = cfg.slstm_every - 1
+
+    def init(self, rng):
+        cfg = self.cfg
+        ini = Init(rng)
+
+        def super_block():
+            return {
+                "mlstm": ini.stack(
+                    self.m_per,
+                    lambda: {"ln": jnp.ones((cfg.d_model,), DTYPE),
+                             "m": S.init_mlstm(cfg, ini)},
+                ),
+                "sln": jnp.ones((cfg.d_model,), DTYPE),
+                "slstm": S.init_slstm(cfg, ini),
+            }
+
+        return {
+            "embed": L._normal(ini.take(), (cfg.vocab, cfg.d_model), 0.02),
+            "blocks": ini.stack(self.n_super, super_block),
+            "ln_f": jnp.ones((cfg.d_model,), DTYPE),
+            "unembed": L._normal(ini.take(), (cfg.d_model, cfg.vocab), cfg.d_model ** -0.5),
+        }
+
+    def forward(self, params, tokens):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+
+        def super_body(h, sp):
+            def mbody(hh, mp):
+                return hh + S.mlstm_forward(cfg, mp["m"], L.rmsnorm(hh, mp["ln"], cfg.norm_eps)), None
+            h, _ = _scan(mbody, h, sp["mlstm"], cfg.unroll)
+            h = h + S.slstm_forward(cfg, sp["slstm"], L.rmsnorm(h, sp["sln"], cfg.norm_eps))
+            return h, None
+
+        body = jax.checkpoint(super_body) if cfg.remat else super_body
+        x, _ = _scan(body, x, params["blocks"], cfg.unroll)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return x @ params["unembed"]
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["tokens"])
+        return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:], self.cfg.vocab)
+
+    def init_cache(self, b, s):
+        cfg = self.cfg
+        del s  # state is O(1) in sequence length
+        d_inner, h, dqk, dv = S.xlstm_dims(cfg)
+        dh = cfg.d_model // cfg.n_heads
+        return {
+            "mC": jnp.zeros((self.n_super, self.m_per, b, h, dqk, dv), jnp.float32),
+            "mN": jnp.zeros((self.n_super, self.m_per, b, h, dqk), jnp.float32),
+            "sc": jnp.zeros((self.n_super, b, cfg.n_heads, dh), jnp.float32),
+            "sh": jnp.zeros((self.n_super, b, cfg.n_heads, dh), DTYPE),
+        }
+
+    def decode_step(self, params, cache, token, pos):
+        cfg = self.cfg
+        del pos
+        x = params["embed"][token]
+
+        def super_body(h, xs):
+            sp, mC, mN, sc, sh = xs
+
+            def mbody(hh, ms):
+                mp, C, N = ms
+                y, C2, N2 = S.mlstm_decode(
+                    cfg, mp["m"], L.rmsnorm(hh, mp["ln"], cfg.norm_eps), C, N
+                )
+                return hh + y, (C2, N2)
+
+            h, (mC2, mN2) = _scan(mbody, h, (sp["mlstm"], mC, mN), cfg.unroll)
+            y, sc2, sh2 = S.slstm_decode(
+                cfg, sp["slstm"], L.rmsnorm(h, sp["sln"], cfg.norm_eps), sc, sh
+            )
+            return h + y, (mC2, mN2, sc2, sh2)
+
+        x, (mC, mN, sc, sh) = _scan(
+            super_body, x, (params["blocks"], cache["mC"], cache["mN"], cache["sc"], cache["sh"])
+        , cfg.unroll)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return x @ params["unembed"], {"mC": mC, "mN": mN, "sc": sc, "sh": sh}
+
+
+# ---------------------------------------------------------------------------
+# Whisper enc-dec
+# ---------------------------------------------------------------------------
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def init(self, rng):
+        cfg = self.cfg
+        ini = Init(rng)
+
+        def enc_block():
+            return {
+                "ln1": jnp.ones((cfg.d_model,), DTYPE),
+                "attn": L.init_gqa(cfg, ini),
+                "ln2": jnp.ones((cfg.d_model,), DTYPE),
+                "mlp": L.init_mlp(cfg.d_model, cfg.d_ff, ini),
+            }
+
+        def dec_block():
+            return {
+                "ln1": jnp.ones((cfg.d_model,), DTYPE),
+                "self_attn": L.init_gqa(cfg, ini),
+                "lnx": jnp.ones((cfg.d_model,), DTYPE),
+                "cross_q": ini.dense(cfg.d_model, cfg.n_heads * cfg.head_dim),
+                "cross_k": ini.dense(cfg.d_model, cfg.n_kv_heads * cfg.head_dim),
+                "cross_v": ini.dense(cfg.d_model, cfg.n_kv_heads * cfg.head_dim),
+                "cross_o": ini.dense(cfg.n_heads * cfg.head_dim, cfg.d_model),
+                "ln2": jnp.ones((cfg.d_model,), DTYPE),
+                "mlp": L.init_mlp(cfg.d_model, cfg.d_ff, ini),
+            }
+
+        return {
+            "enc_pos": L._normal(ini.take(), (cfg.encoder_seq, cfg.d_model), 0.02),
+            "enc_layers": ini.stack(cfg.encoder_layers, enc_block),
+            "enc_ln": jnp.ones((cfg.d_model,), DTYPE),
+            "embed": L._normal(ini.take(), (cfg.vocab, cfg.d_model), 0.02),
+            "dec_layers": ini.stack(cfg.n_layers, dec_block),
+            "ln_f": jnp.ones((cfg.d_model,), DTYPE),
+            "unembed": L._normal(ini.take(), (cfg.d_model, cfg.vocab), cfg.d_model ** -0.5),
+        }
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(DTYPE) + params["enc_pos"][None]
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+        def body(h, lp):
+            hh = L.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            h = h + L.gqa_attention(cfg, lp["attn"], hh, positions, causal=False)
+            hh = L.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+            return h + L.mlp(lp["mlp"], hh), None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = _scan(body, x, params["enc_layers"], cfg.unroll)
+        return L.rmsnorm(x, params["enc_ln"], cfg.norm_eps)
+
+    def _cross_attn(self, lp, x, enc):
+        cfg = self.cfg
+        b, s, _ = x.shape
+        se = enc.shape[1]
+        dh = cfg.head_dim
+        q = (x @ lp["cross_q"]["w"]).reshape(b, s, cfg.n_heads, dh)
+        k = (enc @ lp["cross_k"]["w"]).reshape(b, se, cfg.n_kv_heads, dh)
+        v = (enc @ lp["cross_v"]["w"]).reshape(b, se, cfg.n_kv_heads, dh)
+        g = cfg.n_heads // cfg.n_kv_heads
+        q = q.reshape(b, s, cfg.n_kv_heads, g, dh)
+        sc = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32) * dh**-0.5
+        w = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v).reshape(b, s, cfg.n_heads * dh)
+        return o @ lp["cross_o"]["w"]
+
+    def forward(self, params, tokens, frames):
+        cfg = self.cfg
+        enc = self.encode(params, frames)
+        x = params["embed"][tokens]
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+        def body(h, lp):
+            hh = L.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            h = h + L.gqa_attention(cfg, lp["self_attn"], hh, positions)
+            hh = L.rmsnorm(h, lp["lnx"], cfg.norm_eps)
+            h = h + self._cross_attn(lp, hh, enc)
+            hh = L.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+            return h + L.mlp(lp["mlp"], hh), None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = _scan(body, x, params["dec_layers"], cfg.unroll)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return x @ params["unembed"]
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["tokens"], batch["frames"])
+        return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:], self.cfg.vocab)
+
+    def init_cache(self, b, s):
+        cfg = self.cfg
+        dh = cfg.head_dim
+        return {
+            "self": jax.tree.map(
+                lambda x: jnp.zeros((cfg.n_layers,) + x.shape, x.dtype),
+                _attn_cache_struct(cfg, b, s),
+            ),
+            # cross K/V precomputed at prefill from the encoder output
+            "cross_k": jnp.zeros((cfg.n_layers, b, cfg.encoder_seq, cfg.n_kv_heads, dh), DTYPE),
+            "cross_v": jnp.zeros((cfg.n_layers, b, cfg.encoder_seq, cfg.n_kv_heads, dh), DTYPE),
+        }
+
+    def decode_step(self, params, cache, token, pos):
+        cfg = self.cfg
+        x = params["embed"][token]
+        dh = cfg.head_dim
+        b = token.shape[0]
+
+        def body(h, xs):
+            lp, c, ck, cv = xs
+            hh = L.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            a, k2, v2 = L.gqa_decode(cfg, lp["self_attn"], hh, c["k"], c["v"], pos)
+            h = h + a
+            hh = L.rmsnorm(h, lp["lnx"], cfg.norm_eps)
+            q = (hh @ lp["cross_q"]["w"]).reshape(b, cfg.n_kv_heads,
+                                                  cfg.n_heads // cfg.n_kv_heads, dh)
+            sc = jnp.einsum("bhgd,bkhd->bhgk", q, ck).astype(jnp.float32) * dh**-0.5
+            w = jax.nn.softmax(sc, axis=-1).astype(h.dtype)
+            o = jnp.einsum("bhgk,bkhd->bhgd", w, cv).reshape(b, 1, cfg.n_heads * dh)
+            h = h + o @ lp["cross_o"]["w"]
+            hh = L.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+            return h + L.mlp(lp["mlp"], hh), {"k": k2, "v": v2}
+
+        x, new_self = _scan(
+            body, x, (params["dec_layers"], cache["self"], cache["cross_k"], cache["cross_v"])
+        , cfg.unroll)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        cache = dict(cache)
+        cache["self"] = new_self
+        return x @ params["unembed"], cache
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    impl: Any
+
+    def init(self, rng):
+        return self.impl.init(rng)
+
+    def init_shapes(self, rng):
+        """Param ShapeDtypeStructs without allocation (for the dry-run)."""
+        return jax.eval_shape(self.impl.init, rng)
+
+    def loss(self, params, batch):
+        return self.impl.loss(params, batch)
+
+    def decode_step(self, params, cache, token, pos):
+        return self.impl.decode_step(params, cache, token, pos)
+
+    def init_cache(self, b, s):
+        return self.impl.init_cache(b, s)
+
+    def cache_shapes(self, b, s):
+        return jax.eval_shape(lambda: self.impl.init_cache(b, s))
+
+    # -- input specs per assigned shape ------------------------------------
+    def train_inputs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        sds = jax.ShapeDtypeStruct
+        batch = {
+            "tokens": sds((b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = sds((b, cfg.n_patches, cfg.d_model), DTYPE)
+        if cfg.family == "encdec":
+            batch["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), DTYPE)
+        return batch
+
+    def decode_inputs(self, shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        sds = jax.ShapeDtypeStruct
+        return {
+            "token": sds((b, 1), jnp.int32),
+            "pos": sds((), jnp.int32),
+            "cache": self.cache_shapes(b, s),
+        }
+
+    def make_batch(self, shape: ShapeConfig, rng):
+        """Real (small) batch for smoke tests."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        k1, k2 = jax.random.split(rng)
+        batch = {
+            "tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab, dtype=jnp.int32),
+        }
+        batch["labels"] = batch["tokens"]
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jax.random.normal(
+                k2, (b, cfg.n_patches, cfg.d_model), DTYPE
+            )
+        if cfg.family == "encdec":
+            batch["frames"] = jax.random.normal(
+                k2, (b, cfg.encoder_seq, cfg.d_model), DTYPE
+            )
+        return batch
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        impl = DecoderLM(cfg)
+    elif cfg.family == "hybrid":
+        impl = HybridLM(cfg)
+    elif cfg.family == "ssm":
+        impl = XLSTMLM(cfg)
+    elif cfg.family == "encdec":
+        impl = EncDecLM(cfg)
+    else:
+        raise ValueError(cfg.family)
+    return Model(cfg=cfg, impl=impl)

@@ -1,0 +1,310 @@
+"""State-space blocks: Mamba2 (SSD, chunkwise-parallel) and xLSTM
+(mLSTM chunkwise matrix-memory + sLSTM recurrent scan).
+
+TPU adaptation: both use the chunkwise matmul formulation (intra-chunk dense
+attention-like matmuls + inter-chunk state recurrence over #chunks) so the
+MXU does the work instead of a length-S sequential scan. The sLSTM block is
+inherently sequential (recurrent weights) and stays a lax.scan — it appears
+only every ``slstm_every`` blocks.
+
+Deviation noted in DESIGN.md: xLSTM's exponential input gate + stabilizer is
+replaced with bounded sigmoid gates (same state structure); qk head dim is
+d_head/2 to keep the matrix memory within HBM at decode_32k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import DTYPE, Init, _normal, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD
+# ---------------------------------------------------------------------------
+
+MAMBA_HEADDIM = 64
+MAMBA_CONV = 4
+
+
+def mamba_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // MAMBA_HEADDIM
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def init_mamba2(cfg: ArchConfig, ini: Init):
+    d, (d_inner, h, n) = cfg.d_model, mamba_dims(cfg)
+    return {
+        "in_proj": ini.dense(d, 2 * d_inner + 2 * n + h),
+        "conv_w": _normal(ini.take(), (MAMBA_CONV, d_inner + 2 * n), 0.5),
+        "A_log": jnp.zeros((h,), DTYPE),
+        "dt_bias": jnp.zeros((h,), DTYPE),
+        "D": jnp.ones((h,), DTYPE),
+        "gate_norm": jnp.ones((d_inner,), DTYPE),
+        "out_proj": ini.dense(d_inner, d),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv, x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out
+
+
+def chunked_linear_attention(q, k, v, decay, chunk):
+    """Chunkwise gated linear attention / SSD (Mamba-2 arXiv:2405.21060 §6;
+    same dataflow as GLA/mLSTM):
+
+        S_t = a_t * S_{t-1} + k_t v_t^T ;   y_t = q_t . S_t
+
+    q/k: (B,S,N) shared across heads (SSD's B/C) or (B,S,H,N) per head
+    (mLSTM); v: (B,S,H,P); decay: (B,S,H) in (0,1]. Returns (B,S,H,P).
+
+    Intra-chunk work is dense masked matmuls (MXU), inter-chunk is a scan
+    over S/chunk steps — the TPU-native formulation of the recurrence.
+    """
+    b, s, h, p = v.shape
+    per_head = q.ndim == 4
+    n = q.shape[-1]
+    nc = s // chunk
+    vc = v.reshape(b, nc, chunk, h, p)
+    a = decay.reshape(b, nc, chunk, h).astype(jnp.float32)
+    qc = q.reshape((b, nc, chunk, h, n) if per_head else (b, nc, chunk, n))
+    kc = k.reshape((b, nc, chunk, h, n) if per_head else (b, nc, chunk, n))
+
+    log_a = jnp.log(jnp.maximum(a, 1e-20))
+    cum = jnp.cumsum(log_a, axis=2)                       # (b,nc,L,h)
+
+    # intra-chunk: M[i,j,h] = q_i.k_j * exp(cum_i - cum_j), j <= i
+    if per_head:
+        scores = jnp.einsum("bcihn,bcjhn->bcijh", qc, kc)
+    else:
+        scores = jnp.einsum("bcin,bcjn->bcij", qc, kc)[..., None]
+    pair = jnp.exp(
+        jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :], -60.0, 0.0)
+    )                                                     # (b,nc,i,j,h)
+    mask = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])[
+        None, None, :, :, None
+    ]
+    cdtype = vc.dtype
+    w = (scores * pair * mask).astype(cdtype)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, vc)
+
+    # per-chunk outgoing state: S_c = sum_j exp(cum_L - cum_j) k_j v_j^T
+    tail = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, -60.0, 0.0)).astype(cdtype)
+    if per_head:
+        states = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp", kc, tail, vc)
+    else:
+        states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", kc, tail, vc)
+
+    # inter-chunk recurrence (sequential over nc)
+    chunk_decay = jnp.exp(jnp.clip(cum[:, :, -1, :], -60.0, 0.0)).astype(cdtype)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                     # (b,h,n,p), (b,h)
+        new = (carry * dec[:, :, None, None] + st).astype(cdtype)
+        return new, carry                                 # emit state BEFORE chunk
+
+    init = jnp.zeros((b, h, n, p), cdtype)
+    _, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (b,nc,h,n,p)
+
+    into = jnp.exp(jnp.clip(cum, -60.0, 0.0)).astype(cdtype)
+    if per_head:
+        y_inter = jnp.einsum("bcihn,bcih,bchnp->bcihp", qc, into, prev_states)
+    else:
+        y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", qc, into, prev_states)
+    return (y_intra + y_inter).reshape(b, s, h, p)
+
+
+def mamba2_forward(cfg: ArchConfig, p, x):
+    """x (B,S,d) -> (B,S,d)."""
+    b, s, _ = x.shape
+    d_inner, h, n = mamba_dims(cfg)
+    zxbcdt = x @ p["in_proj"]["w"]
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"]))
+    xin, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(A[None, None, :] * dt)                    # (B,S,H) decay
+    xh = (xin * dt.repeat(MAMBA_HEADDIM, axis=-1).astype(DTYPE)).reshape(
+        b, s, h, MAMBA_HEADDIM
+    )
+    y = chunked_linear_attention(Cc, Bc, xh, a, cfg.ssm_chunk)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"]["w"]
+
+
+def mamba2_decode(cfg: ArchConfig, p, x, state, conv_state):
+    """One-token decode. state (B,H,N,P) f32; conv_state (B,K-1,C)."""
+    b = x.shape[0]
+    d_inner, h, n = mamba_dims(cfg)
+    zxbcdt = x[:, 0] @ p["in_proj"]["w"]
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)     # (B,C)
+    window = jnp.concatenate([conv_state, conv_in[:, None]], axis=1)  # (B,K,C)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"]))
+    new_conv_state = window[:, 1:]
+    xin, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(A[None, :] * dt)                          # (B,H)
+    xh = (xin * dt.repeat(MAMBA_HEADDIM, axis=-1).astype(DTYPE)).reshape(
+        b, h, MAMBA_HEADDIM
+    )
+    new_state = state * a[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bc.astype(jnp.float32), xh.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhnp->bhp", Cc.astype(jnp.float32), new_state).astype(DTYPE)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return (y @ p["out_proj"]["w"])[:, None], new_state, new_conv_state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) + sLSTM (scalar recurrent)
+# ---------------------------------------------------------------------------
+
+def xlstm_dims(cfg: ArchConfig):
+    d_inner = 2 * cfg.d_model
+    h = cfg.n_heads
+    dv = d_inner // h
+    dqk = dv // 2
+    return d_inner, h, dqk, dv
+
+
+def init_mlstm(cfg: ArchConfig, ini: Init):
+    d, (d_inner, h, dqk, dv) = cfg.d_model, xlstm_dims(cfg)
+    return {
+        "up_proj": ini.dense(d, 2 * d_inner),
+        "wq": ini.dense(d_inner, h * dqk),
+        "wk": ini.dense(d_inner, h * dqk),
+        "wv": ini.dense(d_inner, h * dv),
+        "w_gates": ini.dense(d_inner, 2 * h, scale=0.02),
+        "out_norm": jnp.ones((d_inner,), DTYPE),
+        "down_proj": ini.dense(d_inner, d),
+    }
+
+
+def mlstm_forward(cfg: ArchConfig, p, x):
+    """Chunkwise mLSTM: C_t = f_t C_{t-1} + i_t v_t k_t^T; y_t = C_t q_t."""
+    b, s, _ = x.shape
+    d_inner, h, dqk, dv = xlstm_dims(cfg)
+    up = x @ p["up_proj"]["w"]
+    u, z = jnp.split(up, 2, axis=-1)
+    q = (u @ p["wq"]["w"]).reshape(b, s, h, dqk) * dqk**-0.5
+    k = (u @ p["wk"]["w"]).reshape(b, s, h, dqk)
+    v = (u @ p["wv"]["w"]).reshape(b, s, h, dv)
+    gates = u @ p["w_gates"]["w"]
+    f = jax.nn.sigmoid(gates[..., :h].astype(jnp.float32) + 4.0)   # forget
+    i = jax.nn.sigmoid(gates[..., h:].astype(jnp.float32))         # input
+
+    # normalizer trick: append a ones-column to v so one pass yields both
+    # numerator (dv cols) and q·n_t (last col)
+    iv = i[..., None].astype(DTYPE)
+    v_aug = jnp.concatenate([v * iv, jnp.broadcast_to(iv, (b, s, h, 1))], axis=-1)
+    out = chunked_linear_attention(q, k, v_aug, f, cfg.ssm_chunk)
+    num, qn = out[..., :dv], out[..., dv]
+    den = jnp.maximum(jnp.abs(qn.astype(jnp.float32)), 1.0)
+    y = (num.astype(jnp.float32) / den[..., None]).astype(DTYPE)
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["down_proj"]["w"]
+
+
+def init_slstm(cfg: ArchConfig, ini: Init):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    return {
+        "w_in": ini.dense(d, 4 * d),       # i,f,z,o pre-activations
+        "r": _normal(ini.take(), (h, dh, 4 * dh), dh**-0.5),  # recurrent (block-diag)
+        "out_norm": jnp.ones((d,), DTYPE),
+        "proj": ini.dense(d, d),
+    }
+
+
+def slstm_forward(cfg: ArchConfig, p, x):
+    """sLSTM: scalar-memory LSTM with head-blocked recurrent weights —
+    genuinely sequential (lax.scan over time)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    pre_all = (x @ p["w_in"]["w"]).reshape(b, s, h, 4 * dh)
+
+    def step(carry, pre_t):
+        c, hidden = carry                              # (B,h,dh) each
+        rec = jnp.einsum("bhd,hdk->bhk", hidden, p["r"])
+        z4 = (pre_t + rec).astype(jnp.float32)
+        ig, fg, zg, og = jnp.split(z4, 4, axis=-1)
+        c = jax.nn.sigmoid(fg + 4.0) * c + jax.nn.sigmoid(ig) * jnp.tanh(zg)
+        hidden = (jax.nn.sigmoid(og) * jnp.tanh(c)).astype(DTYPE)
+        return (c, hidden), hidden
+
+    init = (
+        jnp.zeros((b, h, dh), jnp.float32),
+        jnp.zeros((b, h, dh), DTYPE),
+    )
+    _, ys = jax.lax.scan(step, init, pre_all.transpose(1, 0, 2, 3))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)
+    return rmsnorm(y, p["out_norm"], cfg.norm_eps) @ p["proj"]["w"]
+
+
+def slstm_decode(cfg: ArchConfig, p, x, c, hidden):
+    b = x.shape[0]
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    pre = (x[:, 0] @ p["w_in"]["w"]).reshape(b, h, 4 * dh)
+    rec = jnp.einsum("bhd,hdk->bhk", hidden, p["r"])
+    z4 = (pre + rec).astype(jnp.float32)
+    ig, fg, zg, og = jnp.split(z4, 4, axis=-1)
+    c = jax.nn.sigmoid(fg + 4.0) * c + jax.nn.sigmoid(ig) * jnp.tanh(zg)
+    hidden = (jax.nn.sigmoid(og) * jnp.tanh(c)).astype(DTYPE)
+    y = rmsnorm(hidden.reshape(b, cfg.d_model), p["out_norm"], cfg.norm_eps)
+    return (y @ p["proj"]["w"])[:, None], c, hidden
+
+
+def mlstm_decode(cfg: ArchConfig, p, x, C, norm_n):
+    """One-token mLSTM decode; C (B,H,dqk,dv) f32, norm_n (B,H,dqk) f32."""
+    b = x.shape[0]
+    d_inner, h, dqk, dv = xlstm_dims(cfg)
+    up = x[:, 0] @ p["up_proj"]["w"]
+    u, z = jnp.split(up, 2, axis=-1)
+    q = (u @ p["wq"]["w"]).reshape(b, h, dqk) * dqk**-0.5
+    k = (u @ p["wk"]["w"]).reshape(b, h, dqk)
+    v = (u @ p["wv"]["w"]).reshape(b, h, dv)
+    gates = u @ p["w_gates"]["w"]
+    f = jax.nn.sigmoid(gates[..., :h].astype(jnp.float32) + 4.0)
+    i = jax.nn.sigmoid(gates[..., h:].astype(jnp.float32))
+    C = C * f[..., None, None] + i[..., None, None] * jnp.einsum(
+        "bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    norm_n = norm_n * f[..., None] + i[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), C)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32), norm_n)), 1.0
+    )
+    y = (num / den[..., None]).astype(DTYPE).reshape(b, d_inner)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return (y @ p["down_proj"]["w"])[:, None], C, norm_n

@@ -1,0 +1,196 @@
+"""Roofline terms from a compiled dry-run artifact (assignment §ROOFLINE).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+parsed from the HLO text (cost_analysis does not expose them): we sum the
+result-shape bytes of every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# one result shape: bf16[128,4096]{1,0:T(8,128)} etc.
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\(?[^=]*?\)?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shapes_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of result bytes per collective kind (whole program, all devices'
+    logical tensors — i.e. per-participant payload of each op)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        if "-done(" in m.group(0):
+            continue  # avoid double-counting async pairs
+        out[kind] += _shape_bytes(shapes)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All byte/FLOP inputs are PER-DEVICE: jax's compiled.cost_analysis()
+    reports the SPMD per-device module (verified empirically: an 8-way
+    sharded matmul reports 1/8 of the logical FLOPs), and the HLO text the
+    collective bytes are parsed from is likewise the per-device program."""
+
+    flops: float                   # per-device HLO FLOPs
+    hbm_bytes: float               # per-device bytes accessed
+    coll_bytes: float              # per-device collective payload bytes
+    chips: int
+    model_flops: float = 0.0       # GLOBAL 6*N_active*D (train) / 2*N_active*D
+    per_device_hbm: Optional[float] = None  # peak bytes from memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / hw.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / hw.ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS share per device / compiled per-device FLOPs."""
+        return (self.model_flops / self.chips) / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / achievable step time (bound = max term)."""
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        if bound <= 0:
+            return 0.0
+        return (self.model_flops / self.chips / hw.PEAK_FLOPS_BF16) / bound
+
+    def to_dict(self):
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "per_device_hbm": self.per_device_hbm,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_compiled(compiled, chips: int, model_flops: float = 0.0) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    coll = collective_bytes(text)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(
+            getattr(ma, "temp_size_in_bytes", 0)
+            + getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+        )
+    except Exception:
+        pass
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=float(sum(coll.values())),
+        chips=chips,
+        model_flops=model_flops,
+        per_device_hbm=mem,
+    )
+
+
+def count_params(shape_tree, exclude_substrings=("embed",)) -> dict:
+    """Param counts from an eval_shape tree: total, embedding, expert."""
+    import jax
+
+    total = emb = expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shape_tree)[0]:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        n = int(np.prod(leaf.shape))
+        total += n
+        if any(s in pstr.lower() for s in exclude_substrings):
+            emb += n
+        if "experts" in pstr.lower():
+            expert += n
+    return {"total": total, "embedding": emb, "experts": expert}
+
+
+def model_flops_for(cfg, shape, params_shape_tree) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (serve),
+    N_active excluding embeddings and inactive experts."""
+    counts = count_params(params_shape_tree)
+    n = counts["total"] - counts["embedding"]
+    if cfg.n_experts:
+        active_frac = (cfg.top_k + cfg.n_shared_experts) / max(
+            cfg.n_experts + cfg.n_shared_experts, 1
+        )
+        n = n - counts["experts"] + counts["experts"] * active_frac
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

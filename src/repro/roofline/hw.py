@@ -1,0 +1,6 @@
+"""Target hardware constants (TPU v5e-class, assignment §ROOFLINE)."""
+
+PEAK_FLOPS_BF16 = 197e12       # per chip, FLOP/s
+HBM_BW = 819e9                 # per chip, B/s
+ICI_BW = 50e9                  # per link, B/s
+HBM_BYTES = 16 * 2**30         # per chip

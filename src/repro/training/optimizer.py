@@ -1,0 +1,140 @@
+"""Sharded AdamW with ZeRO-1-style state sharding (no optax dependency).
+
+Master weights + first/second moments are fp32 and carry their own
+PartitionSpecs: optimizer state is sharded over BOTH the FSDP axes and the
+tensor axis (one extra dim vs. the bf16 compute params), so per-chip
+optimizer memory is params_bytes*12/(fsdp*tp) — the ZeRO trick expressed
+through GSPMD shardings rather than hand-written reduce-scatters.
+
+Gradient cross-pod compression: grads are reduced in bf16 (matching param
+dtype) and promoted to fp32 only inside the update — the standard
+bandwidth-halving trick; toggle with ``fp32_grad_reduce``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    fp32_grad_reduce: bool = False   # False = bf16 cross-pod reduce (compressed)
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray      # () int32
+    master: Any            # fp32 master weights
+    m: Any                 # fp32 first moment
+    v: Any                 # fp32 second moment
+
+
+def init_opt_state(params) -> OptState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def lr_at(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+
+
+def apply_update(cfg: AdamWConfig, params, grads, state: OptState):
+    """One AdamW step; returns (new bf16 params, new state, metrics)."""
+    gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gsq = sum(jnp.sum(g * g) for g in jax.tree.leaves(gf))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = lr_at(cfg, step.astype(jnp.float32))
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(master, m, v, g):
+        g = g * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        decay = cfg.weight_decay if master.ndim >= 2 else 0.0
+        master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + decay * master)
+        return master, m, v
+
+    flat_master, tdef = jax.tree.flatten(state.master)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_g = jax.tree.leaves(gf)
+    new = [upd(a, b, c, d) for a, b, c, d in zip(flat_master, flat_m, flat_v, flat_g)]
+    master = jax.tree.unflatten(tdef, [x[0] for x in new])
+    m = jax.tree.unflatten(tdef, [x[1] for x in new])
+    v = jax.tree.unflatten(tdef, [x[2] for x in new])
+
+    params_dtype = jax.tree.leaves(params)[0].dtype
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    del params_dtype
+    return new_params, OptState(step=step, master=master, m=m, v=v), {
+        "grad_norm": gnorm,
+        "lr": lr,
+    }
+
+
+def opt_state_specs(param_specs, params_struct=None, mesh=None,
+                    fsdp_axes=("data",)) -> OptState:
+    """ZeRO-1 optimizer-state PartitionSpecs: start from the param spec and
+    additionally shard the first unsharded, divisible dim over the data
+    axes. GSPMD then reduce-scatters grads into the shard domain for the
+    update and all-gathers the bf16 params ONCE per step — the ZeRO-1
+    schedule with no hand-written collectives."""
+    from jax.sharding import PartitionSpec
+
+    if params_struct is None or mesh is None:
+        states = param_specs
+    else:
+        import numpy as np
+
+        fs = int(np.prod([mesh.shape[a] for a in fsdp_axes]))
+        fsdp = tuple(fsdp_axes)
+
+        def extend(spec, leaf):
+            parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+            used = {a for p in parts if p for a in (p if isinstance(p, tuple) else (p,))}
+            if used & set(fsdp):
+                return PartitionSpec(*parts)   # already data-sharded (experts)
+            for i, (s, dim) in enumerate(zip(parts, leaf.shape)):
+                if s is None and fs > 1 and dim % fs == 0 and dim >= fs:
+                    parts[i] = fsdp
+                    break
+            return PartitionSpec(*parts)
+
+        states = jax.tree.map(
+            extend, param_specs, params_struct,
+            is_leaf=lambda x: isinstance(x, PartitionSpec),
+        )
+    return OptState(
+        step=PartitionSpec(),
+        master=states,
+        m=states,
+        v=states,
+    )

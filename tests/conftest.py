@@ -1,0 +1,3 @@
+import warnings
+
+warnings.filterwarnings("ignore", category=UserWarning)

@@ -1,0 +1,50 @@
+"""TLV / TLP paradigm baselines (paper §3.2): cost-model sanity."""
+import numpy as np
+
+from repro.core import EngineConfig, graph as G, run
+from repro.core.apps import FSMApp, MotifsApp
+from repro.core.baselines.bruteforce import enumerate_vertex_embeddings
+from repro.core.baselines.tlp import run_tlp_fsm
+from repro.core.baselines.tlv import run_tlv
+
+
+def test_tlv_explores_same_embeddings():
+    g = G.random_labeled(40, 90, n_labels=2, seed=1)
+    rep = run_tlv(g, max_size=3)
+    oracle = enumerate_vertex_embeddings(g, 3)
+    expected = sum(len(v) for v in oracle.values())
+    assert rep.n_embeddings == expected
+
+
+def test_tlv_message_blowup():
+    """The paper's point: every embedding is replicated to each border
+    vertex, so messages >> embeddings, with hot high-degree vertices."""
+    g = G.citeseer_like(scale=0.05)
+    rep = run_tlv(g, max_size=3)
+    assert rep.n_messages > rep.n_embeddings          # duplication
+    assert rep.max_vertex_load > 10 * rep.mean_vertex_load  # hotspots
+
+
+def test_tlp_speedup_bound_saturates():
+    """Few hot patterns cap TLP's parallel speedup well below #workers —
+    the paper's example: unlabeled motifs at depth 3 have only 2 patterns,
+    so throwing workers at patterns cannot scale (Fig. 7 discussion)."""
+    g = G.random_labeled(120, 400, n_labels=1, seed=2)  # unlabeled: few patterns
+    rep = run_tlp_fsm(g, support=5, max_size=3)
+    b5, b20, b80 = (rep.speedup_bound(w) for w in (5, 20, 80))
+    assert b5 <= 5.0 + 1e-9 and b20 <= 20.0 + 1e-9
+    # skewed few-pattern work: speedup saturates near #patterns
+    n_heavy = sum(1 for w in rep.pattern_work.values()
+                  if w > 0.01 * sum(rep.pattern_work.values()))
+    assert b80 < max(n_heavy * 2, 8)
+    assert b80 < 80 * 0.5  # far from linear
+
+
+def test_tle_vs_tlv_work_ratio():
+    """Arabesque (TLE) does strictly less communication-equivalent work:
+    its exploration is coordination-free; TLV pays per-border messages."""
+    g = G.random_labeled(60, 150, n_labels=2, seed=3)
+    res = run(g, MotifsApp(max_size=3), EngineConfig())
+    tlv = run_tlv(g, max_size=3)
+    assert res.stats.total_embeddings == tlv.n_embeddings
+    assert tlv.n_messages > 2 * tlv.n_embeddings

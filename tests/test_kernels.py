@@ -1,0 +1,121 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp
+oracle, assert_allclose per the assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph as G, to_device
+from repro.kernels.canonical_check import canonical_check
+from repro.kernels.canonical_check.ref import canonical_check_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm import rmsnorm
+from repro.models.layers import rmsnorm as rmsnorm_oracle
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "bh,sq,sk,d,causal",
+    [
+        (2, 128, 128, 64, True),
+        (2, 256, 256, 64, True),
+        (1, 128, 256, 128, False),
+        (3, 256, 256, 128, True),
+    ],
+)
+def test_flash_attention_matches_ref(bh, sq, sk, d, causal, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (bh, sq, d), dtype)
+    k = jax.random.normal(k2, (bh, sk, d), dtype)
+    v = jax.random.normal(k3, (bh, sk, d), dtype)
+    out = flash_attention_bhsd(q, k, v, causal=causal, block_q=128, block_k=128)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_gqa_wrapper():
+    b, s, h, kv, d = 2, 128, 8, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32)
+    out = flash_attention(q, k, v)
+    # oracle: expand kv heads then per-head ref
+    kk = jnp.repeat(k, h // kv, axis=2)
+    vv = jnp.repeat(v, h // kv, axis=2)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+        kk.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+        vv.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+    ).reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_blocks_dont_matter():
+    bh, s, d = 2, 256, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q, k, v = (jax.random.normal(kk, (bh, s, d), jnp.float32) for kk in ks)
+    o1 = flash_attention_bhsd(q, k, v, block_q=128, block_k=128)
+    o2 = flash_attention_bhsd(q, k, v, block_q=64, block_k=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# canonical check kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,n,m,k", [(0, 40, 90, 4), (1, 120, 400, 5), (2, 60, 60, 3)])
+def test_canonical_check_matches_engine(seed, n, m, k):
+    g = G.random_labeled(n, m, n_labels=2, seed=seed)
+    dg = to_device(g)
+    rng = np.random.default_rng(seed)
+    b = 1000
+    members = np.full((b, k), -1, np.int32)
+    n_valid = rng.integers(1, k + 1, b).astype(np.int32)
+    for i in range(b):
+        members[i, : n_valid[i]] = rng.choice(n, size=n_valid[i], replace=False)
+    cand = rng.integers(0, n, b).astype(np.int32)
+
+    got = canonical_check(
+        dg, jnp.asarray(members), jnp.asarray(n_valid), jnp.asarray(cand), block_b=256
+    )
+    want = canonical_check_ref(dg, jnp.asarray(members), jnp.asarray(n_valid), jnp.asarray(cand))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_canonical_check_padding_path():
+    g = G.random_labeled(30, 60, n_labels=1, seed=3)
+    dg = to_device(g)
+    members = jnp.asarray([[0, 5, -1], [2, 7, 9]], jnp.int32)
+    n_valid = jnp.asarray([2, 3], jnp.int32)
+    cand = jnp.asarray([11, 1], jnp.int32)
+    got = canonical_check(dg, members, n_valid, cand, block_b=1024)
+    want = canonical_check_ref(dg, members, n_valid, cand)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 256, 512), (2, 100, 64), (1, 7, 128)])
+def test_rmsnorm_matches_ref(shape, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, shape, dtype)
+    scale = (1.0 + 0.1 * jax.random.normal(k2, shape[-1:], jnp.float32)).astype(dtype)
+    got = rmsnorm(x, scale)
+    want = rmsnorm_oracle(x, scale)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )

@@ -1,0 +1,155 @@
+"""Per-arch smoke tests (assignment requirement): reduced same-family
+config, one forward/train step on CPU, output shapes + no NaNs; plus
+decode-vs-forward consistency for representative families."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import ARCHS
+from repro.models import build_model
+
+SMOKE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+RNG = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_reduced_forward_and_decode(name):
+    cfg = ARCHS[name].reduced()
+    m = build_model(cfg)
+    params = m.init(RNG)
+    batch = m.make_batch(SMOKE, RNG)
+    loss = m.loss(params, batch)
+    assert np.isfinite(float(loss)), f"{name}: non-finite loss"
+    assert float(loss) > 0
+
+    cache = m.init_cache(2, SMOKE.seq_len)
+    logits, cache2 = m.decode_step(
+        params, cache, jnp.zeros((2, 1), jnp.int32), jnp.int32(0)
+    )
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # cache structurally unchanged
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_reduced_train_step_decreases_loss(name):
+    """One SGD step on repeated data must reduce the loss (checks grads
+    flow through every family's block structure)."""
+    cfg = ARCHS[name].reduced()
+    m = build_model(cfg)
+    params = m.init(RNG)
+    batch = m.make_batch(SMOKE, RNG)
+
+    loss0, grads = jax.value_and_grad(m.loss)(params, batch)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    )
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0, f"{name}: dead grads"
+    params2 = jax.tree.map(
+        lambda p, g: (p - (0.5 / jnp.maximum(gnorm, 1.0)) * g).astype(p.dtype),
+        params,
+        grads,
+    )
+    loss1 = m.loss(params2, batch)
+    assert float(loss1) < float(loss0), f"{name}: {loss0} -> {loss1}"
+
+
+@pytest.mark.parametrize("name", ["stablelm-1.6b", "qwen2.5-14b", "deepseek-v2-236b"])
+def test_decode_matches_forward(name):
+    """Token-by-token decode with KV cache reproduces the full-sequence
+    forward logits. GQA matches tightly; MLA decode uses the absorbed-weight
+    formulation (q @ W_uk vs W_uk @ c_kv — different bf16 associativity), so
+    per-layer noise ~0.03 compounds over depth and gets a looser bound; the
+    single-layer agreement is checked separately below."""
+    cfg = dataclasses.replace(ARCHS[name].reduced(), remat=False)
+    m = build_model(cfg)
+    params = m.init(RNG)
+    s = 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, s), 0, cfg.vocab)
+    full = np.asarray(m.impl.forward(params, tokens), np.float32)
+
+    cache = m.init_cache(2, s)
+    outs = []
+    for t in range(s):
+        logits, cache = m.decode_step(params, cache, tokens[:, t : t + 1], jnp.int32(t))
+        outs.append(np.asarray(logits[:, 0], np.float32))
+    dec = np.stack(outs, axis=1)
+    if ARCHS[name].use_mla:
+        # absorbed-weight decode: bf16 associativity noise compounds over
+        # depth; require near-perfect logit correlation + argmax agreement
+        corr = np.corrcoef(dec.ravel(), full.ravel())[0, 1]
+        assert corr > 0.995, corr
+        agree = (dec.argmax(-1) == full.argmax(-1)).mean()
+        assert agree > 0.9, agree
+    else:
+        np.testing.assert_allclose(dec, full, rtol=3e-2, atol=3e-2)
+
+
+def test_mla_decode_matches_forward_single_layer():
+    """Absorbed-weight MLA decode == materialised-KV forward within bf16
+    noise when depth amplification is excluded."""
+    cfg = dataclasses.replace(
+        ARCHS["deepseek-v2-236b"].reduced(), remat=False, n_layers=1,
+        first_dense_layers=0,
+    )
+    m = build_model(cfg)
+    params = m.init(RNG)
+    s = 6
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, s), 0, cfg.vocab)
+    full = np.asarray(m.impl.forward(params, tokens), np.float32)
+    cache = m.init_cache(2, s)
+    outs = []
+    for t in range(s):
+        logits, cache = m.decode_step(params, cache, tokens[:, t : t + 1], jnp.int32(t))
+        outs.append(np.asarray(logits[:, 0], np.float32))
+    dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, full, rtol=5e-2, atol=5e-2)
+
+
+def test_decode_matches_forward_ssm():
+    """Chunkwise-parallel mLSTM/Mamba2 forward == recurrent decode."""
+    for name in ["xlstm-1.3b", "zamba2-2.7b"]:
+        cfg = dataclasses.replace(
+            ARCHS[name].reduced(), remat=False, ssm_chunk=4, sliding_window_long=10 ** 9
+        )
+        m = build_model(cfg)
+        params = m.init(RNG)
+        s = 16
+        tokens = jax.random.randint(jax.random.PRNGKey(2), (2, s), 0, cfg.vocab)
+        full = np.asarray(m.impl.forward(params, tokens), np.float32)
+        cache = m.init_cache(2, s)
+        outs = []
+        for t in range(s):
+            logits, cache = m.decode_step(
+                params, cache, tokens[:, t : t + 1], jnp.int32(t)
+            )
+            outs.append(np.asarray(logits[:, 0], np.float32))
+        dec = np.stack(outs, axis=1)
+        # chunked-parallel (bf16 matmul accum) vs recurrent (f32 state)
+        # agree to bf16 noise; check tight correlation + loose elementwise
+        corr = np.corrcoef(dec.ravel(), full.ravel())[0, 1]
+        assert corr > 0.998, (name, corr)
+        diff = np.abs(dec - full)
+        assert diff.mean() < 0.05, (name, diff.mean())
+        assert np.quantile(diff, 0.99) < 0.25, (name, np.quantile(diff, 0.99))
+
+
+def test_exact_assigned_configs():
+    """The full configs carry the assignment's exact numbers."""
+    a = ARCHS["deepseek-v2-236b"]
+    assert (a.n_layers, a.d_model, a.n_heads, a.vocab) == (60, 5120, 128, 102400)
+    assert (a.n_experts, a.top_k, a.kv_lora) == (160, 6, 512)
+    a = ARCHS["yi-34b"]
+    assert (a.n_layers, a.d_model, a.n_heads, a.n_kv_heads, a.d_ff, a.vocab) == (
+        60, 7168, 56, 8, 20480, 64000,
+    )
+    a = ARCHS["qwen2.5-14b"]
+    assert a.qkv_bias and a.vocab == 152064
+    a = ARCHS["xlstm-1.3b"]
+    assert a.d_ff == 0 and a.family == "ssm"
+    assert len(ARCHS) == 10

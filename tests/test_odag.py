@@ -1,0 +1,87 @@
+"""ODAG tests (paper §5.2): exact roundtrip, spurious filtering, merge,
+compression, cost-annotated partitioning (§5.3)."""
+import numpy as np
+
+from repro.core import EngineConfig, graph as G, run, to_device
+from repro.core import odag
+from repro.core.apps import FSMApp, MotifsApp
+
+
+def _frontier(g, app, size):
+    res = run(g, app, EngineConfig(chunk_size=2048, initial_capacity=2048))
+    return res.embeddings[size]
+
+
+def test_build_extract_roundtrip_vertex():
+    g = G.random_labeled(80, 200, n_labels=2, seed=1)
+    emb = _frontier(g, MotifsApp(max_size=4, collect_embeddings=True), 4)
+    o = odag.build(emb)
+    ext = odag.extract(to_device(g), o)
+    assert set(map(tuple, emb.tolist())) == set(map(tuple, ext.tolist()))
+    assert len(ext) == len(emb)  # no spurious survivors, no duplicates
+
+
+def test_build_extract_roundtrip_edge():
+    g = G.random_labeled(40, 90, n_labels=2, seed=3)
+    emb = _frontier(
+        g, FSMApp(support=1, max_size=3, collect_embeddings=True), 3
+    )
+    o = odag.build(emb)
+    ext = odag.extract(to_device(g), o, mode="edge")
+    assert set(map(tuple, emb.tolist())) == set(map(tuple, ext.tolist()))
+
+
+def test_odag_encodes_superset():
+    """Figure 6's point: path enumeration without filtering produces
+    spurious embeddings."""
+    g = G.triangle_plus_tail()
+    emb = _frontier(g, MotifsApp(max_size=3, collect_embeddings=True), 3)
+    o = odag.build(emb)
+    assert o.path_upper_bound() >= len(emb)
+
+
+def test_odag_compresses(tmp_path):
+    g = G.random_labeled(100, 300, n_labels=1, seed=2)
+    emb = _frontier(g, MotifsApp(max_size=4, collect_embeddings=True), 4)
+    o = odag.build(emb)
+    assert o.n_bytes < emb.size * 4 / 5  # >5x on this density
+
+
+def test_merge_equals_joint_build():
+    g = G.random_labeled(60, 150, n_labels=1, seed=5)
+    emb = _frontier(g, MotifsApp(max_size=3, collect_embeddings=True), 3)
+    half = len(emb) // 2
+    merged = odag.merge([odag.build(emb[:half]), odag.build(emb[half:])])
+    joint = odag.build(emb)
+    assert [d.tolist() for d in merged.domains] == [d.tolist() for d in joint.domains]
+    assert all((a == b).all() for a, b in zip(merged.conn, joint.conn))
+
+
+def test_dense_merge_and_extract():
+    g = G.random_labeled(60, 150, n_labels=1, seed=6)
+    dg = to_device(g)
+    emb = _frontier(g, MotifsApp(max_size=3, collect_embeddings=True), 3)
+    half = len(emb) // 2
+    d1 = odag.build_dense(emb[:half], g.n, 3)
+    d2 = odag.build_dense(emb[half:], g.n, 3)
+    merged = odag.DenseODAG(
+        k=3,
+        domain_bits=d1.domain_bits | d2.domain_bits,
+        conn_bits=d1.conn_bits | d2.conn_bits,
+    )
+    ext = odag.extract(dg, odag.dense_to_ragged(merged))
+    assert set(map(tuple, emb.tolist())) == set(map(tuple, ext.tolist()))
+
+
+def test_cost_estimate_partitions_evenly():
+    """§5.3: the path-count annotation bounds real extraction work."""
+    g = G.random_labeled(80, 250, n_labels=1, seed=7)
+    emb = _frontier(g, MotifsApp(max_size=3, collect_embeddings=True), 3)
+    o = odag.build(emb)
+    ub = o.path_upper_bound()
+    assert ub >= len(emb)
+    # per-first-element costs sum to the total (the §5.3 partitioning basis)
+    cost = np.ones(len(o.domains[-1]), dtype=np.int64)
+    for c in reversed(o.conn):
+        cost = c @ cost
+    assert int(cost.sum()) == ub

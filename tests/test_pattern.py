@@ -1,0 +1,114 @@
+"""Quick/canonical pattern invariants (paper §5.4)."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import networkx as nx
+
+from repro.core import graph as G, run, EngineConfig, to_device
+from repro.core import pattern as pl
+from repro.core.apps import MotifsApp
+
+
+def test_encode_decode_roundtrip():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        nv = int(rng.integers(1, 8))
+        adj = rng.random((nv, nv)) < 0.4
+        adj = np.triu(adj, 1)
+        adj = adj | adj.T
+        labels = rng.integers(0, 200, nv)
+        code = pl.encode(nv, adj, labels)
+        nv2, adj2, lab2 = pl.decode(code)
+        assert nv2 == nv and (adj2 == adj).all() and (lab2 == labels).all()
+
+
+def test_canonical_code_is_isomorphism_invariant():
+    """Permuting a pattern's vertices never changes its canonical code."""
+    rng = np.random.default_rng(1)
+    for _ in range(25):
+        nv = int(rng.integers(2, 6))
+        adj = rng.random((nv, nv)) < 0.5
+        adj = np.triu(adj, 1)
+        adj = adj | adj.T
+        labels = rng.integers(0, 3, nv)
+        base, _ = pl.canonicalize_one(pl.encode(nv, adj, labels))
+        for perm in itertools.permutations(range(nv)):
+            perm = np.array(perm)
+            c2, _ = pl.canonicalize_one(
+                pl.encode(nv, adj[np.ix_(perm, perm)], labels[perm])
+            )
+            assert c2 == base
+
+
+def test_canonical_codes_distinguish_nonisomorphic():
+    """Canonical equality <-> networkx isomorphism on random small patterns."""
+    rng = np.random.default_rng(2)
+    pats = []
+    for _ in range(30):
+        nv = int(rng.integers(2, 5))
+        adj = rng.random((nv, nv)) < 0.5
+        adj = np.triu(adj, 1)
+        adj = adj | adj.T
+        labels = rng.integers(0, 2, nv)
+        code, _ = pl.canonicalize_one(pl.encode(nv, adj, labels))
+        gg = pl.pattern_to_networkx(np.array(code))
+        pats.append((code, gg))
+    nm = nx.algorithms.isomorphism.categorical_node_match("label", 0)
+    for (c1, g1), (c2, g2) in itertools.combinations(pats, 2):
+        iso = nx.is_isomorphic(g1, g2, node_match=nm)
+        assert iso == (c1 == c2)
+
+
+def test_quick_pattern_reduction_factor():
+    """Table 4's shape: #quick patterns << #embeddings, and #canonical <=
+    #quick (measured on a lightly-labeled graph like the paper's motif
+    datasets; uniform-random 29-label graphs are the adversarial case)."""
+    g = G.random_labeled(300, 3000, n_labels=2, seed=11)
+    res = run(g, MotifsApp(max_size=3), EngineConfig(chunk_size=4096, initial_capacity=4096))
+    st = res.stats.steps[-1]
+    assert st.n_quick_patterns >= st.n_canonical_patterns >= 1
+    assert st.n_frontier > 100 * st.n_quick_patterns  # orders-of-magnitude gap
+    assert st.n_iso_checks == st.n_quick_patterns
+
+
+def test_automorphism_orbits_path_and_triangle():
+    # path a-b-c: endpoints share an orbit, middle alone
+    code = pl.encode(3, np.array([[0, 1, 0], [1, 0, 1], [0, 1, 0]], bool), np.zeros(3, int))
+    orb = pl.automorphism_orbits(code)
+    assert orb[0] == orb[2] != orb[1]
+    # triangle: single orbit
+    code = pl.encode(3, ~np.eye(3, dtype=bool), np.zeros(3, int))
+    orb = pl.automorphism_orbits(code)
+    assert orb[0] == orb[1] == orb[2]
+    # labeled path with distinct end labels: no symmetry
+    code = pl.encode(3, np.array([[0, 1, 0], [1, 0, 1], [0, 1, 0]], bool), np.array([1, 0, 2]))
+    orb = pl.automorphism_orbits(code)
+    assert len({orb[0], orb[1], orb[2]}) == 3
+
+
+def test_quick_pattern_vertex_device_matches_host():
+    g = G.random_labeled(30, 70, n_labels=4, seed=4)
+    dg = to_device(g)
+    from repro.core.baselines.bruteforce import enumerate_vertex_embeddings
+    from repro.core import canonical
+
+    adj = [set() for _ in range(g.n)]
+    for u, v in g.edges:
+        adj[int(u)].add(int(v))
+        adj[int(v)].add(int(u))
+
+    embs = list(enumerate_vertex_embeddings(g, 3)[3])[:64]
+    orders = [
+        canonical.canonical_order_vertices(lambda a, b: b in adj[a], e) for e in embs
+    ]
+    members = jnp.asarray(np.array(orders, np.int32))
+    qp = pl.quick_pattern_vertex(dg, members, jnp.full((len(orders),), 3, jnp.int32))
+    for i, order in enumerate(orders):
+        nv, dadj, dlab = pl.decode(np.asarray(qp.codes[i]))
+        assert nv == 3
+        assert (dlab == g.labels[np.array(order)]).all()
+        for a in range(3):
+            for b in range(3):
+                if a != b:
+                    assert dadj[a, b] == (order[b] in adj[order[a]])

@@ -1,0 +1,169 @@
+"""Hypothesis property tests for the paper's Appendix theorems.
+
+Invariants under test:
+  * Uniqueness (Thm 3): among all visit orders of a connected vertex set,
+    exactly one passes the incremental check at every prefix.
+  * The accepted order equals the greedy construction of Thm 3.
+  * Extendibility (Thm 2): the canonical automorphism of a child extends the
+    canonical parent.
+  * Completeness (Thm 4): engine exploration visits exactly the oracle's
+    embedding sets (via the set-equality integration test).
+"""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import canonical, graph as G, to_device
+
+
+@st.composite
+def small_graph(draw):
+    n = draw(st.integers(min_value=2, max_value=9))
+    possible = [(i, j) for i in range(n) for j in range(i + 1, n)]
+    mask = draw(st.lists(st.booleans(), min_size=len(possible), max_size=len(possible)))
+    edges = [e for e, m in zip(possible, mask) if m]
+    if not edges:
+        edges = [possible[0]]
+    labels = draw(
+        st.lists(st.integers(0, 3), min_size=n, max_size=n)
+    )
+    return G.Graph(n=n, labels=np.array(labels), edges=np.array(edges))
+
+
+def _incremental_accepts(dg, order):
+    """Run Alg. 2 over every prefix of a visit order."""
+    k = len(order)
+    for i in range(1, k):
+        members = jnp.full((1, k), -1, jnp.int32)
+        members = members.at[0, :i].set(jnp.asarray(order[:i], jnp.int32))
+        ok = canonical.vertex_check(
+            dg, members, jnp.array([i], jnp.int32), jnp.array([order[i]], jnp.int32)
+        )
+        if not bool(ok[0]):
+            return False
+    return True
+
+
+def _connected_orders(adj_sets, vs):
+    """All visit orders of vertex set vs where each vertex attaches to the
+    prefix (the only orders exploration can produce)."""
+    orders = []
+    for perm in itertools.permutations(vs):
+        ok = True
+        for i in range(1, len(perm)):
+            if not any(perm[j] in adj_sets[perm[i]] for j in range(i)):
+                ok = False
+                break
+        if ok:
+            orders.append(perm)
+    return orders
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_graph(), st.integers(0, 10_000))
+def test_uniqueness_thm3(g, pick):
+    dg = to_device(g)
+    adj = [set() for _ in range(g.n)]
+    for u, v in g.edges:
+        adj[int(u)].add(int(v))
+        adj[int(v)].add(int(u))
+
+    # pick a random connected vertex set by greedy growth
+    rng = np.random.default_rng(pick)
+    size = int(rng.integers(2, 5))
+    emb = {int(rng.integers(0, g.n))}
+    for _ in range(size - 1):
+        border = set().union(*(adj[v] for v in emb)) - emb
+        if not border:
+            break
+        emb.add(int(rng.choice(sorted(border))))
+    if len(emb) < 2:
+        return
+
+    orders = _connected_orders(adj, sorted(emb))
+    accepted = [o for o in orders if _incremental_accepts(dg, list(o))]
+    assert len(accepted) == 1, (emb, accepted)
+
+    # the accepted order is the greedy Thm-3 construction
+    ref = canonical.canonical_order_vertices(
+        lambda a, b: b in adj[a], emb
+    )
+    assert list(accepted[0]) == ref
+
+
+@settings(max_examples=25, deadline=None)
+@given(small_graph())
+def test_extendibility_thm2(g):
+    """For every canonical embedding of size k>=2, dropping its last visited
+    vertex that keeps it connected yields... equivalently: the canonical
+    order's every prefix is itself canonical (the check is incremental), so
+    the canonical child extends a canonical parent."""
+    dg = to_device(g)
+    adj = [set() for _ in range(g.n)]
+    for u, v in g.edges:
+        adj[int(u)].add(int(v))
+        adj[int(v)].add(int(u))
+    from repro.core.baselines.bruteforce import enumerate_vertex_embeddings
+
+    levels = enumerate_vertex_embeddings(g, 4)
+    for k in (3, 4):
+        for emb in list(levels[k])[:30]:
+            order = canonical.canonical_order_vertices(lambda a, b: b in adj[a], emb)
+            if order is None:
+                continue
+            assert _incremental_accepts(dg, order)
+            # every prefix is canonical for its own vertex set
+            for i in range(2, len(order)):
+                prefix_ref = canonical.canonical_order_vertices(
+                    lambda a, b: b in adj[a], order[:i]
+                )
+                assert prefix_ref == order[:i]
+
+
+@settings(max_examples=20, deadline=None)
+@given(small_graph())
+def test_edge_canonicality_uniqueness(g):
+    """Edge-mode analogue: exactly one attach-connected edge order per edge
+    set passes the incremental edge check."""
+    dg = to_device(g)
+    from repro.core.baselines.bruteforce import enumerate_edge_embeddings
+
+    levels = enumerate_edge_embeddings(g, 3)
+    edge_uv = [tuple(int(x) for x in e) for e in g.edges]
+
+    def shares(e1, e2):
+        return bool(set(edge_uv[e1]) & set(edge_uv[e2]))
+
+    for k in (2, 3):
+        for emb in list(levels[k])[:40]:
+            es = sorted(emb)
+            accepted = []
+            for perm in itertools.permutations(es):
+                # attach-connectivity
+                ok = all(
+                    any(shares(perm[i], perm[j]) for j in range(i))
+                    for i in range(1, k)
+                )
+                if not ok:
+                    continue
+                passes = True
+                for i in range(1, k):
+                    members = jnp.full((1, k), -1, jnp.int32)
+                    members = members.at[0, :i].set(jnp.asarray(perm[:i], jnp.int32))
+                    r = canonical.edge_check(
+                        dg,
+                        members,
+                        jnp.array([i], jnp.int32),
+                        jnp.array([perm[i]], jnp.int32),
+                    )
+                    if not bool(r[0]):
+                        passes = False
+                        break
+                if passes:
+                    accepted.append(perm)
+            assert len(accepted) == 1, (es, accepted)
+            assert list(accepted[0]) == canonical.canonical_order_edges(
+                edge_uv, es
+            )

@@ -1,0 +1,128 @@
+"""Roofline analysis unit tests: HLO collective parser, term math, and the
+scan-body-once behaviour that motivates the depth extrapolation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import hw
+from repro.roofline.analysis import Roofline, collective_bytes, _shape_bytes
+
+
+HLO_SAMPLE = """
+  %all-reduce.5 = f32[16,4096]{1,0} all-reduce(%x), replica_groups=[]
+  %ag = bf16[256,1024]{1,0} all-gather(%y), dimensions={0}
+  %rs = (f32[128]{0}, f32[128]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %done = f32[16,4096]{1,0} all-reduce-done(%start)
+  %a2a = s32[64,32]{1,0} all-to-all(%z), dimensions={1}
+  %cp = bf16[8,128]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %notacoll = f32[999]{0} add(%p, %q)
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,4096]") == 16 * 4096 * 4
+    assert _shape_bytes("bf16[256,1024]") == 256 * 1024 * 2
+    assert _shape_bytes("(f32[128], f32[128])") == 2 * 128 * 4
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_collective_parser():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-reduce"] == 16 * 4096 * 4          # -done skipped
+    assert out["all-gather"] == 256 * 1024 * 2
+    assert out["reduce-scatter"] == 2 * 128 * 4
+    assert out["all-to-all"] == 64 * 32 * 4
+    assert out["collective-permute"] == 8 * 128 * 2
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(
+        flops=hw.PEAK_FLOPS_BF16,      # 1 second of compute
+        hbm_bytes=hw.HBM_BW * 2,       # 2 seconds of memory
+        coll_bytes=hw.ICI_BW * 0.5,    # 0.5 seconds of collectives
+        chips=256,
+        model_flops=hw.PEAK_FLOPS_BF16 * 256 * 0.5,  # 0.5 s useful / device
+    )
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.bottleneck == "memory"
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+    assert r.roofline_fraction == pytest.approx(0.25)  # 0.5s useful / 2s bound
+
+
+def test_scan_body_counted_once():
+    """The empirical fact behind the dry-run's depth extrapolation."""
+
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def scanned(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    c = jax.jit(scanned).lower(x, ws).compile()
+    ca = c.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca
+    one_body = 2 * 128 * 256 * 256
+    assert ca["flops"] < 2 * one_body  # counted once, not x8
+
+
+def test_unrolled_cost_is_affine_in_depth():
+    """cost(L) = a + b*L for unrolled models — the extrapolation's premise."""
+
+    def make(n):
+        def f(x, ws):
+            for i in range(n):
+                x = jnp.tanh(x @ ws[i])
+            return x.sum()
+        return f
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((6, 128, 128), jnp.float32)
+    fl = []
+    for n in (1, 2, 4):
+        c = jax.jit(make(n)).lower(x, ws).compile()
+        ca = c.cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else ca
+        fl.append(float(ca["flops"]))
+    slope1 = fl[1] - fl[0]
+    slope2 = (fl[2] - fl[1]) / 2
+    assert slope1 == pytest.approx(slope2, rel=0.05)
+
+
+def test_model_flops_formula():
+    from repro.configs.base import SHAPE_BY_NAME
+    from repro.configs.registry import get_arch
+    from repro.models import build_model
+    from repro.roofline.analysis import count_params, model_flops_for
+
+    cfg = get_arch("smollm-135m")
+    m = build_model(cfg)
+    ps = m.init_shapes(jax.random.PRNGKey(0))
+    counts = count_params(ps)
+    # ~135M params total (embeddings two-sided: vocab*d*2 = 56.6M)
+    assert 100e6 < counts["total"] < 200e6
+    mf_train = model_flops_for(cfg, SHAPE_BY_NAME["train_4k"], ps)
+    mf_dec = model_flops_for(cfg, SHAPE_BY_NAME["decode_32k"], ps)
+    n = counts["total"] - counts["embedding"]
+    assert mf_train == pytest.approx(6 * n * 256 * 4096)
+    assert mf_dec == pytest.approx(2 * n * 128)
+
+
+def test_moe_active_fraction():
+    from repro.configs.base import SHAPE_BY_NAME
+    from repro.configs.registry import get_arch
+    from repro.models import build_model
+    from repro.roofline.analysis import count_params, model_flops_for
+
+    cfg = get_arch("deepseek-v2-236b")
+    m = build_model(cfg)
+    ps = m.init_shapes(jax.random.PRNGKey(0))
+    counts = count_params(ps)
+    assert counts["total"] > 200e9  # ~236B
+    mf = model_flops_for(cfg, SHAPE_BY_NAME["train_4k"], ps)
+    dense_equiv = 6 * (counts["total"] - counts["embedding"]) * 256 * 4096
+    assert mf < dense_equiv * 0.2  # top-6 of 160: only ~5% of experts active
