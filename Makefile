@@ -1,0 +1,21 @@
+# Tier-1 verify and convenience targets. PYTHONPATH=src mirrors ROADMAP.md.
+
+PY := PYTHONPATH=src python
+
+.PHONY: test test-fast bench bench-smoke
+
+# full tier-1 gate (what CI runs)
+test:
+	$(PY) -m pytest -x -q
+
+# fast loop: skip the multi-minute @slow integration tests
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+# full benchmark sweep (one bench per paper table/figure)
+bench:
+	PYTHONPATH=src:. python -m benchmarks.run
+
+# quick smoke: just the mining-perf ladder (jnp vs pallas variants)
+bench-smoke:
+	PYTHONPATH=src:. python -m benchmarks.run --smoke

@@ -8,17 +8,31 @@ the paper's optimisations toggled.
   iteration 2 (+ODAG):   frontier exchange compressed as DenseODAG
 
 Reports wall time, collective bytes and iso-check counts per variant.
+
+Plus the canonical-check kernel ladder on the serial engine (tentpole):
+
+  jnp            pure-jnp Alg.-2 check (XLA streams the bitmap from HBM)
+  pallas_interp  Pallas kernel forced through the interpreter
+  pallas_auto    interpret=None — compiled (Mosaic/Triton) on TPU/GPU,
+                 interpreter on CPU
+  pallas_fused   fused expand_canonical kernel (validity + dedup + Alg.-2
+                 in one VMEM pass)
+
+Every rung must reproduce the jnp baseline's patterns exactly; the ladder
+asserts that before emitting its timing row.
 """
 from __future__ import annotations
 
 import time
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core import graph as G
-from repro.core.apps import FSMApp
+from repro.core.apps import FSMApp, MotifsApp
 from repro.core.distributed import DistConfig, run_distributed
+from repro.core.engine import EngineConfig, run
 
 
 def _run(cfg_kwargs, g, mesh):
@@ -33,10 +47,79 @@ def _run(cfg_kwargs, g, mesh):
     return dt, coll, iso, odag, raw, len(res.patterns)
 
 
+def _pallas_ladder():
+    """jnp vs pallas-interpret vs pallas-auto(compiled) vs fused, serial.
+
+    Correctness leg: every variant's end-to-end engine run must reproduce
+    the jnp baseline's patterns. Timing leg: the module-level jitted
+    ``explore.expand_and_compact`` (its jit cache persists across calls,
+    unlike ``engine.run`` which builds a fresh closure per run), one
+    warm-up call to compile then timed steady-state repeats — so the rows
+    compare kernel throughput, not trace/compile time.
+    """
+    from repro.core import explore, to_device
+    from repro.core.engine import _next_pow2
+
+    g = G.citeseer_like(scale=0.06)
+    rungs = [
+        ("jnp", dict(use_pallas=False)),
+        ("pallas_interp", dict(use_pallas=True, interpret=True)),
+        ("pallas_auto", dict(use_pallas=True)),
+        ("pallas_fused", dict(use_pallas=True, fused=True)),
+    ]
+
+    baseline = run(g, MotifsApp(max_size=3), EngineConfig(use_pallas=False))
+    for name, kw in rungs[1:]:
+        cfg = EngineConfig(
+            use_pallas=kw["use_pallas"],
+            fused_expand=kw.get("fused", False),
+            pallas_interpret=kw.get("interpret"),
+        )
+        res = run(g, MotifsApp(max_size=3), cfg)
+        assert res.patterns == baseline.patterns, f"{name} diverged from jnp"
+
+    dg = to_device(g)
+    # the pallas_* rows must actually time the kernels, not a silent
+    # graph-size fallback to jnp — fail loudly if the graph outgrows VMEM
+    from repro.kernels.canonical_check import ops as cc_ops
+    assert cc_ops.fits_vmem(dg) and cc_ops.fits_vmem_fused(dg), (
+        "ladder graph exceeds the kernel VMEM limits; pallas rows would "
+        "silently time the jnp fallback"
+    )
+    # representative frontier: all size-2 embeddings, then time expanding it
+    f1 = jnp.arange(dg.n, dtype=jnp.int32)[:, None]
+    nv1 = jnp.ones((dg.n,), jnp.int32)
+    children, count, _, _ = explore.expand_and_compact(
+        dg, f1, nv1, "vertex", _next_pow2(4 * dg.m)
+    )
+    members = children[: int(count)]
+    nv = jnp.full((members.shape[0],), 2, jnp.int32)
+    cap = _next_pow2(32 * dg.m)  # roomy: timing must not truncate children
+
+    repeat = 5
+    for name, kw in rungs:
+        step = lambda: explore.expand_and_compact(
+            dg, members, nv, "vertex", cap, **kw
+        )
+        jax.block_until_ready(step())          # warm-up: trace + compile
+        t0 = time.perf_counter()
+        for _ in range(repeat):
+            out = step()
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / repeat
+        emit(
+            f"perf_mining.ladder_{name}", dt * 1e6,
+            f"frontier={int(members.shape[0])};children={int(out[1])};"
+            f"backend={jax.default_backend()}",
+        )
+
+
 def main():
     n = len(jax.devices())
     mesh = jax.make_mesh((n,), ("data",))
     g = G.citeseer_like(scale=0.12)
+
+    _pallas_ladder()
 
     dt, coll, iso, _, raw, np_ = _run(dict(naive_aggregation=True), g, mesh)
     emit("perf_mining.iter0_naive", dt * 1e6,

@@ -3,14 +3,24 @@
 Prints ``name,us_per_call,derived`` CSV rows. The dry-run/roofline tables
 (assignment §Dry-run/§Roofline) live in dryrun_results.json, produced by
 ``python -m repro.launch.dryrun``; ``bench_roofline`` summarises them here.
+
+``--smoke`` runs only the mining-perf ladder (jnp vs pallas variants) —
+the quick sanity sweep behind ``make bench-smoke``.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    args = argparse.ArgumentParser(description=__doc__)
+    args.add_argument(
+        "--smoke", action="store_true",
+        help="run only the fast mining-perf ladder",
+    )
+    opts = args.parse_args(argv)
     from benchmarks import (
         bench_breakdown,
         bench_large,
@@ -34,6 +44,8 @@ def main() -> None:
         ("mining_perf(§Perf)", bench_mining_perf.main),
         ("roofline(dry-run)", bench_roofline.main),
     ]
+    if opts.smoke:
+        benches = [("mining_perf(§Perf)", bench_mining_perf.main)]
     failures = 0
     for name, fn in benches:
         print(f"# --- {name} ---", flush=True)

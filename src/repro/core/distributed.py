@@ -28,11 +28,33 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.6 exports shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # jax 0.4/0.5: experimental namespace
+    from jax.experimental.shard_map import shard_map
+
+
+def _shard_map_pallas_ok(f, mesh, in_specs, out_specs):
+    """shard_map with the replication check disabled: pallas_call has no
+    replication rule, so worker bodies that may contain a kernel need
+    check_rep=False (renamed check_vma in newer jax)."""
+    try:
+        return shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+    except TypeError:
+        return shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+
 from repro.core import aggregation, explore, pattern as pattern_lib
 from repro.core.api import MiningApp
 from repro.core.engine import EngineConfig, MiningResult, _next_pow2
 from repro.core.graph import DeviceGraph, Graph, to_device
 from repro.core.stats import RunStats, StepStats, Timer
+from repro.kernels.dispatch import default_use_pallas
 
 
 def _mesh_axis_size(mesh: Mesh, axes) -> int:
@@ -52,7 +74,8 @@ def partition_frontier(frontier: np.ndarray, n_shards: int):
     return padded.reshape(n_shards, per, k), counts
 
 
-def make_sharded_expand(app: MiningApp, mesh: Mesh, axes=("data",)):
+def make_sharded_expand(app: MiningApp, mesh: Mesh, axes=("data",),
+                        use_pallas: bool = False, interpret=None):
     """One BSP superstep: coordination-free expand over the mesh."""
 
     mode = app.mode
@@ -64,9 +87,13 @@ def make_sharded_expand(app: MiningApp, mesh: Mesh, axes=("data",)):
             m = members[0]          # shard_map adds the leading shard dim
             nv = n_valid[0]
             if mode == "vertex":
-                exp = explore.expand_vertex(g, m, nv)
+                exp = explore.expand_vertex(
+                    g, m, nv, use_pallas=use_pallas, interpret=interpret
+                )
             else:
-                exp = explore.expand_edge(g, m, nv)
+                exp = explore.expand_edge(
+                    g, m, nv, use_pallas=use_pallas, interpret=interpret
+                )
             keep = exp.keep & app.filter(g, m, nv, exp.rows, exp.cand)
             children, count = explore.compact(m, exp, keep, out_cap)
             return (
@@ -76,7 +103,8 @@ def make_sharded_expand(app: MiningApp, mesh: Mesh, axes=("data",)):
                 exp.n_canonical[None],
             )
 
-        return jax.shard_map(
+        mapper = _shard_map_pallas_ok if use_pallas else shard_map
+        return mapper(
             functools.partial(worker, g),
             mesh=mesh,
             in_specs=(spec_in, spec_in),
@@ -109,7 +137,7 @@ def make_sharded_aggregate(mesh: Mesh, axes=("data",)):
             bitmaps = jax.lax.pmax(bitmaps.astype(jnp.int32), axes) > 0
             return counts[None], bitmaps[None]
 
-        counts, bitmaps = jax.shard_map(
+        counts, bitmaps = shard_map(
             worker,
             mesh=mesh,
             in_specs=(spec, spec, spec),
@@ -130,6 +158,14 @@ class DistConfig:
     #: all-gathers all embeddings' quick codes and canonicalises each
     #: embedding's pattern itself — the paper's Fig.11 naive scheme.
     naive_aggregation: bool = False
+    #: route the Alg.-2 check through the Pallas kernel inside each
+    #: worker's shard (same dispatch rules as EngineConfig.use_pallas).
+    use_pallas: Optional[bool] = None
+    #: Pallas interpret override; None -> auto per backend.
+    pallas_interpret: Optional[bool] = None
+
+    def resolve_use_pallas(self) -> bool:
+        return default_use_pallas() if self.use_pallas is None else self.use_pallas
 
 
 def run_distributed(
@@ -142,7 +178,11 @@ def run_distributed(
     config = config or DistConfig()
     g = to_device(graph) if isinstance(graph, Graph) else graph
     n_shards = _mesh_axis_size(mesh, config.axes)
-    expand = make_sharded_expand(app, mesh, config.axes)
+    expand = make_sharded_expand(
+        app, mesh, config.axes,
+        use_pallas=config.resolve_use_pallas(),
+        interpret=config.pallas_interpret,
+    )
     aggregate = make_sharded_aggregate(mesh, config.axes)
 
     result = MiningResult(patterns={}, aggregates=[], stats=RunStats(), embeddings={})
@@ -284,18 +324,28 @@ def run_distributed(
 # Fixed-shape mining step for the multi-pod dry-run
 # ---------------------------------------------------------------------------
 
-def mining_step_for_dryrun(mesh: Mesh, axes=("pod", "data")):
+def mining_step_for_dryrun(mesh: Mesh, axes=("pod", "data"),
+                           use_pallas: Optional[bool] = None, interpret=None):
     """A single fully fixed-shape distributed exploration step suitable for
     AOT lowering on the production mesh: expand + canonicality + quick
     patterns + domain-bitmap psum. Pattern dictionary capacity is static.
+
+    ``use_pallas=None`` resolves against the *lowering host's* backend
+    (same rule as the engines). NB: the AOT dry-run harness forces CPU
+    host devices, so it models the jnp check path by default — pass
+    ``use_pallas=True`` explicitly to lower/inspect the kernel path the
+    TPU engine defaults to.
     """
+    resolved_pallas = default_use_pallas() if use_pallas is None else use_pallas
 
     def step(g: DeviceGraph, members, n_valid, quick_dict):
         """members: (B, k) sharded over `axes`; quick_dict: (Q, 3) replicated."""
 
         def worker(g, quick_dict, members, n_valid):
             m, nv = members[0], n_valid[0]
-            exp = explore.expand_vertex(g, m, nv)
+            exp = explore.expand_vertex(
+                g, m, nv, use_pallas=resolved_pallas, interpret=interpret
+            )
             out_cap = m.shape[0]  # fixed children capacity = shard size
             children, count = explore.compact(m, exp, exp.keep, out_cap)
             child_nv = jnp.where(
@@ -314,7 +364,8 @@ def mining_step_for_dryrun(mesh: Mesh, axes=("pod", "data")):
             return children[None], count[None], counts[None]
 
         spec = P(axes)
-        return jax.shard_map(
+        mapper = _shard_map_pallas_ok if resolved_pallas else shard_map
+        return mapper(
             functools.partial(worker, g, quick_dict),
             mesh=mesh,
             in_specs=(spec, spec),

@@ -20,6 +20,7 @@ from repro.core import aggregation, explore, pattern as pattern_lib
 from repro.core.api import MiningApp
 from repro.core.graph import DeviceGraph, Graph, to_device
 from repro.core.stats import RunStats, StepStats, Timer
+from repro.kernels.dispatch import default_use_pallas
 
 
 @dataclasses.dataclass
@@ -27,6 +28,19 @@ class EngineConfig:
     chunk_size: int = 4096        # frontier rows per expansion program
     initial_capacity: int = 4096  # starting output-capacity bucket
     max_steps: int = 16           # hard cap on exploration depth
+    #: route the Alg.-2 canonicality check through the Pallas kernel
+    #: (VMEM-sized graphs, vertex mode). None -> auto: on for backends with
+    #: a native Pallas lowering (TPU/GPU), off on CPU.
+    use_pallas: Optional[bool] = None
+    #: with use_pallas, also fuse candidate validity + dedup + Alg.-2 into
+    #: the single-pass expand_canonical kernel (vertex mode).
+    fused_expand: bool = False
+    #: Pallas interpret override; None -> auto per backend (compiled on
+    #: TPU/GPU, interpreter on CPU).
+    pallas_interpret: Optional[bool] = None
+
+    def resolve_use_pallas(self) -> bool:
+        return default_use_pallas() if self.use_pallas is None else self.use_pallas
 
 
 @dataclasses.dataclass
@@ -44,16 +58,22 @@ def _next_pow2(x: int) -> int:
     return 1 << max(0, (int(x) - 1).bit_length())
 
 
-def _make_expand_fn(app: MiningApp, mode: str):
+def _make_expand_fn(app: MiningApp, mode: str, use_pallas: bool = False,
+                    fused: bool = False, interpret=None):
     """Per-run jitted chunk program: expand + canonicality + app filter +
     compaction. Recompiled per (width, capacity) bucket."""
 
     @functools.partial(jax.jit, static_argnames=("out_cap",))
     def fn(g: DeviceGraph, members, n_valid, out_cap: int):
         if mode == "vertex":
-            exp = explore.expand_vertex(g, members, n_valid)
+            exp = explore.expand_vertex(
+                g, members, n_valid,
+                use_pallas=use_pallas, fused=fused, interpret=interpret,
+            )
         else:
-            exp = explore.expand_edge(g, members, n_valid)
+            exp = explore.expand_edge(
+                g, members, n_valid, use_pallas=use_pallas, interpret=interpret
+            )
         keep = exp.keep & app.filter(g, members, n_valid, exp.rows, exp.cand)
         children, count = explore.compact(members, exp, keep, out_cap)
         return children, count, exp.n_generated, exp.n_canonical
@@ -80,7 +100,12 @@ def run(
     config = config or EngineConfig()
     g = to_device(graph) if isinstance(graph, Graph) else graph
     mode = app.mode
-    expand_fn = _make_expand_fn(app, mode)
+    expand_fn = _make_expand_fn(
+        app, mode,
+        use_pallas=config.resolve_use_pallas(),
+        fused=config.fused_expand,
+        interpret=config.pallas_interpret,
+    )
 
     result = MiningResult(patterns={}, aggregates=[], stats=RunStats(), embeddings={})
     t_start = time.perf_counter()

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import canonical
 from repro.core.graph import DeviceGraph
+from repro.kernels.canonical_check import ops as cc_ops
 
 
 class Expansion(NamedTuple):
@@ -37,6 +38,10 @@ def expand_vertex(
     g: DeviceGraph,
     members: jnp.ndarray,   # (C, k) int32, pad -1
     n_valid: jnp.ndarray,   # (C,) int32
+    *,
+    use_pallas: bool = False,
+    fused: bool = False,
+    interpret=None,
 ) -> Expansion:
     """Candidates for vertex-induced exploration.
 
@@ -45,7 +50,15 @@ def expand_vertex(
     occurrence (no earlier member is adjacent to it — neighbour lists are
     sorted-unique so within one member's list it appears once); and the
     extended embedding passes the incremental canonicality check.
+
+    ``use_pallas`` routes the canonicality check through the VMEM-resident
+    Pallas kernel (``repro.kernels.canonical_check``); ``fused`` addition-
+    ally evaluates the validity masks inside the same kernel pass
+    (``expand_canonical``), skipping the ``(C, k, k, D)`` HBM intermediate.
+    Both fall back to this jnp path when the graph exceeds the VMEM limits.
     """
+    if use_pallas and fused and cc_ops.fits_vmem_fused(g):
+        return _expand_vertex_fused(g, members, n_valid, interpret)
     c, k = members.shape
     d = g.max_degree
     safe = jnp.maximum(members, 0)
@@ -72,7 +85,15 @@ def expand_vertex(
     flat_rows = jnp.repeat(jnp.arange(c, dtype=jnp.int32), k * d)
     flat_valid = valid.reshape(c * k * d)
 
-    canon = canonical.vertex_check(g, members[flat_rows], n_valid[flat_rows], flat_cand)
+    if use_pallas:
+        canon = cc_ops.canonical_check(
+            g, members[flat_rows], n_valid[flat_rows], flat_cand,
+            mode="vertex", interpret=interpret,
+        )
+    else:
+        canon = canonical.vertex_check(
+            g, members[flat_rows], n_valid[flat_rows], flat_cand
+        )
     keep = flat_valid & canon
     return Expansion(
         rows=flat_rows,
@@ -83,10 +104,31 @@ def expand_vertex(
     )
 
 
+def _expand_vertex_fused(g, members, n_valid, interpret=None) -> Expansion:
+    """Vertex expansion through the fused ``expand_canonical`` kernel:
+    validity + dedup + Alg.-2 in one VMEM pass, flattened to the same
+    Expansion contract as the jnp path."""
+    c, k = members.shape
+    d = g.max_degree
+    cand, valid, keep = cc_ops.expand_canonical(
+        g, members, n_valid, interpret=interpret
+    )
+    return Expansion(
+        rows=jnp.repeat(jnp.arange(c, dtype=jnp.int32), k * d),
+        cand=cand.reshape(c * k * d),
+        keep=keep.reshape(c * k * d),
+        n_generated=valid.sum().astype(jnp.int32),
+        n_canonical=keep.sum().astype(jnp.int32),
+    )
+
+
 def expand_edge(
     g: DeviceGraph,
     members: jnp.ndarray,   # (C, k) int32 edge ids, pad -1
     n_valid: jnp.ndarray,   # (C,) int32
+    *,
+    use_pallas: bool = False,
+    interpret=None,
 ) -> Expansion:
     """Candidates for edge-induced exploration.
 
@@ -126,7 +168,17 @@ def expand_edge(
     flat_rows = jnp.repeat(jnp.arange(c, dtype=jnp.int32), k2 * d)
     flat_valid = valid.reshape(c * k2 * d)
 
-    canon = canonical.edge_check(g, members[flat_rows], n_valid[flat_rows], flat_cand)
+    if use_pallas:
+        # routed through the kernel dispatch even though edge mode currently
+        # always resolves to the jnp check (see ops.py dispatch rules).
+        canon = cc_ops.canonical_check(
+            g, members[flat_rows], n_valid[flat_rows], flat_cand,
+            mode="edge", interpret=interpret,
+        )
+    else:
+        canon = canonical.edge_check(
+            g, members[flat_rows], n_valid[flat_rows], flat_cand
+        )
     keep = flat_valid & canon
     return Expansion(
         rows=flat_rows,
@@ -159,19 +211,30 @@ def compact(
     return children, count
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "out_cap"))
+@functools.partial(
+    jax.jit, static_argnames=("mode", "out_cap", "use_pallas", "fused", "interpret")
+)
 def expand_and_compact(
     g: DeviceGraph,
     members: jnp.ndarray,
     n_valid: jnp.ndarray,
     mode: str,
     out_cap: int,
+    use_pallas: bool = False,
+    fused: bool = False,
+    interpret=None,
 ):
     """Fused expand + canonicality + compaction (no app filter) — used by
     benchmarks and the distributed runtime where the app filter is fused in
     separately."""
-    exp = expand_vertex(g, members, n_valid) if mode == "vertex" else expand_edge(
-        g, members, n_valid
-    )
+    if mode == "vertex":
+        exp = expand_vertex(
+            g, members, n_valid,
+            use_pallas=use_pallas, fused=fused, interpret=interpret,
+        )
+    else:
+        exp = expand_edge(
+            g, members, n_valid, use_pallas=use_pallas, interpret=interpret
+        )
     children, count = compact(members, exp, exp.keep, out_cap)
     return children, count, exp.n_generated, exp.n_canonical

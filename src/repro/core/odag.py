@@ -29,6 +29,7 @@ import numpy as np
 from repro.core import canonical
 from repro.core.bitset import pack_bool_matrix
 from repro.core.graph import DeviceGraph
+from repro.kernels.canonical_check import ops as cc_ops
 
 
 @dataclasses.dataclass
@@ -145,13 +146,17 @@ def extract(
     app_filter: Optional[Callable] = None,
     chunk: int = 65536,
     mode: str = "vertex",
+    use_pallas: bool = False,
+    interpret=None,
 ) -> np.ndarray:
     """Enumerate the stored embeddings: follow connectivity edges, dropping
     spurious paths with exactly the Algorithm-1 filters (validity +
     incremental canonicality + app filter).
 
     Returns (B, k) int32. Host-driven loop over levels; each level is a
-    vectorised device mask evaluation (same kernels as exploration).
+    vectorised device mask evaluation (same kernels as exploration:
+    ``use_pallas`` routes the canonicality re-check through the Pallas
+    kernel dispatch, falling back to jnp exactly as the engines do).
     """
     k = odag.k
     paths = odag.domains[0][:, None].astype(np.int32)     # (P, 1)
@@ -173,7 +178,12 @@ def extract(
             if mode == "vertex":
                 # validity: adjacency to some member + distinctness
                 attach = g.is_edge(mem, cnd[:, None]).any(axis=1)
-                canon = canonical.vertex_check(g, mem, nv, cnd)
+                if use_pallas:
+                    canon = cc_ops.canonical_check(
+                        g, mem, nv, cnd, mode="vertex", interpret=interpret
+                    )
+                else:
+                    canon = canonical.vertex_check(g, mem, nv, cnd)
             else:
                 mu = g.edge_uv[jnp.maximum(mem, 0)]        # (B, k, 2)
                 cu = g.edge_uv[jnp.maximum(cnd, 0)]        # (B, 2)
@@ -183,7 +193,12 @@ def extract(
                     | (mu[..., 1] == cu[:, None, 0])
                     | (mu[..., 1] == cu[:, None, 1])
                 ).any(axis=1)
-                canon = canonical.edge_check(g, mem, nv, cnd)
+                if use_pallas:
+                    canon = cc_ops.canonical_check(
+                        g, mem, nv, cnd, mode="edge", interpret=interpret
+                    )
+                else:
+                    canon = canonical.edge_check(g, mem, nv, cnd)
             keep = np.asarray(attach & distinct & canon) & mask.reshape(-1)
             if app_filter is not None:
                 keep = keep & np.asarray(app_filter(mem, nv, cnd))

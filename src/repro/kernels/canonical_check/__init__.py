@@ -1,3 +1,13 @@
-from repro.kernels.canonical_check.ops import canonical_check
+from repro.kernels.canonical_check.ops import (
+    canonical_check,
+    expand_canonical,
+    fits_vmem,
+    fits_vmem_fused,
+)
 
-__all__ = ["canonical_check"]
+__all__ = [
+    "canonical_check",
+    "expand_canonical",
+    "fits_vmem",
+    "fits_vmem_fused",
+]

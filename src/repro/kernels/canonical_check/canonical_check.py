@@ -7,8 +7,24 @@ adjacency bitmap resident in VMEM* (graphs up to ~8k vertices: N*N/8 bytes
 <= 8 MB), so every adjacency query is a VMEM gather instead of an HBM
 round-trip — the TPU-native replacement for the CPU pointer chase.
 
-For larger graphs the engine falls back to the pure-jnp path where XLA
-streams the bitmap from HBM (canonical.vertex_check).
+Two kernels:
+
+  * :func:`canonical_check_pallas` — the standalone Alg.-2 check over a flat
+    batch of (members, cand) pairs. Batches of any size are accepted: the
+    wrapper pads to a block multiple internally (pad rows have
+    ``n_valid=0`` / ``cand=-1`` and are sliced off the output).
+  * :func:`expand_canonical_pallas` — the *fused* expansion kernel: for a
+    block of parent embeddings it enumerates every neighbour-table
+    candidate, evaluates slot validity / is-member / first-occurrence dedup
+    *and* the Alg.-2 check in one VMEM pass over the packed bitmap. The
+    member↔candidate adjacency gather is computed once and reused by both
+    the dedup rule and the canonicality test, eliminating the ``(C, k, k,
+    D)`` boolean intermediate that the unfused path materialises in HBM
+    through ``g.is_edge``.
+
+``interpret=None`` auto-selects compiled vs interpreter per backend (see
+``repro.kernels.dispatch``). Graph-size dispatch (VMEM limits, jnp
+fallback) lives in ``ops.py``.
 """
 from __future__ import annotations
 
@@ -18,7 +34,28 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.dispatch import resolve_interpret
+
 WORD_BITS = 32
+
+
+def _pad_batch(block, members, n_valid, *rest):
+    """Pad the leading batch dim to a multiple of ``block`` with inert rows
+    (``members=-1``, ``n_valid=0``, trailing 1-D operands ``-1``). Returns
+    ``(padded_batch, block, members, n_valid, *rest)`` — the shared padding
+    protocol of every canonical-check kernel entry point."""
+    b = members.shape[0]
+    block = max(1, min(block, b))
+    pad = (-b) % block
+    if pad:
+        members = jnp.concatenate(
+            [members, jnp.full((pad,) + members.shape[1:], -1, members.dtype)]
+        )
+        n_valid = jnp.concatenate([n_valid, jnp.zeros((pad,), n_valid.dtype)])
+        rest = tuple(
+            jnp.concatenate([r, jnp.full((pad,), -1, r.dtype)]) for r in rest
+        )
+    return (b + pad, block, members, n_valid) + rest
 
 
 def _kernel(members_ref, nvalid_ref, cand_ref, adj_ref, out_ref):
@@ -48,17 +85,24 @@ def _kernel(members_ref, nvalid_ref, cand_ref, adj_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def canonical_check_pallas(members, n_valid, cand, adj_bits, block_b=1024,
-                           interpret=True):
+                           interpret=None):
     """members (B,k) int32; n_valid (B,); cand (B,); adj_bits (N,W) uint32.
-    Returns (B,) bool — True iff members[:n_valid]+[cand] is canonical."""
+    Returns (B,) bool — True iff members[:n_valid]+[cand] is canonical.
+
+    Handles any batch size ``B`` (including 0 and non-multiples of
+    ``block_b``) by padding internally and slicing the pad back off.
+    """
     b, k = members.shape
     n, w = adj_bits.shape
-    block_b = min(block_b, b)
-    assert b % block_b == 0, "pad candidate batch to a block multiple"
+    if b == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    bp, block_b, members, n_valid, cand = _pad_batch(
+        block_b, members, n_valid, cand
+    )
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _kernel,
-        grid=(b // block_b,),
+        grid=(bp // block_b,),
         in_specs=[
             pl.BlockSpec((block_b, k), lambda i: (i, 0)),
             pl.BlockSpec((block_b,), lambda i: (i,)),
@@ -66,6 +110,111 @@ def canonical_check_pallas(members, n_valid, cand, adj_bits, block_b=1024,
             pl.BlockSpec((n, w), lambda i: (0, 0)),   # bitmap VMEM-resident
         ],
         out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((b,), jnp.bool_),
-        interpret=interpret,
+        out_shape=jax.ShapeDtypeStruct((bp,), jnp.bool_),
+        interpret=resolve_interpret(interpret),
     )(members, n_valid, cand, adj_bits)
+    return out[:b]
+
+
+# ---------------------------------------------------------------------------
+# Fused expansion + canonicality kernel
+# ---------------------------------------------------------------------------
+
+def _expand_kernel(members_ref, nvalid_ref, nbr_ref, adj_ref,
+                   cand_ref, valid_ref, keep_ref):
+    members = members_ref[...]              # (TC, k) int32
+    nvalid = nvalid_ref[...]                # (TC,)
+    nbr = nbr_ref[...]                      # (N, D) int32 — VMEM resident
+    adj = adj_ref[...]                      # (N, W) uint32 — VMEM resident
+
+    tc, k = members.shape
+    d = nbr.shape[1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (tc, k), 1)
+    member_ok = pos < nvalid[:, None]                        # (TC, k)
+
+    safe_m = jnp.maximum(members, 0)
+    cand = jnp.where(member_ok[:, :, None], nbr[safe_m], -1)  # (TC, k, D)
+    slot_ok = cand >= 0
+    safe_c = jnp.maximum(cand, 0)
+
+    # not already a member of the embedding
+    is_member = (cand[:, :, :, None] == members[:, None, None, :]).any(-1)
+
+    # member↔candidate adjacency, gathered ONCE from the VMEM bitmap and
+    # shared by the dedup rule and the Alg.-2 scan below.
+    word = adj[safe_m[:, :, None, None], safe_c[:, None, :, :] // WORD_BITS]
+    bit = (
+        word >> (safe_c[:, None, :, :] % WORD_BITS).astype(jnp.uint32)
+    ) & jnp.uint32(1)
+    adj_mc = (bit == 1) & member_ok[:, :, None, None] & slot_ok[:, None, :, :]
+    # adj_mc: (TC, k_m, k_i, D) — member m adjacent to candidate slot (i, j)
+
+    # first-occurrence dedup: drop if an *earlier* member is adjacent.
+    m_idx = jax.lax.broadcasted_iota(jnp.int32, (1, k, k, 1), 1)
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (1, k, k, 1), 2)
+    earlier = m_idx < i_idx
+    seen_earlier = (adj_mc & earlier).any(axis=1)            # (TC, k, D)
+
+    valid = slot_ok & ~is_member & ~seen_earlier
+
+    # Alg. 2 on every candidate slot, reusing adj_mc as the neighbour mask.
+    first_ok = jnp.where(
+        (nvalid > 0)[:, None, None], members[:, 0][:, None, None] < cand, True
+    )
+    found_after = jnp.cumsum(adj_mc.astype(jnp.int32), axis=1) > 0
+    found_before = jnp.concatenate(
+        [jnp.zeros((tc, 1, k, d), dtype=bool), found_after[:, :-1]], axis=1
+    )
+    violation = (
+        member_ok[:, :, None, None]
+        & found_before
+        & (members[:, :, None, None] > cand[:, None, :, :])
+    )
+    canon = first_ok & ~violation.any(axis=1)                # (TC, k, D)
+
+    cand_ref[...] = cand
+    valid_ref[...] = valid
+    keep_ref[...] = valid & canon
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def expand_canonical_pallas(members, n_valid, nbr, adj_bits, block_c=64,
+                            interpret=None):
+    """Fused vertex expansion: members (C,k) int32, n_valid (C,),
+    nbr (N,D) int32 padded neighbour table, adj_bits (N,W) uint32.
+
+    Returns ``(cand, valid, keep)``, each ``(C, k, D)``: the candidate
+    vertex per slot, the pre-canonicality validity mask (slot-ok &
+    not-member & first-occurrence) and the final keep mask (valid &
+    Alg.-2 canonical). Any ``C`` is accepted (padded internally).
+    """
+    c, k = members.shape
+    n, d = nbr.shape
+    w = adj_bits.shape[1]
+    if c == 0:
+        z = jnp.zeros((0, k, d), jnp.int32)
+        return z, z.astype(bool), z.astype(bool)
+    cp, block_c, members, n_valid = _pad_batch(block_c, members, n_valid)
+
+    cand, valid, keep = pl.pallas_call(
+        _expand_kernel,
+        grid=(cp // block_c,),
+        in_specs=[
+            pl.BlockSpec((block_c, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_c,), lambda i: (i,)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),   # neighbour table resident
+            pl.BlockSpec((n, w), lambda i: (0, 0)),   # bitmap resident
+        ],
+        out_specs=[
+            pl.BlockSpec((block_c, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_c, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_c, k, d), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cp, k, d), jnp.int32),
+            jax.ShapeDtypeStruct((cp, k, d), jnp.bool_),
+            jax.ShapeDtypeStruct((cp, k, d), jnp.bool_),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(members, n_valid, nbr, adj_bits)
+    return cand[:c], valid[:c], keep[:c]

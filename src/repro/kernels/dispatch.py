@@ -1,0 +1,42 @@
+"""Backend-aware dispatch shared by every Pallas kernel wrapper.
+
+One rule, stated once (the per-kernel ``ops`` wrappers all defer here):
+
+  * ``interpret=None`` (the default everywhere) resolves automatically:
+    the kernel *compiles* (Mosaic on TPU, Triton on GPU) when the active
+    JAX backend can lower Pallas, and runs in the Pallas *interpreter*
+    on CPU where no native lowering exists. This is what finally makes
+    the kernels real code on accelerators — the seed hardcoded
+    ``interpret=True`` so nothing ever compiled.
+  * ``interpret=True`` / ``False`` forces the choice (tests pin ``True``
+    so CI on CPU exercises the exact kernel dataflow deterministically).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+#: backends with a native Pallas lowering (everything else interprets).
+COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Map the tri-state ``interpret`` knob to a concrete bool."""
+    if interpret is None:
+        return jax.default_backend() not in COMPILED_BACKENDS
+    return bool(interpret)
+
+
+def default_use_pallas() -> bool:
+    """Engine-level auto knob (``EngineConfig.use_pallas=None``): route hot
+    paths through the Pallas kernels only where they compile to native code;
+    on CPU the interpreter is strictly slower than the fused-jnp path, so
+    the engine stays on jnp unless explicitly overridden.
+
+    Deliberately TPU-only for now: the canonical-check kernels lean on 2-D
+    advanced-index gathers over VMEM-resident tables, which the Mosaic
+    lowering handles but the Pallas-Triton (GPU) path has not been
+    validated against. GPU users can still opt in with
+    ``use_pallas=True``; the *default* engine path must never crash."""
+    return jax.default_backend() == "tpu"

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.dispatch import resolve_interpret
+
 DEFAULT_BLOCK_Q = 128
 DEFAULT_BLOCK_K = 128
 NEG_INF = -1e30
@@ -65,7 +67,7 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, sm_scale: float,
 )
 def flash_attention_bhsd(
     q, k, v, causal=True, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
-    interpret=True,
+    interpret=None,
 ):
     """q: (BH, Sq, D); k/v: (BH, Sk, D) (kv heads already broadcast).
     Returns (BH, Sq, D)."""
@@ -89,5 +91,5 @@ def flash_attention_bhsd(
         ],
         out_specs=pl.BlockSpec((None, block_q, d), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

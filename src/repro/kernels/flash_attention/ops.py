@@ -1,4 +1,8 @@
-"""Jit'd public wrapper: GQA layout handling around the Pallas kernel."""
+"""Jit'd public wrapper: GQA layout handling around the Pallas kernel.
+
+``interpret=None`` auto-selects compiled vs interpreter per backend (see
+``repro.kernels.dispatch``).
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -6,7 +10,7 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
 
 
-def flash_attention(q, k, v, causal=True, interpret=True, **block_kw):
+def flash_attention(q, k, v, causal=True, interpret=None, **block_kw):
     """q: (B, Sq, H, D); k/v: (B, Sk, KV, D) with H a multiple of KV.
     Returns (B, Sq, H, D)."""
     b, sq, h, d = q.shape

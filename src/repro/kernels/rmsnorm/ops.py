@@ -1,4 +1,8 @@
-"""Public wrapper: arbitrary leading dims + row padding."""
+"""Public wrapper: arbitrary leading dims + row padding.
+
+``interpret=None`` auto-selects compiled vs interpreter per backend (see
+``repro.kernels.dispatch``).
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -6,7 +10,7 @@ import jax.numpy as jnp
 from repro.kernels.rmsnorm.rmsnorm import rmsnorm_pallas
 
 
-def rmsnorm(x, scale, eps=1e-5, interpret=True):
+def rmsnorm(x, scale, eps=1e-5, interpret=None):
     shape = x.shape
     d = shape[-1]
     x2 = x.reshape(-1, d)

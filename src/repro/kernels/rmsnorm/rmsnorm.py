@@ -8,6 +8,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.dispatch import resolve_interpret
+
 
 def _kernel(x_ref, scale_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)              # (TB, D)
@@ -18,7 +20,7 @@ def _kernel(x_ref, scale_ref, o_ref, *, eps: float):
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
-def rmsnorm_pallas(x2d, scale, eps=1e-5, block_rows=256, interpret=True):
+def rmsnorm_pallas(x2d, scale, eps=1e-5, block_rows=256, interpret=None):
     """x2d (R, D), scale (D,) -> (R, D)."""
     r, d = x2d.shape
     block_rows = min(block_rows, r)
@@ -32,5 +34,5 @@ def rmsnorm_pallas(x2d, scale, eps=1e-5, block_rows=256, interpret=True):
         ],
         out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, d), x2d.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x2d, scale)

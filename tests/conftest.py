@@ -1,3 +1,3 @@
-import warnings
-
-warnings.filterwarnings("ignore", category=UserWarning)
+# Intentionally minimal. The seed's blanket UserWarning suppression was
+# removed so real JAX deprecation signals surface; targeted filters belong
+# in pyproject.toml's pytest config if ever needed.

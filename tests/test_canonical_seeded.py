@@ -1,0 +1,75 @@
+"""Seeded-random fallback for the hypothesis property suite.
+
+``tests/test_property_canonical.py`` needs the optional ``hypothesis``
+package and is skipped without it; this module re-checks the central
+uniqueness property (paper Appendix Thm 3) with plain seeded randomness so
+the Alg.-2 implementation is never silently untested:
+
+  among all attach-connected visit orders of a connected vertex set,
+  exactly one passes ``canonical.vertex_check`` at every prefix, and it is
+  the greedy ``canonical_order_vertices`` construction.
+"""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import canonical, graph as G, to_device
+
+
+def _incremental_accepts(dg, order):
+    k = len(order)
+    for i in range(1, k):
+        members = jnp.full((1, k), -1, jnp.int32)
+        members = members.at[0, :i].set(jnp.asarray(order[:i], jnp.int32))
+        ok = canonical.vertex_check(
+            dg, members, jnp.array([i], jnp.int32), jnp.array([order[i]], jnp.int32)
+        )
+        if not bool(ok[0]):
+            return False
+    return True
+
+
+def _random_connected_set(rng, adj, n, size):
+    emb = {int(rng.integers(0, n))}
+    for _ in range(size - 1):
+        border = set().union(*(adj[v] for v in emb)) - emb
+        if not border:
+            break
+        emb.add(int(rng.choice(sorted(border))))
+    return emb
+
+
+def test_uniqueness_thm3_seeded():
+    checked = 0
+    for seed in range(12):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(4, 9))
+        m = int(rng.integers(n - 1, n * (n - 1) // 2 + 1))
+        g = G.random_labeled(n, m, n_labels=3, seed=seed)
+        if g.m == 0:
+            continue
+        dg = to_device(g)
+        adj = [set() for _ in range(g.n)]
+        for u, v in g.edges:
+            adj[int(u)].add(int(v))
+            adj[int(v)].add(int(u))
+
+        for _ in range(4):
+            emb = _random_connected_set(rng, adj, g.n, int(rng.integers(2, 5)))
+            if len(emb) < 2:
+                continue
+            # all attach-connected visit orders of the set
+            orders = []
+            for perm in itertools.permutations(sorted(emb)):
+                if all(
+                    any(perm[j] in adj[perm[i]] for j in range(i))
+                    for i in range(1, len(perm))
+                ):
+                    orders.append(perm)
+            accepted = [o for o in orders if _incremental_accepts(dg, list(o))]
+            assert len(accepted) == 1, (seed, emb, accepted)
+            ref = canonical.canonical_order_vertices(lambda a, b: b in adj[a], emb)
+            assert list(accepted[0]) == ref, (seed, emb)
+            checked += 1
+    assert checked >= 20  # the loop actually exercised the property

@@ -13,6 +13,12 @@ import itertools
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# hypothesis is an optional test extra (pyproject `[test]`); without it the
+# whole module is skipped — the seeded fallback in test_canonical_seeded.py
+# keeps the core property covered either way.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import canonical, graph as G, to_device
