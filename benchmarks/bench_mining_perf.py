@@ -129,7 +129,7 @@ def main():
     emit("perf_mining.iter1_two_level", dt * 1e6,
          f"coll_bytes={coll};iso_checks={iso};patterns={np_}")
 
-    dt, coll, iso, odag, raw, np_ = _run(dict(use_odag_exchange=True), g, mesh)
+    dt, coll, iso, odag, raw, np_ = _run(dict(store="odag"), g, mesh)
     emit("perf_mining.iter2_odag", dt * 1e6,
          f"coll_bytes={coll};iso_checks={iso};"
          f"frontier_raw={raw};frontier_odag={odag}")

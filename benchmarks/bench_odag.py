@@ -1,57 +1,86 @@
-"""Paper Fig. 9 (ODAG compression per depth) and Fig. 10 (slowdown when
-storing full embedding lists vs ODAGs: here the inverse — cost of the ODAG
-build/extract cycle vs its byte savings)."""
+"""Paper Fig. 9 (ODAG compression per depth) and Fig. 10 (cost of the ODAG
+store/extract cycle vs the raw embedding list), end-to-end from live engine
+runs: the frontier store (DESIGN.md §7) records per-step
+``frontier_bytes`` (raw embedding-list baseline) vs ``odag_bytes`` (what
+actually lived between supersteps), so the compression column is measured
+on the real execution path, not an offline re-encode.
+
+Acceptance gate: >= 5x frontier-exchange byte reduction at depth >= 3 on
+``mico_like``.
+"""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import emit, timed
-from repro.core import EngineConfig, graph as G, run, to_device
-from repro.core import odag
+from repro.core import EngineConfig, graph as G, run
 from repro.core.apps import FSMApp, MotifsApp
 
 
 def main():
-    g = G.citeseer_like(scale=0.12)
-    dg = to_device(g)
-    app = MotifsApp(max_size=4, collect_embeddings=True)
-    res = run(g, app, EngineConfig(chunk_size=8192, initial_capacity=16384))
+    g = G.mico_like(scale=0.005)
+    app = lambda: MotifsApp(max_size=3)
+    cfg = lambda **kw: EngineConfig(
+        chunk_size=8192, initial_capacity=16384, **kw
+    )
 
-    for size, emb in sorted(res.embeddings.items()):
-        if size < 2:
+    # Fig 9: per-depth compression from the ODAG store's live byte stats
+    res, us_odag = timed(run, g, app(), cfg(store="odag"))
+    depth3_ok = False
+    for s in res.stats.steps:
+        if not s.odag_bytes:
             continue
-        o, us_build = timed(odag.build, emb)
-        raw = emb.size * 4
         emit(
-            f"fig9.odag_depth{size}",
-            us_build,
-            f"raw_bytes={raw};odag_bytes={o.n_bytes};compression={raw / max(o.n_bytes,1):.1f}x",
+            f"fig9.odag_depth{s.size}",
+            s.t_storage * 1e6,
+            f"raw_bytes={s.frontier_bytes};odag_bytes={s.odag_bytes};"
+            f"compression={s.compression:.1f}x",
+        )
+        if s.size >= 3 and s.compression >= 5.0:
+            depth3_ok = True
+    if not depth3_ok:
+        raise AssertionError(
+            "ODAG store did not reach 5x frontier-byte reduction at depth>=3: "
+            f"{res.stats.compression_by_size()}"
         )
 
-    # Fig 10: full exchange-cycle cost with vs without ODAG at max depth
-    emb = res.embeddings[max(res.embeddings)]
-    o = odag.build(emb)
-    _, us_extract = timed(odag.extract, dg, o)
-    _, us_raw = timed(lambda e: np.array(e, copy=True), emb)
+    # Fig 10: whole-run cost of the ODAG store/extract cycle vs RawStore
+    _, us_raw = timed(run, g, app(), cfg())
+    total_raw = sum(s.frontier_bytes for s in res.stats.steps)
+    total_odag = sum(s.odag_bytes or s.frontier_bytes for s in res.stats.steps)
     emit(
         "fig10.odag_cycle_vs_raw",
-        us_build + us_extract,
-        f"raw_copy_us={us_raw:.0f};bytes_saved={emb.size*4 - o.n_bytes}",
+        us_odag,
+        f"raw_store_us={us_raw:.0f};bytes_saved={total_raw - total_odag};"
+        f"slowdown={us_odag / max(us_raw, 1):.2f}x",
     )
 
-    # edge-mode ODAG (FSM frontier)
-    res_e = run(
-        g, FSMApp(support=2, max_size=3, collect_embeddings=True),
-        EngineConfig(chunk_size=8192, initial_capacity=16384),
+    # larger-than-memory: SpillStore waves under a device budget smaller
+    # than the peak frontier must reproduce the same mining volume
+    budget = max(s.frontier_bytes for s in res.stats.steps) // 4
+    res_sp, us_sp = timed(
+        run, g, app(), cfg(store="odag", device_budget_bytes=budget)
     )
-    if res_e.embeddings:
-        emb_e = res_e.embeddings[max(res_e.embeddings)]
-        o_e, us_e = timed(odag.build, emb_e)
-        emit(
-            "fig9.odag_edge_mode",
-            us_e,
-            f"raw_bytes={emb_e.size*4};odag_bytes={o_e.n_bytes}",
-        )
+    assert res_sp.patterns == res.patterns
+    emit(
+        "fig10.spill_waves",
+        us_sp,
+        f"device_budget_bytes={budget};"
+        f"steps={len(res_sp.stats.steps)};match=1",
+    )
+
+    # edge-mode ODAG store (FSM frontier)
+    res_e = run(
+        G.citeseer_like(scale=0.12),
+        FSMApp(support=2, max_size=3),
+        cfg(store="odag"),
+    )
+    for s in res_e.stats.steps:
+        if s.odag_bytes:
+            emit(
+                f"fig9.odag_edge_depth{s.size}",
+                s.t_storage * 1e6,
+                f"raw_bytes={s.frontier_bytes};odag_bytes={s.odag_bytes};"
+                f"compression={s.compression:.1f}x",
+            )
 
 
 if __name__ == "__main__":

@@ -2,6 +2,10 @@
 networkx.
 
     PYTHONPATH=src python examples/cliques.py
+
+Store knobs (DESIGN.md §7): ``EngineConfig(store="odag")`` keeps the
+frontier ODAG-compressed between supersteps and re-applies the isClique
+filter during extraction; ``device_budget_bytes=...`` mines in waves.
 """
 import networkx as nx
 

@@ -4,6 +4,11 @@ quick-pattern reduction, per-step stats). This is the paper-kind end-to-end
 run (a mining system's equivalent of a training run).
 
     PYTHONPATH=src python examples/fsm_end_to_end.py [--support 8] [--scale 0.3]
+
+Pass ``--store odag`` to keep each superstep's frontier ODAG-compressed
+between steps (paper §5.2, DESIGN.md §7) and print the live per-step
+compression; ``EngineConfig(device_budget_bytes=...)`` additionally mines
+frontiers larger than device memory in budget-sized waves.
 """
 import argparse
 
@@ -17,6 +22,7 @@ def main():
     ap.add_argument("--support", type=int, default=8)
     ap.add_argument("--max-size", type=int, default=3)
     ap.add_argument("--scale", type=float, default=0.3)
+    ap.add_argument("--store", choices=["raw", "odag"], default="raw")
     args = ap.parse_args()
 
     g = graph.citeseer_like(scale=args.scale)
@@ -24,8 +30,13 @@ def main():
     res = run(
         g,
         FSMApp(support=args.support, max_size=args.max_size),
-        EngineConfig(chunk_size=8192, initial_capacity=1 << 15),
+        EngineConfig(chunk_size=8192, initial_capacity=1 << 15,
+                     store=args.store),
     )
+    if args.store == "odag":
+        print("frontier compression (raw -> odag bytes, Fig. 9):",
+              {k: round(v, 1) for k, v in
+               res.stats.compression_by_size().items()})
 
     print(f"\n{len(res.patterns)} frequent patterns (support >= {args.support}):")
     for code, sup in sorted(res.patterns.items(), key=lambda kv: -kv[1])[:10]:

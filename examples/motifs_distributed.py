@@ -3,6 +3,13 @@ devices to see real sharding on CPU):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python examples/motifs_distributed.py
+
+Frontier-store knobs (DESIGN.md §7): ``DistConfig(store="raw")`` (default)
+exchanges the frontier as a dense embedding list with even block slicing;
+``store="odag"`` merges worker-local DenseODAGs with one OR-allreduce and
+re-materialises cost-balanced per-worker slices (paper §5.2/§5.3) — see
+``examples/motifs_odag_store.py`` for that variant with the live
+compression numbers.
 """
 import jax
 
@@ -15,14 +22,10 @@ mesh = jax.make_mesh((n,), ("data",))
 print(f"mesh: {n} workers")
 
 g = graph.mico_like(scale=0.004)
-res = run_distributed(
-    g, MotifsApp(max_size=3), mesh, DistConfig(use_odag_exchange=True)
-)
+res = run_distributed(g, MotifsApp(max_size=3), mesh, DistConfig())
 
 print(f"motif counts over {res.stats.total_embeddings} embeddings:")
 for code, count in sorted(res.patterns.items(), key=lambda kv: -kv[1]):
     print(f"  {code}: {count}")
 print("\nper-step collective bytes (two-level aggregation):",
       [s.collective_bytes for s in res.stats.steps])
-print("ODAG vs raw frontier bytes:",
-      [(s.odag_bytes, s.frontier_bytes) for s in res.stats.steps])

@@ -1,6 +1,11 @@
 """Quickstart: mine motifs with the filter-process API in ~10 lines.
 
     PYTHONPATH=src python examples/quickstart.py
+
+``EngineConfig`` knobs worth knowing: ``store="odag"`` keeps the frontier
+ODAG-compressed between supersteps (paper §5.2), ``device_budget_bytes``
+bounds the device-resident slice per wave (larger-than-memory mining) —
+see DESIGN.md §7 and ``examples/motifs_odag_store.py``.
 """
 from repro.core import EngineConfig, graph, run
 from repro.core.apps import MotifsApp

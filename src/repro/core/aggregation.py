@@ -50,14 +50,6 @@ def quick_slot_ids(codes: jnp.ndarray, valid: jnp.ndarray):
     return uniq, full_inv
 
 
-@functools.partial(jax.jit, static_argnames=("n_slots",))
-def count_by_slot(slot: jnp.ndarray, valid: jnp.ndarray, n_slots: int) -> jnp.ndarray:
-    """Embedding counts per quick slot (level-1 reduce)."""
-    return jax.ops.segment_sum(
-        valid.astype(jnp.int64), jnp.where(valid, slot, n_slots), n_slots + 1
-    )[:n_slots]
-
-
 @functools.partial(jax.jit, static_argnames=("n_canon", "n_vertices"))
 def domain_bitmaps(
     canon_slot: jnp.ndarray,     # (B,) int32 canonical slot per embedding
@@ -124,21 +116,32 @@ def map_to_canonical_positions(
     return canon_slot, jnp.asarray(verts_canon)
 
 
-def aggregate_step(
+def aggregate_rows(
     g_n_vertices: int,
-    qp: pattern_lib.QuickPatterns,
-    valid: jnp.ndarray,
+    codes: np.ndarray,        # (B, 3) int64 quick codes (host)
+    local_verts: np.ndarray,  # (B, 8) int32 (host)
     with_domains: bool,
-) -> tuple[StepAggregates, np.ndarray, pattern_lib.PatternTable]:
-    """Full two-level aggregation for one step's candidate embeddings.
+) -> tuple[StepAggregates, np.ndarray]:
+    """Full two-level aggregation for one step's embeddings, over
+    pre-computed quick patterns (DESIGN.md §7).
 
-    Returns (aggregates, per-embedding canonical slot, pattern table).
+    The engine computes quick patterns one device-budget wave at a time and
+    merges the level-1 state here on the host (``bincount`` + boolean
+    scatter), so aggregation never allocates a device array of frontier
+    length — the frontier-store subsystem's device-budget contract. The
+    distributed runtime keeps its own sharded level-1 path
+    (:func:`make_sharded_aggregate` in :mod:`repro.core.distributed`) whose
+    reduce is the collective.
+
+    Returns (aggregates, per-embedding canonical slot).
     """
-    uniq_quick, inv = quick_slot_ids(qp.codes, valid)
-    table = pattern_lib.build_pattern_table(uniq_quick)
-    q = len(uniq_quick)
+    codes = np.asarray(codes)
+    lv = np.asarray(local_verts)
+    b = len(codes)
+    uniq, inv = quick_slot_ids(codes, np.ones(b, dtype=bool))
+    table = pattern_lib.build_pattern_table(uniq)
+    q = len(uniq)
     pc = len(table.canon_codes)
-
     if q == 0:
         empty = StepAggregates(
             canon_codes=np.zeros((0, 3), np.int64),
@@ -148,29 +151,30 @@ def aggregate_step(
             n_canonical=0,
             n_iso_checks=0,
         )
-        return empty, np.full(len(np.asarray(valid)), -1, np.int32), table
+        return empty, np.full(b, -1, np.int32)
 
-    quick_counts = np.asarray(count_by_slot(jnp.asarray(inv), valid, q))
+    quick_counts = np.bincount(inv, minlength=q).astype(np.int64)
     counts = np.zeros(pc, dtype=np.int64)
     np.add.at(counts, table.quick_to_canon, quick_counts)
 
-    canon_slot, verts_canon = map_to_canonical_positions(table, inv, qp.local_verts)
+    canon_slot, verts_canon = map_to_canonical_positions(table, inv, lv)
+    verts_canon = np.asarray(verts_canon)
     if with_domains:
-        bitmaps = domain_bitmaps(
-            jnp.asarray(canon_slot), verts_canon, valid, pc, g_n_vertices
-        )
-        supports = min_image_support(
-            bitmaps, table.canon_n_verts, table.canon_orbits
-        )
+        kmax = verts_canon.shape[1]
+        bm = np.zeros((pc, kmax, g_n_vertices), dtype=bool)
+        ok = (verts_canon >= 0) & (canon_slot[:, None] >= 0)
+        rows, pos = np.nonzero(ok)
+        bm[canon_slot[rows], pos, verts_canon[rows, pos]] = True
+        supports = min_image_support(bm, table.canon_n_verts, table.canon_orbits)
     else:
         supports = counts.copy()
 
     agg = StepAggregates(
         canon_codes=table.canon_codes,
         counts=counts,
-        supports=supports,
+        supports=np.asarray(supports).astype(np.int64),
         n_quick=q,
         n_canonical=pc,
         n_iso_checks=table.n_iso_checks,
     )
-    return agg, canon_slot, table
+    return agg, canon_slot

@@ -8,9 +8,17 @@ exploration step:
   * pattern aggregation is ONE collective: per-pattern counts and FSM domain
     bitmaps are ``psum``/OR-allreduced (two-level aggregation: bytes scale
     with #patterns, never #embeddings — Table 4 as collective-bytes);
-  * frontier re-balancing is broadcast-then-partition (paper §5.3): an
-    all-gather of the (optionally DenseODAG-compressed) frontier followed by
-    deterministic block slicing, so every worker ends with |F|/W embeddings.
+  * the frontier between supersteps is owned by a pluggable
+    :mod:`repro.core.store` (DESIGN.md §7). With ``store="raw"`` the
+    re-balancing is broadcast-then-partition (paper §5.3): an all-gather of
+    the frontier followed by deterministic block slicing, so every worker
+    ends with |F|/W embeddings. With ``store="odag"`` each worker's children
+    are folded into a fixed-shape DenseODAG and the worker bitmaps are
+    merged with a bitwise OR — host-side in this single-process runtime,
+    bit-for-bit the §5.2 "merge and broadcast" OR-allreduce of a multi-host
+    mesh — and every worker re-materialises its slice via cost-annotated
+    partitioning + extraction (§5.3). Exchange bytes (``collective_bytes``)
+    then scale with the ODAG, never the embedding list.
 
 ``run_distributed`` mirrors ``engine.run`` and must produce identical
 results (integration-tested); ``mining_step_for_dryrun`` is the fixed-shape
@@ -51,9 +59,15 @@ def _shard_map_pallas_ok(f, mesh, in_specs, out_specs):
 
 from repro.core import aggregation, explore, pattern as pattern_lib
 from repro.core.api import MiningApp
-from repro.core.engine import EngineConfig, MiningResult, _next_pow2
+from repro.core.engine import (
+    EngineConfig,
+    MiningResult,
+    _next_pow2,
+    store_app_filter,
+)
 from repro.core.graph import DeviceGraph, Graph, to_device
 from repro.core.stats import RunStats, StepStats, Timer
+from repro.core.store import make_store
 from repro.kernels.dispatch import default_use_pallas
 
 
@@ -64,14 +78,28 @@ def _mesh_axis_size(mesh: Mesh, axes) -> int:
     return size
 
 
+def pad_parts(parts, k: int):
+    """Pad variable-length per-worker row blocks to one dense
+    ``(W, per, k)`` int32 array (pad value -1) + per-worker counts — THE
+    shard-padding convention, shared by the even block split below and the
+    store-provided (cost-balanced) parts in ``run_distributed``."""
+    n = len(parts)
+    per = max(max((len(p) for p in parts), default=0), 1)
+    padded = np.full((n, per, k), -1, dtype=np.int32)
+    counts = np.zeros(n, dtype=np.int32)
+    for s, p in enumerate(parts):
+        padded[s, : len(p)] = p
+        counts[s] = len(p)
+    return padded, counts
+
+
 def partition_frontier(frontier: np.ndarray, n_shards: int):
     """Broadcast-then-partition (paper §5.3): even block split, padded."""
     b, k = frontier.shape
     per = -(-b // n_shards) if b else 1
-    padded = np.full((n_shards * per, k), -1, dtype=np.int32)
-    padded[:b] = frontier
-    counts = np.clip(b - per * np.arange(n_shards), 0, per).astype(np.int32)
-    return padded.reshape(n_shards, per, k), counts
+    return pad_parts(
+        [frontier[s * per : (s + 1) * per] for s in range(n_shards)], k
+    )
 
 
 def make_sharded_expand(app: MiningApp, mesh: Mesh, axes=("data",),
@@ -153,7 +181,12 @@ class DistConfig:
     axes: tuple = ("data",)
     initial_capacity: int = 4096     # per-shard children capacity bucket
     max_steps: int = 16
-    use_odag_exchange: bool = False  # account frontier exchange as DenseODAG
+    #: frontier store between supersteps: "raw" = broadcast-then-partition
+    #: block slicing of the dense embedding list; "odag" = worker-local
+    #: DenseODAGs merged with a bitwise OR (the §5.2 OR-allreduce, computed
+    #: host-side here), per-worker slices re-materialised via §5.3
+    #: cost-balanced extraction.
+    store: str = "raw"
     #: disable two-level aggregation (§Perf baseline): every worker
     #: all-gathers all embeddings' quick codes and canonicalises each
     #: embedding's pattern itself — the paper's Fig.11 naive scheme.
@@ -178,28 +211,54 @@ def run_distributed(
     config = config or DistConfig()
     g = to_device(graph) if isinstance(graph, Graph) else graph
     n_shards = _mesh_axis_size(mesh, config.axes)
+    resolved_pallas = config.resolve_use_pallas()
     expand = make_sharded_expand(
         app, mesh, config.axes,
-        use_pallas=config.resolve_use_pallas(),
+        use_pallas=resolved_pallas,
         interpret=config.pallas_interpret,
     )
     aggregate = make_sharded_aggregate(mesh, config.axes)
+    store = make_store(
+        config.store, g,
+        mode=app.mode,
+        app_filter=store_app_filter(app, g),
+        use_pallas=resolved_pallas,
+        interpret=config.pallas_interpret,
+        dense_exchange=True,
+    )
 
     result = MiningResult(patterns={}, aggregates=[], stats=RunStats(), embeddings={})
     t_start = time.perf_counter()
 
     n0 = g.n if app.mode == "vertex" else g.m
-    frontier = np.arange(n0, dtype=np.int32)[:, None]
+    store.append(np.arange(n0, dtype=np.int32)[:, None])
+    store.seal(1)
     size = 1
     cap = config.initial_capacity
 
     for step_i in range(1, config.max_steps + 1):
-        b = len(frontier)
-        if b == 0:
+        if store.n_rows == 0:
             break
-        st = StepStats(step=step_i, size=size, n_frontier=b)
-        st.frontier_bytes = frontier.size * 4
+        st = StepStats(step=step_i, size=size, n_frontier=store.n_rows)
+        st.frontier_bytes = store.raw_bytes
+        if store.kind == "odag":
+            st.odag_bytes = store.stored_bytes
         timer = Timer()
+
+        # ---- re-materialise per-worker slices from the store -------------
+        # raw: deterministic block split (broadcast-then-partition); odag:
+        # §5.3 cost-annotated partitions, one extraction per worker.
+        parts = store.worker_parts(n_shards)
+        frontier = (
+            np.concatenate(parts, axis=0)
+            if any(len(p) for p in parts)
+            else np.zeros((0, size), np.int32)
+        )
+        b = len(frontier)
+        # extraction may resurrect pattern-pruned rows (a superset of the
+        # appended rows; see ODAGStore) — stats count what is actually mined
+        st.n_frontier = b
+        st.t_storage = timer.lap()
 
         # ---- pattern aggregation (collective) ---------------------------
         canon_slot = None
@@ -272,6 +331,11 @@ def run_distributed(
                 )
                 result.patterns[code] = result.patterns.get(code, 0) + value
             if not alpha.all():
+                off, pruned = 0, []
+                for p in parts:
+                    pruned.append(p[alpha[off : off + len(p)]])
+                    off += len(p)
+                parts = pruned
                 frontier = frontier[alpha]
                 b = len(frontier)
         if app.collect_embeddings and b:
@@ -281,8 +345,9 @@ def run_distributed(
             result.stats.steps.append(st)
             break
 
-        # ---- coordination-free sharded expansion -------------------------
-        shards, counts_sh = partition_frontier(frontier, n_shards)
+        # ---- coordination-free sharded expansion over the (§5.3
+        # cost-balanced) per-worker slices ---------------------------------
+        shards, counts_sh = pad_parts(parts, size)
         per = shards.shape[1]
         n_valid = (np.arange(per)[None, :] < counts_sh[:, None]) * size
         while True:
@@ -299,21 +364,23 @@ def run_distributed(
         st.n_generated = int(np.asarray(ngen).sum())
         st.n_canonical = int(np.asarray(ncanon).sum())
 
+        # ---- frontier exchange: worker-local children into the store;
+        # seal merges them (odag: DenseODAG OR-allreduce, §5.2) ------------
         children = np.asarray(children)
-        parts = [children[s, : ccount[s]] for s in range(n_shards)]
-        frontier = (
-            np.concatenate(parts, axis=0)
-            if any(len(p) for p in parts)
-            else np.zeros((0, size + 1), np.int32)
-        )
-        # frontier exchange accounting (broadcast-then-partition)
-        if config.use_odag_exchange and len(frontier):
-            from repro.core import odag as odag_lib
-
-            st.odag_bytes = odag_lib.build(frontier).n_bytes
-        st.n_children = len(frontier)
+        for s in range(n_shards):
+            store.append(children[s, : ccount[s]], worker=s)
         st.t_expand = timer.lap()
+        store.seal(size + 1)
+        st.t_storage += timer.lap()
+        st.n_children = store.n_rows
+        # frontier exchange: what a worker ships (raw rows, or the merged
+        # ODAG with store="odag") rides the same collective accounting as
+        # the aggregation reduce
+        st.collective_bytes += store.exchange_bytes
         result.stats.steps.append(st)
+
+        if store.n_rows == 0:
+            break
         size += 1
 
     result.stats.wall_time = time.perf_counter() - t_start

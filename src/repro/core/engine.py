@@ -4,6 +4,14 @@ Each exploration step is one (chunked) jitted device program; the host loop
 only orchestrates capacities and the pattern dictionary, mirroring the
 paper's BSP supersteps. Frontier arrays are bucketed to power-of-two
 capacities so XLA recompiles only per bucket.
+
+Between supersteps the frontier is owned by a pluggable
+:mod:`repro.core.store` (DESIGN.md §7): the engine appends child blocks
+while expanding, ``seal``s at the superstep boundary, and mines the next
+step wave-by-wave from ``store.chunks()`` — with ``store="odag"`` the
+frontier lives ODAG-compressed (paper §5.2) and ``device_budget_bytes``
+bounds how many rows are device-resident at once (larger-than-memory
+mining, paper §5.3 cost-balanced waves).
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ from repro.core import aggregation, explore, pattern as pattern_lib
 from repro.core.api import MiningApp
 from repro.core.graph import DeviceGraph, Graph, to_device
 from repro.core.stats import RunStats, StepStats, Timer
+from repro.core.store import make_store
 from repro.kernels.dispatch import default_use_pallas
 
 
@@ -38,6 +47,15 @@ class EngineConfig:
     #: Pallas interpret override; None -> auto per backend (compiled on
     #: TPU/GPU, interpreter on CPU).
     pallas_interpret: Optional[bool] = None
+    #: how the frontier lives between supersteps: "raw" keeps the dense
+    #: embedding list, "odag" stores per-size ODAGs (paper §5.2) and
+    #: re-materialises via cost-balanced extraction (§5.3).
+    store: str = "raw"
+    #: device byte budget for one materialised frontier wave; when set, the
+    #: frontier store is wrapped in a SpillStore and each superstep is mined
+    #: in waves of at most this many bytes of embedding rows (frontiers
+    #: larger than device memory). None -> one wave per step.
+    device_budget_bytes: Optional[int] = None
 
     def resolve_use_pallas(self) -> bool:
         return default_use_pallas() if self.use_pallas is None else self.use_pallas
@@ -81,15 +99,30 @@ def _make_expand_fn(app: MiningApp, mode: str, use_pallas: bool = False,
     return fn
 
 
-def _initial_frontier(g: DeviceGraph, mode: str) -> jnp.ndarray:
+def _initial_frontier(g: DeviceGraph, mode: str) -> np.ndarray:
     n0 = g.n if mode == "vertex" else g.m
-    return jnp.arange(n0, dtype=jnp.int32)[:, None]
+    return np.arange(n0, dtype=np.int32)[:, None]
 
 
 def _quick_patterns(g: DeviceGraph, mode: str, members, n_valid):
     if mode == "vertex":
         return pattern_lib.quick_pattern_vertex(g, members, n_valid)
     return pattern_lib.quick_pattern_edge(g, members, n_valid)
+
+
+def store_app_filter(app: MiningApp, g: DeviceGraph):
+    """Adapt ``app.filter`` to the per-candidate signature ODAG extraction
+    re-applies (DESIGN.md §7): extraction rows are already one member-set per
+    candidate, so the parent-row indirection is the identity. Returns None
+    for the base accept-all filter (nothing to re-apply)."""
+    if type(app).filter is MiningApp.filter:
+        return None
+
+    def phi(mem, nv, cnd):
+        rows = jnp.arange(int(mem.shape[0]), dtype=jnp.int32)
+        return app.filter(g, mem, nv, rows, cnd)
+
+    return phi
 
 
 def run(
@@ -100,36 +133,71 @@ def run(
     config = config or EngineConfig()
     g = to_device(graph) if isinstance(graph, Graph) else graph
     mode = app.mode
+    use_pallas = config.resolve_use_pallas()
     expand_fn = _make_expand_fn(
         app, mode,
-        use_pallas=config.resolve_use_pallas(),
+        use_pallas=use_pallas,
         fused=config.fused_expand,
         interpret=config.pallas_interpret,
+    )
+    store = make_store(
+        config.store, g,
+        mode=mode,
+        app_filter=store_app_filter(app, g),
+        use_pallas=use_pallas,
+        interpret=config.pallas_interpret,
+        device_budget_bytes=config.device_budget_bytes,
     )
 
     result = MiningResult(patterns={}, aggregates=[], stats=RunStats(), embeddings={})
     t_start = time.perf_counter()
 
-    frontier = _initial_frontier(g, mode)  # (B, size) int32, all rows valid
+    store.append(_initial_frontier(g, mode))
+    store.seal(1)
     size = 1
 
     for step in range(1, config.max_steps + 1):
-        b = int(frontier.shape[0])
+        b = store.n_rows
         if b == 0:
             break
         st = StepStats(step=step, size=size, n_frontier=b)
-        st.frontier_bytes = int(frontier.size) * 4
+        st.frontier_bytes = store.raw_bytes
+        if store.kind == "odag":
+            st.odag_bytes = store.stored_bytes
         timer = Timer()
 
+        # ---- re-materialise the frontier in device-budget waves ----------
+        waves = list(store.chunks())
+        # extraction may resurrect pattern-pruned rows (a superset of the
+        # appended rows; see ODAGStore) — stats count what is actually mined
+        st.n_frontier = sum(len(w) for w in waves)
+        st.t_storage = timer.lap()
+
         # ---- pattern aggregation of this step's embeddings (end of the
-        # step that generated them, per Algorithm 1) ----------------------
+        # step that generated them, per Algorithm 1): quick patterns per
+        # wave on device, level-1 merge on host ---------------------------
         canon_slot = None
         agg = None
         if app.wants_patterns:
-            n_valid = jnp.full((b,), size, dtype=jnp.int32)
-            qp = _quick_patterns(g, mode, frontier, n_valid)
-            agg, canon_slot, _ = aggregation.aggregate_step(
-                g.n, qp, jnp.ones((b,), dtype=bool), app.wants_domains
+            codes_parts, lv_parts = [], []
+            for w in waves:
+                qp = _quick_patterns(
+                    g, mode, jnp.asarray(w),
+                    jnp.full((len(w),), size, dtype=jnp.int32),
+                )
+                codes_parts.append(np.asarray(qp.codes))
+                lv_parts.append(np.asarray(qp.local_verts))
+            codes = (
+                np.concatenate(codes_parts)
+                if codes_parts else np.zeros((0, 3), np.int64)
+            )
+            lv = (
+                np.concatenate(lv_parts)
+                if lv_parts
+                else np.zeros((0, pattern_lib.MAX_PATTERN_VERTICES), np.int32)
+            )
+            agg, canon_slot = aggregation.aggregate_rows(
+                g.n, codes, lv, app.wants_domains
             )
             result.aggregates.append(agg)
             st.n_quick_patterns = agg.n_quick
@@ -150,50 +218,64 @@ def run(
                 result.patterns[code] = result.patterns.get(code, 0) + value
 
             if not alpha.all():
-                frontier = frontier[np.asarray(alpha)]
-                b = int(frontier.shape[0])
-        if app.collect_embeddings and b:
-            result.embeddings[size] = np.asarray(frontier)
+                off, pruned = 0, []
+                for w in waves:
+                    pruned.append(w[alpha[off : off + len(w)]])
+                    off += len(w)
+                waves = pruned
+        b_live = sum(len(w) for w in waves)
+        if app.collect_embeddings and b_live:
+            live = [w for w in waves if len(w)]
+            result.embeddings[size] = (
+                np.asarray(live[0])
+                if len(live) == 1
+                else np.concatenate(live, axis=0)
+            )
 
         # ---- termination ---------------------------------------------------
-        if app.termination_filter(size) or b == 0 or step == config.max_steps:
+        if app.termination_filter(size) or b_live == 0 or step == config.max_steps:
             result.stats.steps.append(st)
             break
 
-        # ---- expansion (chunked, capacity-bucketed) ----------------------
-        children_parts = []
+        # ---- expansion (chunked, capacity-bucketed), children appended to
+        # the store as they are produced ----------------------------------
         cap = max(config.initial_capacity, 1)
-        for lo in range(0, b, config.chunk_size):
-            chunk = frontier[lo : lo + config.chunk_size]
-            cb = int(chunk.shape[0])
-            bucket = min(config.chunk_size, _next_pow2(max(cb, 1)))
-            pad = bucket - cb
-            if pad:
-                chunk = jnp.concatenate(
-                    [chunk, jnp.full((pad, size), -1, jnp.int32)], axis=0
+        for w in waves:
+            for lo in range(0, len(w), config.chunk_size):
+                chunk = np.asarray(w[lo : lo + config.chunk_size])
+                cb = int(chunk.shape[0])
+                bucket = min(config.chunk_size, _next_pow2(max(cb, 1)))
+                pad = bucket - cb
+                if pad:
+                    chunk = np.concatenate(
+                        [chunk, np.full((pad, size), -1, np.int32)], axis=0
+                    )
+                n_valid = jnp.concatenate(
+                    [jnp.full((cb,), size, jnp.int32), jnp.zeros((pad,), jnp.int32)]
                 )
-            n_valid = jnp.concatenate(
-                [jnp.full((cb,), size, jnp.int32), jnp.zeros((pad,), jnp.int32)]
-            )
+                chunk = jnp.asarray(chunk)
 
-            while True:
-                children, count, ngen, ncanon = expand_fn(g, chunk, n_valid, out_cap=cap)
-                count = int(count)
-                if count <= cap:
-                    break
-                cap = _next_pow2(count)
-            st.n_generated += int(ngen)
-            st.n_canonical += int(ncanon)
-            if count:
-                children_parts.append(children[:count])
+                while True:
+                    children, count, ngen, ncanon = expand_fn(
+                        g, chunk, n_valid, out_cap=cap
+                    )
+                    count = int(count)
+                    if count <= cap:
+                        break
+                    cap = _next_pow2(count)
+                st.n_generated += int(ngen)
+                st.n_canonical += int(ncanon)
+                if count:
+                    store.append(np.asarray(children[:count]))
+                    st.n_children += count
 
         st.t_expand = timer.lap()
-        st.n_children = sum(int(c.shape[0]) for c in children_parts)
+        store.seal(size + 1)
+        st.t_storage += timer.lap()
         result.stats.steps.append(st)
 
-        if not children_parts:
+        if store.n_rows == 0:
             break
-        frontier = jnp.concatenate(children_parts, axis=0)
         size += 1
 
     result.stats.wall_time = time.perf_counter() - t_start

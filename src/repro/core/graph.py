@@ -80,16 +80,21 @@ class Graph:
         return indptr, v.astype(np.int32), e
 
     def neighbor_table(self):
-        """Padded (n, D) neighbour table + matching edge-id table, pad = -1."""
+        """Padded (n, D) neighbour table + matching edge-id table, pad = -1.
+
+        Vectorised scatter: CSR entry j of vertex v lands at column
+        ``j - indptr[v]`` — no per-vertex Python loop, which dominated
+        device-graph build time at mico/patents scales."""
         indptr, indices, eids = self.csr()
         deg = (indptr[1:] - indptr[:-1]).astype(np.int32)
         d = max(1, int(deg.max()) if self.n else 1)
         nbr = np.full((self.n, d), -1, dtype=np.int32)
         ned = np.full((self.n, d), -1, dtype=np.int32)
-        for vtx in range(self.n):
-            s, t = indptr[vtx], indptr[vtx + 1]
-            nbr[vtx, : t - s] = indices[s:t]
-            ned[vtx, : t - s] = eids[s:t]
+        if len(indices):
+            rows = np.repeat(np.arange(self.n), deg)
+            cols = np.arange(len(indices)) - np.repeat(indptr[:-1], deg)
+            nbr[rows, cols] = indices
+            ned[rows, cols] = eids
         return nbr, ned, deg
 
     def adjacency_bits(self) -> np.ndarray:

@@ -27,7 +27,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import canonical
-from repro.core.bitset import pack_bool_matrix
 from repro.core.graph import DeviceGraph
 from repro.kernels.canonical_check import ops as cc_ops
 
@@ -231,21 +230,28 @@ class DenseODAG:
 
 
 def build_dense(members: np.ndarray, n_vertices: int, k: int) -> DenseODAG:
+    """Scatter rows straight into the packed bitmaps (LSB-first, matching
+    :func:`repro.core.bitset.pack_bool_matrix`): no unpacked (N, N) bool
+    intermediate, so the host cost is the *packed* O(k·N²/8) bytes the
+    exchange format itself costs — not 8x that."""
     members = np.asarray(members)[:, :k]
-    dom = np.zeros((k, n_vertices), dtype=bool)
+    w = (n_vertices + 31) // 32
+    dom = np.zeros((k, w), dtype=np.uint32)
+    conn = np.zeros((max(k - 1, 0), n_vertices, w), dtype=np.uint32)
     for i in range(k):
-        dom[i, members[:, i]] = True
-    conn = np.zeros((max(k - 1, 0), n_vertices, n_vertices), dtype=bool)
-    for i in range(k - 1):
-        conn[i, members[:, i], members[:, i + 1]] = True
+        v = members[:, i]
+        np.bitwise_or.at(dom[i], v // 32, np.uint32(1) << (v % 32).astype(np.uint32))
+        if i < k - 1:
+            nxt = members[:, i + 1]
+            np.bitwise_or.at(
+                conn[i],
+                (v, nxt // 32),
+                np.uint32(1) << (nxt % 32).astype(np.uint32),
+            )
     return DenseODAG(
         k=k,
-        domain_bits=jnp.asarray(pack_bool_matrix(dom)),
-        conn_bits=jnp.asarray(
-            np.stack([pack_bool_matrix(c) for c in conn], axis=0)
-            if k > 1
-            else np.zeros((0, n_vertices, (n_vertices + 31) // 32), np.uint32)
-        ),
+        domain_bits=jnp.asarray(dom),
+        conn_bits=jnp.asarray(conn),
     )
 
 

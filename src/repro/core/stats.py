@@ -24,6 +24,15 @@ class StepStats:
     t_aggregate: float = 0.0         # P phase
     t_storage: float = 0.0           # W+R phases (ODAG build/extract)
 
+    @property
+    def compression(self) -> float:
+        """Fig. 9 per-step ratio: raw embedding-list bytes over what the
+        frontier store actually held between supersteps (1.0 for RawStore
+        or an empty frontier)."""
+        if self.odag_bytes <= 0 or self.frontier_bytes <= 0:
+            return 1.0
+        return self.frontier_bytes / self.odag_bytes
+
 
 @dataclasses.dataclass
 class RunStats:
@@ -42,7 +51,14 @@ class RunStats:
             "total_embeddings": self.total_embeddings,
             "total_iso_checks": sum(s.n_iso_checks for s in self.steps),
             "wall_time_s": round(self.wall_time, 4),
+            "max_compression": round(
+                max((s.compression for s in self.steps), default=1.0), 1
+            ),
         }
+
+    def compression_by_size(self) -> Dict[int, float]:
+        """Per-step Fig. 9 curve: embedding size -> frontier compression."""
+        return {s.size: s.compression for s in self.steps if s.odag_bytes > 0}
 
 
 class Timer:

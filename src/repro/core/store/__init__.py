@@ -1,0 +1,17 @@
+"""Pluggable frontier stores: how embeddings live between BSP supersteps.
+
+See DESIGN.md §7. ``RawStore`` keeps the dense embedding list (baseline),
+``ODAGStore`` keeps per-size ODAGs with cost-balanced extraction (§5.2/§5.3),
+``SpillStore`` bounds per-wave materialisation to a device byte budget.
+"""
+from repro.core.store.base import FrontierStore, RawStore, make_store
+from repro.core.store.odag_store import ODAGStore
+from repro.core.store.spill import SpillStore
+
+__all__ = [
+    "FrontierStore",
+    "RawStore",
+    "ODAGStore",
+    "SpillStore",
+    "make_store",
+]

@@ -1,0 +1,188 @@
+"""Frontier-store interface + the dense-array store (DESIGN.md §7).
+
+A :class:`FrontierStore` owns how the embeddings of one BSP superstep live
+*between* supersteps — the data-flow pivot that decouples frontier size from
+device memory. The engines never hold "the frontier" as one resident array
+any more; they
+
+  * ``append`` child blocks while expanding (write side, staging area),
+  * ``seal`` at the superstep boundary (the store may compress / merge
+    worker-local state here — this is the paper's §5.2 storage step),
+  * iterate ``chunks`` of re-materialised rows at the next superstep
+    (read side; bounded waves when a device budget is set), and
+  * read byte stats (``raw_bytes`` vs ``stored_bytes``) that feed the
+    Fig. 9/10 compression accounting in :class:`repro.core.stats.StepStats`.
+
+Concrete stores: :class:`RawStore` (this module) keeps the rows verbatim —
+exactly the pre-subsystem behaviour, extracted behind the interface;
+:class:`repro.core.store.odag_store.ODAGStore` keeps them as per-size ODAGs;
+:class:`repro.core.store.spill.SpillStore` wraps either to bound the rows
+materialised per wave.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+
+class FrontierStore(abc.ABC):
+    """Owns one frontier (all embeddings of the current size) between steps."""
+
+    #: "raw" or "odag" — engines use this for the Fig. 9 byte accounting.
+    kind: str = "raw"
+
+    # -- write side (during a superstep's expansion) ----------------------
+    @abc.abstractmethod
+    def append(self, rows: np.ndarray, worker: int = 0) -> None:
+        """Stage a block of same-size child embeddings (host int32 (B, k)).
+
+        ``worker`` tags the producing worker so distributed seals can merge
+        worker-local state (RawStore ignores it)."""
+
+    @abc.abstractmethod
+    def seal(self, size: int) -> None:
+        """Superstep boundary: promote the staged blocks of ``size``-column
+        rows to the current frontier, dropping the previous one. Compressing
+        stores build their between-step representation here."""
+
+    # -- read side (the next superstep) -----------------------------------
+    @property
+    @abc.abstractmethod
+    def n_rows(self) -> int:
+        """Rows appended into the sealed frontier (the Fig. 9 baseline)."""
+
+    @property
+    @abc.abstractmethod
+    def size(self) -> int:
+        """Embedding size (columns) of the sealed frontier."""
+
+    @property
+    def raw_bytes(self) -> int:
+        """What shipping the frontier as a dense embedding list costs."""
+        return self.n_rows * self.size * 4
+
+    @property
+    @abc.abstractmethod
+    def stored_bytes(self) -> int:
+        """What the store actually holds between supersteps."""
+
+    @property
+    def exchange_bytes(self) -> int:
+        """Bytes a worker ships per frontier exchange of the sealed
+        frontier: the dense row block here (broadcast-then-partition); the
+        merged (Dense)ODAG for the ODAG store. Feeds
+        ``StepStats.collective_bytes`` in the distributed runtime."""
+        return self.raw_bytes
+
+    @abc.abstractmethod
+    def chunks(self, max_rows: Optional[int] = None) -> Iterator[np.ndarray]:
+        """Yield the frontier re-materialised as int32 (b, size) waves of at
+        most ``max_rows`` rows each (one wave when unbounded)."""
+
+    def materialize(self) -> np.ndarray:
+        """The whole frontier as one host array (convenience over chunks)."""
+        waves = list(self.chunks())
+        if not waves:
+            return np.zeros((0, max(self.size, 1)), np.int32)
+        return waves[0] if len(waves) == 1 else np.concatenate(waves, axis=0)
+
+    def worker_parts(self, n_workers: int) -> List[np.ndarray]:
+        """Re-materialise the frontier as one slice per worker (paper §5.3).
+
+        Default: even block split (what ``partition_frontier`` did);
+        cost-balancing stores override this with §5.3 cost-annotated
+        partitions."""
+        rows = self.materialize()
+        b = len(rows)
+        per = -(-b // n_workers) if b else 0
+        return [rows[w * per : (w + 1) * per] for w in range(n_workers)]
+
+
+class RawStore(FrontierStore):
+    """Dense embedding-list store: the pre-subsystem engine behaviour.
+
+    ``stored_bytes == raw_bytes`` — nothing is compressed; ``chunks`` yields
+    zero-copy views. This is the Fig. 9/10 baseline the ODAG store is
+    measured against."""
+
+    kind = "raw"
+
+    def __init__(self) -> None:
+        self._staged: List[np.ndarray] = []
+        self._frontier = np.zeros((0, 1), np.int32)
+
+    def append(self, rows: np.ndarray, worker: int = 0) -> None:
+        rows = np.asarray(rows, dtype=np.int32)
+        if len(rows):
+            self._staged.append(rows)
+
+    def seal(self, size: int) -> None:
+        self._frontier = (
+            np.concatenate(self._staged, axis=0)
+            if self._staged
+            else np.zeros((0, size), np.int32)
+        )
+        self._staged = []
+
+    @property
+    def n_rows(self) -> int:
+        return len(self._frontier)
+
+    @property
+    def size(self) -> int:
+        return self._frontier.shape[1]
+
+    @property
+    def stored_bytes(self) -> int:
+        return self.raw_bytes
+
+    def chunks(self, max_rows: Optional[int] = None) -> Iterator[np.ndarray]:
+        if not len(self._frontier):
+            return
+        step = max_rows or len(self._frontier)
+        for lo in range(0, len(self._frontier), step):
+            yield self._frontier[lo : lo + step]
+
+    def materialize(self) -> np.ndarray:
+        return self._frontier
+
+
+def make_store(
+    kind: str,
+    g=None,
+    *,
+    mode: str = "vertex",
+    app_filter=None,
+    use_pallas: bool = False,
+    interpret=None,
+    dense_exchange: bool = False,
+    device_budget_bytes: Optional[int] = None,
+) -> FrontierStore:
+    """Build the store an engine config asks for.
+
+    ``kind``: "raw" or "odag". An ``device_budget_bytes`` wraps the store in
+    a :class:`SpillStore` so re-materialisation happens in device-budget
+    sized waves (larger-than-device-memory mining)."""
+    from repro.core.store.odag_store import ODAGStore
+    from repro.core.store.spill import SpillStore
+
+    if kind == "raw":
+        store: FrontierStore = RawStore()
+    elif kind == "odag":
+        if g is None:
+            raise ValueError("store='odag' needs the device graph")
+        store = ODAGStore(
+            g,
+            mode=mode,
+            app_filter=app_filter,
+            use_pallas=use_pallas,
+            interpret=interpret,
+            dense_exchange=dense_exchange,
+        )
+    else:
+        raise ValueError(f"unknown frontier store kind: {kind!r}")
+    if device_budget_bytes is not None:
+        store = SpillStore(store, device_budget_bytes)
+    return store

@@ -26,7 +26,7 @@ SCRIPT = textwrap.dedent(
         ("fsm", lambda: FSMApp(support=3, max_size=3)),
     ]:
         ser = run(g, mk(), EngineConfig())
-        dist = run_distributed(g, mk(), mesh, DistConfig(use_odag_exchange=True))
+        dist = run_distributed(g, mk(), mesh, DistConfig(store="odag"))
         out[name] = {
             "match": ser.patterns == dist.patterns,
             "n": len(dist.patterns),

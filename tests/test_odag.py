@@ -73,6 +73,90 @@ def test_dense_merge_and_extract():
     assert set(map(tuple, emb.tolist())) == set(map(tuple, ext.tolist()))
 
 
+def _star(n_leaves=6):
+    """Single-hub graph: vertex 0 adjacent to every leaf — one first-level
+    element carries (almost) all extraction cost."""
+    return G.Graph(
+        n=n_leaves + 1,
+        labels=np.zeros(n_leaves + 1, dtype=np.int32),
+        edges=np.array([[0, v] for v in range(1, n_leaves + 1)], np.int32),
+    )
+
+
+def test_partition_masks_cover_domain_exactly_once():
+    """§5.3: the per-worker masks are a partition of the first-level domain
+    — every element claimed by exactly one worker, none dropped."""
+    for g, size in [
+        (G.random_labeled(80, 250, n_labels=1, seed=7), 3),
+        (_star(), 2),
+    ]:
+        emb = _frontier(g, MotifsApp(max_size=size, collect_embeddings=True), size)
+        o = odag.build(emb)
+        for n_workers in (1, 2, 3, 8, 64):
+            masks = odag.partition_by_cost(o, n_workers)
+            assert len(masks) == n_workers
+            stacked = np.stack(masks)
+            assert (stacked.sum(axis=0) == 1).all()
+
+
+def test_partition_masks_empty_frontier():
+    o = odag.build(np.zeros((0, 3), np.int32), k=3)
+    masks = odag.partition_by_cost(o, 4)
+    assert len(masks) == 4
+    assert all(m.shape == (0,) and m.dtype == bool for m in masks)
+    assert len(odag.extract(to_device(_star()), o)) == 0
+
+
+def test_extract_partition_shards_union_to_extract():
+    """Per-worker extractions are disjoint and union to the full extraction."""
+    g = G.random_labeled(60, 180, n_labels=2, seed=9)
+    dg = to_device(g)
+    emb = _frontier(g, MotifsApp(max_size=3, collect_embeddings=True), 3)
+    o = odag.build(emb)
+    full = set(map(tuple, odag.extract(dg, o).tolist()))
+    for n_workers in (2, 5):
+        shards = [
+            set(map(tuple, odag.extract_partition(dg, o, m).tolist()))
+            for m in odag.partition_by_cost(o, n_workers)
+        ]
+        assert set().union(*shards) == full
+        assert sum(len(s) for s in shards) == len(full)  # pairwise disjoint
+
+
+def test_extract_partition_single_hub():
+    """Star graph: one first-level element exceeds the per-worker cost
+    target; it goes to one worker (bounded imbalance, no recursion) and the
+    shard union is still exact."""
+    g = _star(8)
+    dg = to_device(g)
+    emb = _frontier(g, MotifsApp(max_size=3, collect_embeddings=True), 3)
+    o = odag.build(emb)
+    masks = odag.partition_by_cost(o, 3)
+    assert (np.stack(masks).sum(axis=0) == 1).all()
+    full = set(map(tuple, odag.extract(dg, o).tolist()))
+    shards = [
+        set(map(tuple, odag.extract_partition(dg, o, m).tolist()))
+        for m in masks
+    ]
+    assert set().union(*shards) == full
+    assert full == set(map(tuple, emb.tolist()))
+
+
+def test_merge_roundtrips_worker_local_odags():
+    """Worker-local ODAGs merge into one whose extraction equals the union
+    of the workers' embeddings (the distributed seal path), including a
+    worker with an empty share."""
+    g = G.random_labeled(60, 150, n_labels=1, seed=5)
+    dg = to_device(g)
+    emb = _frontier(g, MotifsApp(max_size=3, collect_embeddings=True), 3)
+    third = len(emb) // 3
+    shares = [emb[:third], emb[third:], emb[:0]]  # one worker empty
+    merged = odag.merge([odag.build(s, k=3) for s in shares])
+    ext = odag.extract(dg, merged)
+    assert set(map(tuple, ext.tolist())) == set(map(tuple, emb.tolist()))
+    assert len(ext) == len(emb)
+
+
 def test_cost_estimate_partitions_evenly():
     """§5.3: the path-count annotation bounds real extraction work."""
     g = G.random_labeled(80, 250, n_labels=1, seed=7)

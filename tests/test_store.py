@@ -1,0 +1,189 @@
+"""Frontier-store subsystem tests (DESIGN.md §7): store unit behaviour and
+the acceptance contract — ODAGStore / SpillStore engine runs reproduce
+RawStore results on motifs, cliques, and FSM for both execution paths."""
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, graph as G, run, to_device
+from repro.core.apps import CliquesApp, FSMApp, MotifsApp
+from repro.core.store import ODAGStore, RawStore, SpillStore, make_store
+
+CFG = dict(chunk_size=2048, initial_capacity=2048)
+
+
+def _emb_sets(res):
+    return {k: set(map(tuple, v.tolist())) for k, v in res.embeddings.items()}
+
+
+def _assert_same(base, other):
+    assert base.patterns == other.patterns
+    assert _emb_sets(base) == _emb_sets(other)
+
+
+# ---------------------------------------------------------------------------
+# unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_raw_store_roundtrip_and_waves():
+    s = RawStore()
+    a = np.arange(6, dtype=np.int32).reshape(3, 2)
+    b = np.arange(6, 14, dtype=np.int32).reshape(4, 2)
+    s.append(a)
+    s.append(b, worker=1)      # worker tag is ignored by RawStore
+    s.seal(2)
+    assert s.n_rows == 7 and s.size == 2
+    assert s.raw_bytes == s.stored_bytes == 7 * 2 * 4
+    assert (s.materialize() == np.concatenate([a, b])).all()
+    waves = list(s.chunks(max_rows=3))
+    assert [len(w) for w in waves] == [3, 3, 1]
+    assert (np.concatenate(waves) == s.materialize()).all()
+    parts = s.worker_parts(3)
+    assert (np.concatenate(parts) == s.materialize()).all()
+    # re-seal with nothing staged -> empty frontier of the new width
+    s.seal(3)
+    assert s.n_rows == 0 and list(s.chunks()) == []
+
+
+def test_spill_store_bounds_wave_rows():
+    inner = RawStore()
+    inner.append(np.arange(20, dtype=np.int32).reshape(10, 2))
+    inner.seal(2)
+    s = SpillStore(inner, device_budget_bytes=3 * 2 * 4)   # 3 rows of width 2
+    assert s.budget_rows() == 3
+    waves = list(s.chunks())
+    assert max(len(w) for w in waves) <= 3
+    assert (np.concatenate(waves) == inner.materialize()).all()
+    with pytest.raises(ValueError):
+        SpillStore(RawStore(), 0)
+
+
+def test_odag_store_seal_and_extract():
+    g = G.random_labeled(40, 90, n_labels=1, seed=2)
+    dg = to_device(g)
+    res = run(g, MotifsApp(max_size=3, collect_embeddings=True),
+              EngineConfig(**CFG))
+    emb = res.embeddings[3]
+    s = ODAGStore(dg)
+    half = len(emb) // 2
+    s.append(emb[:half])
+    s.append(emb[half:])
+    s.seal(3)
+    assert s.n_rows == len(emb)
+    assert 0 < s.stored_bytes < s.raw_bytes      # actually compressed
+    want = set(map(tuple, emb.tolist()))
+    assert set(map(tuple, s.materialize().tolist())) == want
+    # budgeted waves cover the same set, cost-balanced per §5.3, and honour
+    # the hard per-wave row bound (hub partitions are sliced)
+    budget = max(len(emb) // 3, 1)
+    waves = list(s.chunks(max_rows=budget))
+    assert len(waves) > 1
+    assert max(len(w) for w in waves) <= budget
+    got = set(map(tuple, np.concatenate(waves).tolist()))
+    assert got == want
+    # per-worker slices: disjoint, union exact
+    parts = s.worker_parts(4)
+    assert sum(len(p) for p in parts) == len(want)
+    assert set(map(tuple, np.concatenate(parts).tolist())) == want
+
+
+def test_odag_store_dense_exchange_merges_workers():
+    g = G.random_labeled(40, 90, n_labels=1, seed=4)
+    dg = to_device(g)
+    res = run(g, MotifsApp(max_size=3, collect_embeddings=True),
+              EngineConfig(**CFG))
+    emb = res.embeddings[3]
+    s = ODAGStore(dg, dense_exchange=True)
+    third = len(emb) // 3
+    s.append(emb[:third], worker=0)
+    s.append(emb[third:], worker=1)
+    s.append(emb[:0], worker=2)
+    s.seal(3)
+    assert set(map(tuple, s.materialize().tolist())) == set(
+        map(tuple, emb.tolist())
+    )
+    # the exchange ships the fixed-shape dense form (what the OR-allreduce
+    # collective would move), not the embedding list
+    assert s.exchange_bytes > 0
+
+
+def test_make_store_kinds():
+    g = to_device(G.triangle_plus_tail())
+    assert isinstance(make_store("raw"), RawStore)
+    assert isinstance(make_store("odag", g), ODAGStore)
+    spilled = make_store("raw", device_budget_bytes=1024)
+    assert isinstance(spilled, SpillStore) and spilled.kind == "raw"
+    assert make_store("odag", g, device_budget_bytes=64).kind == "odag"
+    with pytest.raises(ValueError):
+        make_store("mmap")
+    with pytest.raises(ValueError):
+        make_store("odag")      # needs the device graph
+
+
+# ---------------------------------------------------------------------------
+# acceptance: engine equivalence across stores
+# ---------------------------------------------------------------------------
+
+APP_FACTORIES = [
+    ("motifs", lambda: MotifsApp(max_size=4, collect_embeddings=True)),
+    ("cliques", lambda: CliquesApp(max_size=4)),
+    ("fsm", lambda: FSMApp(support=3, max_size=3, collect_embeddings=True)),
+]
+
+
+@pytest.mark.parametrize("name,mk", APP_FACTORIES, ids=[n for n, _ in APP_FACTORIES])
+def test_engine_odag_store_matches_raw(name, mk):
+    g = G.random_labeled(40, 90, n_labels=3, seed=1)
+    base = run(g, mk(), EngineConfig(**CFG))
+    odag = run(g, mk(), EngineConfig(store="odag", **CFG))
+    _assert_same(base, odag)
+    # the compressed representation is what lived between supersteps
+    deep = [s for s in odag.stats.steps if s.size >= 3]
+    assert any(s.odag_bytes > 0 for s in deep)
+
+
+@pytest.mark.parametrize("store", ["raw", "odag"])
+def test_engine_spill_budget_smaller_than_peak_matches(store):
+    """SpillStore with a device budget below the peak frontier mines in
+    waves and still reproduces the RawStore results."""
+    g = G.random_labeled(40, 90, n_labels=3, seed=1)
+    mk = lambda: MotifsApp(max_size=4, collect_embeddings=True)
+    base = run(g, mk(), EngineConfig(**CFG))
+    peak = max(s.frontier_bytes for s in base.stats.steps)
+    budget = max(peak // 8, 64)
+    assert budget < peak
+    spilled = run(
+        g, mk(),
+        EngineConfig(store=store, device_budget_bytes=budget, **CFG),
+    )
+    _assert_same(base, spilled)
+
+
+def test_engine_fsm_spill_matches():
+    g = G.random_labeled(40, 90, n_labels=3, seed=1)
+    mk = lambda: FSMApp(support=3, max_size=3)
+    base = run(g, mk(), EngineConfig(**CFG))
+    spilled = run(
+        g, mk(),
+        EngineConfig(store="odag", device_budget_bytes=256, **CFG),
+    )
+    assert base.patterns == spilled.patterns
+
+
+# ---------------------------------------------------------------------------
+# acceptance: distributed equivalence across stores (1-device mesh; the
+# multi-device collective path runs in test_distributed.py under @slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,mk", APP_FACTORIES, ids=[n for n, _ in APP_FACTORIES])
+def test_distributed_odag_store_matches_serial(name, mk):
+    import jax
+
+    from repro.core.distributed import DistConfig, run_distributed
+
+    mesh = jax.make_mesh((1,), ("data",))
+    g = G.random_labeled(40, 90, n_labels=3, seed=1)
+    ser = run(g, mk(), EngineConfig(**CFG))
+    raw = run_distributed(g, mk(), mesh, DistConfig())
+    odag = run_distributed(g, mk(), mesh, DistConfig(store="odag"))
+    _assert_same(ser, raw)
+    _assert_same(ser, odag)
