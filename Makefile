@@ -12,10 +12,12 @@ test:
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
 
-# full benchmark sweep (one bench per paper table/figure)
+# full benchmark sweep (one bench per paper table/figure), with the
+# machine-readable trajectory written to BENCH_3.json
 bench:
-	PYTHONPATH=src:. python -m benchmarks.run
+	PYTHONPATH=src:. python -m benchmarks.run --json
 
-# quick smoke: just the mining-perf ladder (jnp vs pallas variants)
+# quick smoke: the mining-perf ladder (jnp vs pallas variants) plus the
+# fused-superstep gate (syncs-per-step + speedup vs the PR-2 chunk loop)
 bench-smoke:
-	PYTHONPATH=src:. python -m benchmarks.run --smoke
+	PYTHONPATH=src:. python -m benchmarks.run --smoke --json

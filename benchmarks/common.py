@@ -1,11 +1,43 @@
-"""Shared benchmark plumbing: CSV emission per the harness contract."""
+"""Shared benchmark plumbing: CSV emission per the harness contract, plus
+an in-process record of every emitted row so ``benchmarks/run.py --json``
+can write the machine-readable perf trajectory (BENCH_<n>.json) that
+future PRs gate against."""
 from __future__ import annotations
 
 import time
+from typing import Dict, List
+
+#: every emit() of the process, in order — drained by run.py --json.
+RECORDS: List[Dict] = []
+
+
+def _parse_derived(derived: str) -> Dict:
+    """Decode the ``k=v;k=v`` derived field into typed values (numbers
+    where they parse, strings otherwise)."""
+    out: Dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+    RECORDS.append(
+        {
+            "name": name,
+            "us_per_call": round(float(us_per_call), 1),
+            "derived": _parse_derived(derived),
+        }
+    )
 
 
 def timed(fn, *args, repeat: int = 1, **kw):

@@ -4,12 +4,17 @@ Prints ``name,us_per_call,derived`` CSV rows. The dry-run/roofline tables
 (assignment §Dry-run/§Roofline) live in dryrun_results.json, produced by
 ``python -m repro.launch.dryrun``; ``bench_roofline`` summarises them here.
 
-``--smoke`` runs only the mining-perf ladder (jnp vs pallas variants) —
-the quick sanity sweep behind ``make bench-smoke``.
+``--smoke`` runs the mining-perf ladder plus the fused-superstep gate —
+the quick sanity sweep behind ``make bench-smoke``. ``--json [PATH]``
+additionally writes every emitted row (us_per_call + parsed derived
+stats) as machine-readable JSON (default ``BENCH_3.json``), the perf
+trajectory future PRs gate against instead of an empty history.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import traceback
 
@@ -18,7 +23,12 @@ def main(argv=None) -> None:
     args = argparse.ArgumentParser(description=__doc__)
     args.add_argument(
         "--smoke", action="store_true",
-        help="run only the fast mining-perf ladder",
+        help="run only the fast mining-perf ladder + superstep gate",
+    )
+    args.add_argument(
+        "--json", nargs="?", const="BENCH_3.json", default=None,
+        metavar="PATH",
+        help="write emitted rows as JSON (default path: BENCH_3.json)",
     )
     opts = args.parse_args(argv)
     from benchmarks import (
@@ -30,6 +40,7 @@ def main(argv=None) -> None:
         bench_roofline,
         bench_single_thread,
         bench_scalability,
+        bench_superstep,
         bench_two_level,
     )
 
@@ -42,10 +53,14 @@ def main(argv=None) -> None:
         ("breakdown(fig12)", bench_breakdown.main),
         ("large(table5)", bench_large.main),
         ("mining_perf(§Perf)", bench_mining_perf.main),
+        ("superstep(§8)", bench_superstep.main),
         ("roofline(dry-run)", bench_roofline.main),
     ]
     if opts.smoke:
-        benches = [("mining_perf(§Perf)", bench_mining_perf.main)]
+        benches = [
+            ("mining_perf(§Perf)", bench_mining_perf.main),
+            ("superstep(§8)", bench_superstep.main),
+        ]
     failures = 0
     for name, fn in benches:
         print(f"# --- {name} ---", flush=True)
@@ -54,6 +69,23 @@ def main(argv=None) -> None:
         except Exception:
             failures += 1
             traceback.print_exc()
+    if opts.json:
+        import jax
+
+        from benchmarks.common import RECORDS
+
+        with open(opts.json, "w") as f:
+            json.dump(
+                {
+                    "benches": RECORDS,
+                    "failures": failures,
+                    "backend": jax.default_backend(),
+                    "python": platform.python_version(),
+                },
+                f,
+                indent=2,
+            )
+        print(f"# wrote {len(RECORDS)} rows to {opts.json}", flush=True)
     if failures:
         sys.exit(1)
 

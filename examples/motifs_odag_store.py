@@ -16,6 +16,14 @@ a live engine run (``StepStats.compression``).
 Other store knobs (DESIGN.md §7): the serial engine additionally accepts
 ``EngineConfig(store="odag", device_budget_bytes=...)`` to mine frontiers
 larger than device memory in budget-sized waves (SpillStore).
+
+Superstep knobs (DESIGN.md §8): ``async_chunks=True`` (default on both
+``EngineConfig`` and ``DistConfig``) runs the fused pipeline — children,
+counts, and quick-pattern codes in one device pass, at most two host
+syncs per superstep; ``compact_kernel`` routes compaction through the
+Pallas stream-compaction kernel (auto-on where Pallas compiles natively).
+With ``store="odag"`` the carried-code shortcut is skipped (extraction
+may resurrect rows) but the dispatch stays sync-free.
 """
 import jax
 

@@ -5,7 +5,12 @@
 ``EngineConfig`` knobs worth knowing: ``store="odag"`` keeps the frontier
 ODAG-compressed between supersteps (paper §5.2), ``device_budget_bytes``
 bounds the device-resident slice per wave (larger-than-memory mining) —
-see DESIGN.md §7 and ``examples/motifs_odag_store.py``.
+see DESIGN.md §7 and ``examples/motifs_odag_store.py``. The superstep
+itself runs as the fused pipeline of DESIGN.md §8: ``async_chunks=True``
+(default) dispatches chunks sync-free with child pattern codes computed
+in the same device pass (``False`` = the PR-2 chunk loop, one host sync
+per chunk), and ``compact_kernel`` routes compaction through the Pallas
+stream-compaction kernel (auto-on where Pallas compiles natively).
 """
 from repro.core import EngineConfig, graph, run
 from repro.core.apps import MotifsApp

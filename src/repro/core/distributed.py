@@ -20,6 +20,14 @@ exploration step:
     partitioning + extraction (§5.3). Exchange bytes (``collective_bytes``)
     then scale with the ODAG, never the embedding list.
 
+The superstep body is the fused pipeline of DESIGN.md §8
+(``DistConfig.async_chunks``): every worker's shard runs the same
+``explore.fused_chunk_step`` program the serial engine jits — expansion +
+canonicality + app filter + stream compaction + (raw store) the children's
+quick-pattern codes in one device pass — children land in the store as
+device arrays, and the host takes ONE control sync per superstep on the
+exact (unclamped) child counts.
+
 ``run_distributed`` mirrors ``engine.run`` and must produce identical
 results (integration-tested); ``mining_step_for_dryrun`` is the fixed-shape
 program the multi-pod dry-run lowers on the 512-chip mesh.
@@ -63,6 +71,7 @@ from repro.core.engine import (
     EngineConfig,
     MiningResult,
     _next_pow2,
+    _retire,
     store_app_filter,
 )
 from repro.core.graph import DeviceGraph, Graph, to_device
@@ -103,8 +112,17 @@ def partition_frontier(frontier: np.ndarray, n_shards: int):
 
 
 def make_sharded_expand(app: MiningApp, mesh: Mesh, axes=("data",),
-                        use_pallas: bool = False, interpret=None):
-    """One BSP superstep: coordination-free expand over the mesh."""
+                        use_pallas: bool = False, interpret=None,
+                        compact_kernel: bool = False,
+                        with_patterns: bool = False):
+    """One BSP superstep: coordination-free expand over the mesh.
+
+    The worker body is the SAME fused chunk program the serial engine jits
+    (``explore.fused_chunk_step``, DESIGN.md §8): expansion + canonicality
+    + app filter + stream compaction, and — with ``with_patterns`` — the
+    children's quick-pattern codes in the same device pass, so the next
+    superstep's aggregation needs no second upload of the frontier.
+    """
 
     mode = app.mode
     spec_in = P(axes)
@@ -114,29 +132,29 @@ def make_sharded_expand(app: MiningApp, mesh: Mesh, axes=("data",),
         def worker(g, members, n_valid):
             m = members[0]          # shard_map adds the leading shard dim
             nv = n_valid[0]
-            if mode == "vertex":
-                exp = explore.expand_vertex(
-                    g, m, nv, use_pallas=use_pallas, interpret=interpret
-                )
-            else:
-                exp = explore.expand_edge(
-                    g, m, nv, use_pallas=use_pallas, interpret=interpret
-                )
-            keep = exp.keep & app.filter(g, m, nv, exp.rows, exp.cand)
-            children, count = explore.compact(m, exp, keep, out_cap)
-            return (
-                children[None],
-                count[None],
-                exp.n_generated[None],
-                exp.n_canonical[None],
+            children, count, codes, lv, ngen, ncanon = explore.fused_chunk_step(
+                g, m, nv, out_cap,
+                mode=mode,
+                app=app,
+                with_patterns=with_patterns,
+                use_pallas=use_pallas,
+                compact_kernel=compact_kernel,
+                interpret=interpret,
             )
+            outs = (children[None], count[None], ngen[None], ncanon[None])
+            if with_patterns:
+                outs += (codes[None], lv[None])
+            return outs
 
-        mapper = _shard_map_pallas_ok if use_pallas else shard_map
+        mapper = (
+            _shard_map_pallas_ok if (use_pallas or compact_kernel) else shard_map
+        )
+        n_out = 6 if with_patterns else 4
         return mapper(
             functools.partial(worker, g),
             mesh=mesh,
             in_specs=(spec_in, spec_in),
-            out_specs=(spec_in, spec_in, spec_in, spec_in),
+            out_specs=(spec_in,) * n_out,
         )(members, n_valid)
 
     return step
@@ -196,9 +214,27 @@ class DistConfig:
     use_pallas: Optional[bool] = None
     #: Pallas interpret override; None -> auto per backend.
     pallas_interpret: Optional[bool] = None
+    #: fused superstep pipeline (DESIGN.md §8), mirroring
+    #: ``EngineConfig.async_chunks``: with ``store="raw"`` the sharded
+    #: expand also emits the children's quick-pattern codes, so the next
+    #: superstep's aggregation runs from carried codes instead of
+    #: re-uploading the frontier for a second device pass; children are
+    #: appended to the store as device arrays (no forced host transfer).
+    async_chunks: bool = True
+    #: route worker-shard compaction through the Pallas stream-compaction
+    #: kernel (``kernels/compact.py``); None -> auto, on where Pallas
+    #: compiles natively (same rule as EngineConfig.compact_kernel).
+    compact_kernel: Optional[bool] = None
 
     def resolve_use_pallas(self) -> bool:
         return default_use_pallas() if self.use_pallas is None else self.use_pallas
+
+    def resolve_compact_kernel(self) -> bool:
+        return (
+            default_use_pallas()
+            if self.compact_kernel is None
+            else self.compact_kernel
+        )
 
 
 def run_distributed(
@@ -212,10 +248,22 @@ def run_distributed(
     g = to_device(graph) if isinstance(graph, Graph) else graph
     n_shards = _mesh_axis_size(mesh, config.axes)
     resolved_pallas = config.resolve_use_pallas()
+    fused_pipe = config.async_chunks
+    # carried child codes need the next frontier to be exactly the appended
+    # rows in order — raw store only (ODAG extraction resurrects rows), and
+    # the naive-aggregation baseline deliberately re-derives everything.
+    with_patterns = (
+        fused_pipe
+        and app.wants_patterns
+        and config.store == "raw"
+        and not config.naive_aggregation
+    )
     expand = make_sharded_expand(
         app, mesh, config.axes,
         use_pallas=resolved_pallas,
         interpret=config.pallas_interpret,
+        compact_kernel=config.resolve_compact_kernel(),
+        with_patterns=with_patterns,
     )
     aggregate = make_sharded_aggregate(mesh, config.axes)
     store = make_store(
@@ -235,6 +283,9 @@ def run_distributed(
     store.seal(1)
     size = 1
     cap = config.initial_capacity
+    #: fused mode: (codes, local_verts) of the sealed frontier, emitted by
+    #: the previous superstep's sharded expand (DESIGN.md §8)
+    carried = None
 
     for step_i in range(1, config.max_steps + 1):
         if store.n_rows == 0:
@@ -264,24 +315,37 @@ def run_distributed(
         canon_slot = None
         agg_out = None
         if app.wants_patterns:
-            n_valid_h = jnp.full((b,), size, dtype=jnp.int32)
-            qp = (
-                pattern_lib.quick_pattern_vertex(g, jnp.asarray(frontier), n_valid_h)
-                if app.mode == "vertex"
-                else pattern_lib.quick_pattern_edge(g, jnp.asarray(frontier), n_valid_h)
-            )
+            if carried is not None and len(carried[0]) == b:
+                # fused pipeline: codes were computed by the sharded expand
+                # that produced these rows — no re-upload, no second pass
+                codes_np, lv_np = carried
+            else:
+                n_valid_h = jnp.full((b,), size, dtype=jnp.int32)
+                qp = (
+                    pattern_lib.quick_pattern_vertex(
+                        g, jnp.asarray(frontier), n_valid_h
+                    )
+                    if app.mode == "vertex"
+                    else pattern_lib.quick_pattern_edge(
+                        g, jnp.asarray(frontier), n_valid_h
+                    )
+                )
+                codes_np = np.asarray(qp.codes)
+                lv_np = np.asarray(qp.local_verts)
             if config.naive_aggregation:
                 # naive scheme: exchange per-EMBEDDING codes (an all-gather
                 # of B x 24 bytes x workers) and run pattern canonicalisation
                 # once per embedding instead of once per quick pattern.
-                st.collective_bytes += int(qp.codes.size * 8) * n_shards
-                for row in np.asarray(qp.codes):
+                st.collective_bytes += int(codes_np.size * 8) * n_shards
+                for row in codes_np:
                     pattern_lib.canonicalize_one(row)       # B iso checks
-            uniq, inv = aggregation.quick_slot_ids(qp.codes, np.ones(b, bool))
-            table = pattern_lib.build_pattern_table(uniq)
+            uniq, inv = aggregation.quick_slot_ids(codes_np, np.ones(b, bool))
+            table = pattern_lib.build_pattern_table(
+                uniq, with_orbits=app.wants_domains
+            )
             pc = len(table.canon_codes)
             canon_slot, verts_canon = aggregation.map_to_canonical_positions(
-                table, inv, qp.local_verts
+                table, inv, lv_np
             )
             # shard the level-1 inputs, reduce with the collective
             slot_sh, slot_counts = partition_frontier(canon_slot[:, None], n_shards)
@@ -319,6 +383,7 @@ def run_distributed(
             st.collective_bytes += counts.nbytes + (
                 int(np.asarray(bitmaps[:pc]).size) // 8 if app.wants_domains else 0
             )
+        carried = None
         st.t_aggregate = timer.lap()
 
         # ---- alpha + outputs --------------------------------------------
@@ -350,25 +415,40 @@ def run_distributed(
         shards, counts_sh = pad_parts(parts, size)
         per = shards.shape[1]
         n_valid = (np.arange(per)[None, :] < counts_sh[:, None]) * size
+        members_dev = jnp.asarray(shards)
+        n_valid_dev = jnp.asarray(n_valid.astype(np.int32))
         while True:
-            children, ccount, ngen, ncanon = expand(
-                g,
-                jnp.asarray(shards),
-                jnp.asarray(n_valid.astype(np.int32)),
-                out_cap=cap,
-            )
-            ccount = np.asarray(ccount)
+            outs = expand(g, members_dev, n_valid_dev, out_cap=cap)
+            children, ccount = outs[0], outs[1]
+            ccount = np.asarray(ccount)     # THE per-step control sync
+            st.n_host_syncs += 1
+            st.n_chunks += 1
             if int(ccount.max()) <= cap:
                 break
+            # counts are exact (unclamped compaction), so exactly one
+            # re-dispatch at the next pow2 bucket suffices
+            _retire(*outs)
             cap = _next_pow2(int(ccount.max()))
-        st.n_generated = int(np.asarray(ngen).sum())
-        st.n_canonical = int(np.asarray(ncanon).sum())
+        st.n_generated = int(np.asarray(outs[2]).sum())
+        st.n_canonical = int(np.asarray(outs[3]).sum())
 
-        # ---- frontier exchange: worker-local children into the store;
-        # seal merges them (odag: DenseODAG OR-allreduce, §5.2) ------------
-        children = np.asarray(children)
+        # ---- frontier exchange: worker-local children into the store as
+        # device arrays (resolved at seal; odag: DenseODAG OR-allreduce,
+        # §5.2); with the fused pipeline the children's pattern codes are
+        # carried to the next superstep's aggregation -----------------------
         for s in range(n_shards):
-            store.append(children[s, : ccount[s]], worker=s)
+            store.append(children[s], worker=s, count=int(ccount[s]))
+        if with_patterns:
+            codes_all = np.asarray(outs[4])
+            lv_all = np.asarray(outs[5])
+            carried = (
+                np.concatenate(
+                    [codes_all[s, : ccount[s]] for s in range(n_shards)]
+                ),
+                np.concatenate(
+                    [lv_all[s, : ccount[s]] for s in range(n_shards)]
+                ),
+            )
         st.t_expand = timer.lap()
         store.seal(size + 1)
         st.t_storage += timer.lap()

@@ -10,6 +10,11 @@ walks, we materialise a dense padded candidate tensor ``(C, k, D)`` /
 ``(C, 2k, D)`` from the padded neighbour table and evaluate *all* pruning
 rules as fused mask expressions. The engine chunks the frontier so this
 tensor stays bounded.
+
+:func:`fused_chunk_step` is the single device pass of the fused superstep
+pipeline (DESIGN.md §8): expansion + canonicality + app filter + stream
+compaction + the children's quick-pattern codes, so the engines never
+upload a wave twice or sync per chunk.
 """
 from __future__ import annotations
 
@@ -19,8 +24,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import canonical
+from repro.core import canonical, pattern as pattern_lib
 from repro.core.graph import DeviceGraph
+from repro.kernels import compact as compact_kernel_lib
 from repro.kernels.canonical_check import ops as cc_ops
 
 
@@ -194,15 +200,27 @@ def compact(
     exp: Expansion,
     keep: jnp.ndarray,      # (Ncand,) final keep mask (after app filter)
     out_cap: int,
+    *,
+    use_kernel: bool = False,
+    interpret=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Gather kept candidates into a dense (out_cap, k+1) child frontier.
 
     Returns (children, count). ``count`` may exceed ``out_cap``: the caller
     must then retry with a larger capacity (bucketed recompilation).
+    ``use_kernel`` routes the keep-mask compaction through the Pallas
+    stream-compaction kernel (``kernels/compact.py``, DESIGN.md §8)
+    instead of the jnp nonzero gather; both honour the same contract.
+    Capacities whose index window exceeds the kernel's VMEM limit fall
+    back to the jnp gather (same rule as the canonical-check bitmap).
     """
     c, k = members.shape
-    count = keep.sum().astype(jnp.int32)
-    (idx,) = jnp.nonzero(keep, size=out_cap, fill_value=0)
+    if use_kernel and compact_kernel_lib.fits_vmem(out_cap):
+        idx, count = compact_kernel_lib.stream_compact_pallas(
+            keep, out_cap, interpret=interpret
+        )
+    else:
+        idx, count = compact_kernel_lib.stream_compact_ref(keep, out_cap)
     rows = exp.rows[idx]
     cand = exp.cand[idx]
     children = jnp.concatenate([members[rows], cand[:, None]], axis=1)
@@ -212,7 +230,10 @@ def compact(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("mode", "out_cap", "use_pallas", "fused", "interpret")
+    jax.jit,
+    static_argnames=(
+        "mode", "out_cap", "use_pallas", "fused", "interpret", "compact_kernel"
+    ),
 )
 def expand_and_compact(
     g: DeviceGraph,
@@ -223,6 +244,7 @@ def expand_and_compact(
     use_pallas: bool = False,
     fused: bool = False,
     interpret=None,
+    compact_kernel: bool = False,
 ):
     """Fused expand + canonicality + compaction (no app filter) — used by
     benchmarks and the distributed runtime where the app filter is fused in
@@ -236,5 +258,75 @@ def expand_and_compact(
         exp = expand_edge(
             g, members, n_valid, use_pallas=use_pallas, interpret=interpret
         )
-    children, count = compact(members, exp, exp.keep, out_cap)
+    children, count = compact(
+        members, exp, exp.keep, out_cap,
+        use_kernel=compact_kernel, interpret=interpret,
+    )
     return children, count, exp.n_generated, exp.n_canonical
+
+
+def fused_chunk_step(
+    g: DeviceGraph,
+    members: jnp.ndarray,   # (C, k) int32 frontier chunk, pad -1
+    n_valid: jnp.ndarray,   # (C,) int32
+    out_cap: int,
+    *,
+    mode: str,
+    app=None,
+    with_patterns: bool = False,
+    with_local_verts: bool = True,
+    use_pallas: bool = False,
+    fused: bool = False,
+    compact_kernel: bool = False,
+    interpret=None,
+):
+    """ONE device pass of the fused superstep pipeline (DESIGN.md §8):
+    expansion + canonicality + the app's phi filter + stream compaction +
+    (optionally) the children's quick-pattern codes.
+
+    Returns ``(children, count, codes, local_verts, n_generated,
+    n_canonical)``. ``count`` is the unclamped kept total (host overflow
+    decisions need no recomputation); with ``with_patterns`` the codes/
+    local-vertex tables are ``(out_cap, 3)`` / ``(out_cap, 8)`` aligned
+    with ``children`` (pad slots inert), else both are 0-row placeholders.
+    Shared by the serial engine's jitted chunk program and the distributed
+    worker body under ``shard_map`` — the same program in both runtimes.
+    """
+    if mode == "vertex":
+        exp = expand_vertex(
+            g, members, n_valid,
+            use_pallas=use_pallas, fused=fused, interpret=interpret,
+        )
+    else:
+        exp = expand_edge(
+            g, members, n_valid, use_pallas=use_pallas, interpret=interpret
+        )
+    keep = exp.keep
+    if app is not None:
+        keep = keep & app.filter(g, members, n_valid, exp.rows, exp.cand)
+    children, count = compact(
+        members, exp, keep, out_cap,
+        use_kernel=compact_kernel, interpret=interpret,
+    )
+    if with_patterns:
+        child_k = members.shape[1] + 1
+        child_nv = jnp.where(
+            jnp.arange(out_cap) < count, child_k, 0
+        ).astype(jnp.int32)
+        qp = (
+            pattern_lib.quick_pattern_vertex(g, children, child_nv)
+            if mode == "vertex"
+            else pattern_lib.quick_pattern_edge(g, children, child_nv)
+        )
+        codes = qp.codes
+        # only FSM's min-image domains read the local-vertex table; when
+        # unused, dropping it from the outputs lets XLA DCE its scatter
+        local_verts = (
+            qp.local_verts
+            if with_local_verts
+            else jnp.zeros((0, pattern_lib.MAX_PATTERN_VERTICES), jnp.int32)
+        )
+    else:
+        codes = jnp.zeros((0, 3), jnp.int64)
+        local_verts = jnp.zeros((0, pattern_lib.MAX_PATTERN_VERTICES), jnp.int32)
+    return children, count, codes, local_verts, exp.n_generated, exp.n_canonical

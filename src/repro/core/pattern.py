@@ -169,11 +169,90 @@ def encode(nv: int, adj: np.ndarray, labels: np.ndarray) -> tuple[int, int, int]
 
 _PERMS_CACHE: dict[int, np.ndarray] = {}
 
+#: process-wide quick->canonical memo: code-row bytes -> (canon (3,) int64,
+#: sigma (8,) int32). Quick patterns recur across supersteps and runs (the
+#: paper's engine accumulates exactly this map), so level 2 pays the
+#: permutation search once per distinct pattern per process, not per step.
+_CANON_CACHE: dict[bytes, tuple] = {}
+#: canonical code -> orbit representatives (8,) int32 (FSM domains only).
+_ORBIT_CACHE: dict[tuple, np.ndarray] = {}
+
 
 def _perms(nv: int) -> np.ndarray:
     if nv not in _PERMS_CACHE:
         _PERMS_CACHE[nv] = np.array(list(itertools.permutations(range(nv))), np.int32)
     return _PERMS_CACHE[nv]
+
+
+def _decode_batch(codes: np.ndarray, nv: int):
+    """Vectorised :func:`decode` over (Q, 3) codes sharing ``n_verts``."""
+    w0, w1, w2 = codes[:, 0], codes[:, 1], codes[:, 2]
+    bits = w0 >> 4
+    adj = np.zeros((len(codes), nv, nv), dtype=bool)
+    for bb in range(1, nv):
+        for aa in range(bb):
+            on = ((bits >> _pair_bit(aa, bb)) & 1).astype(bool)
+            adj[:, aa, bb] = adj[:, bb, aa] = on
+    labels = np.zeros((len(codes), nv), dtype=np.int64)
+    for i in range(min(nv, 4)):
+        labels[:, i] = (w1 >> (8 * i)) & 0xFF
+    for i in range(4, min(nv, 8)):
+        labels[:, i] = (w2 >> (8 * (i - 4))) & 0xFF
+    return adj, labels
+
+
+def _encode_batch(adj: np.ndarray, labels: np.ndarray) -> np.ndarray:
+    """Vectorised :func:`encode`: (Q, nv, nv) + (Q, nv) -> (Q, 3) int64."""
+    q, nv = labels.shape
+    bits = np.zeros(q, dtype=np.int64)
+    for bb in range(1, nv):
+        for aa in range(bb):
+            bits |= adj[:, aa, bb].astype(np.int64) << _pair_bit(aa, bb)
+    w0 = nv | (bits << 4)
+    w1 = np.zeros(q, dtype=np.int64)
+    w2 = np.zeros(q, dtype=np.int64)
+    for i in range(min(nv, 4)):
+        w1 |= labels[:, i] << (8 * i)
+    for i in range(4, min(nv, 8)):
+        w2 |= labels[:, i] << (8 * (i - 4))
+    return np.stack([w0, w1, w2], axis=1)
+
+
+def _lex_less(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Row-wise lexicographic a < b over (Q, 3) code triples."""
+    return (
+        (a[:, 0] < b[:, 0])
+        | ((a[:, 0] == b[:, 0]) & (a[:, 1] < b[:, 1]))
+        | ((a[:, 0] == b[:, 0]) & (a[:, 1] == b[:, 1]) & (a[:, 2] < b[:, 2]))
+    )
+
+
+def _canonicalize_batch(codes: np.ndarray):
+    """Batched :func:`canonicalize_one` over (Q, 3) codes sharing
+    ``n_verts``: one vectorised pass per permutation instead of a Python
+    loop per pattern. Identical tie-breaking (first minimal permutation
+    wins), hence bit-identical canon codes and sigmas."""
+    q = len(codes)
+    nv = int(codes[0, 0]) & 0xF
+    sigma = np.tile(np.arange(MAX_PATTERN_VERTICES, dtype=np.int32), (q, 1))
+    if nv <= 1:
+        return codes.astype(np.int64, copy=True), sigma
+    adj, labels = _decode_batch(codes, nv)
+    perms = _perms(nv)
+    best = None
+    best_pi = np.zeros(q, dtype=np.int64)
+    for pi, perm in enumerate(perms):
+        key = _encode_batch(adj[:, perm][:, :, perm], labels[:, perm])
+        if best is None:
+            best = key
+        else:
+            better = _lex_less(key, best)
+            best = np.where(better[:, None], key, best)
+            best_pi = np.where(better, pi, best_pi)
+    chosen = perms[best_pi]                       # (Q, nv): canon pos -> local
+    rows = np.arange(q)[:, None]
+    sigma[rows, chosen] = np.arange(nv, dtype=np.int32)[None, :]
+    return best, sigma
 
 
 def canonicalize_one(code) -> tuple[tuple[int, int, int], np.ndarray]:
@@ -240,18 +319,46 @@ class PatternTable(NamedTuple):
     n_iso_checks: int            # == Q: graph-isomorphism invocations (Table 4)
 
 
-def build_pattern_table(unique_quick: np.ndarray) -> PatternTable:
+def build_pattern_table(
+    unique_quick: np.ndarray, with_orbits: bool = True
+) -> PatternTable:
+    """Level 2 for one step's distinct quick patterns, batched + memoised.
+
+    Uncached codes are canonicalised in vectorised per-``n_verts`` batches
+    (:func:`_canonicalize_batch`) and remembered process-wide, so the
+    permutation search runs once per distinct pattern per process — across
+    supersteps AND runs (the superstep pipeline's aggregation is host-bound
+    exactly here, DESIGN.md §8). ``n_iso_checks`` stays the *conceptual*
+    per-step invocation count (Table 4 semantics), not the cache-miss count.
+
+    ``with_orbits=False`` skips the automorphism-orbit search (only FSM's
+    min-image domains consume orbits) and returns identity representatives.
+    """
     q = len(unique_quick)
     canon = np.zeros((q, 3), dtype=np.int64)
     sigma = np.zeros((q, MAX_PATTERN_VERTICES), dtype=np.int32)
-    for i in range(q):
-        key, sg = canonicalize_one(unique_quick[i])
-        canon[i] = key
-        sigma[i] = sg
+    rows64 = np.ascontiguousarray(unique_quick, dtype=np.int64)
+    keys = [row.tobytes() for row in rows64]
+    misses = [i for i, k in enumerate(keys) if k not in _CANON_CACHE]
+    if misses:
+        miss_codes = unique_quick[misses].astype(np.int64)
+        by_nv: dict[int, list] = {}
+        for j, i in enumerate(misses):
+            by_nv.setdefault(int(miss_codes[j, 0]) & 0xF, []).append(j)
+        for nv, js in by_nv.items():
+            ck, sg = _canonicalize_batch(miss_codes[js])
+            for row, j in enumerate(js):
+                _CANON_CACHE[keys[misses[j]]] = (ck[row], sg[row])
+    for i, k in enumerate(keys):
+        canon[i], sigma[i] = _CANON_CACHE[k]
     uniq_canon, inv = np.unique(canon.reshape(q, 3), axis=0, return_inverse=True)
-    orbits = np.stack(
-        [automorphism_orbits(c) for c in uniq_canon], axis=0
-    ) if len(uniq_canon) else np.zeros((0, MAX_PATTERN_VERTICES), np.int32)
+    if with_orbits and len(uniq_canon):
+        orbits = np.stack([_orbits_cached(c) for c in uniq_canon], axis=0)
+    else:
+        orbits = np.tile(
+            np.arange(MAX_PATTERN_VERTICES, dtype=np.int32),
+            (len(uniq_canon), 1),
+        )
     return PatternTable(
         quick_codes=unique_quick,
         canon_codes=uniq_canon,
@@ -261,6 +368,14 @@ def build_pattern_table(unique_quick: np.ndarray) -> PatternTable:
         canon_orbits=orbits,
         n_iso_checks=q,
     )
+
+
+def _orbits_cached(code: np.ndarray) -> np.ndarray:
+    key = tuple(int(x) for x in code)
+    got = _ORBIT_CACHE.get(key)
+    if got is None:
+        got = _ORBIT_CACHE[key] = automorphism_orbits(code)
+    return got
 
 
 def pattern_to_networkx(code):

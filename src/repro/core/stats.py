@@ -17,6 +17,12 @@ class StepStats:
     n_quick_patterns: int = 0
     n_canonical_patterns: int = 0
     n_iso_checks: int = 0
+    n_chunks: int = 0                # chunk programs dispatched this step
+    #: host→device control syncs: times the host *blocked on a device
+    #: value to decide control flow* (capacity retries, chunk loops).
+    #: The PR-2 chunk loop pays one per chunk; the fused pipeline
+    #: (DESIGN.md §8) drains all counts once — O(1) per superstep.
+    n_host_syncs: int = 0
     frontier_bytes: int = 0          # raw embedding-list bytes (Fig 9 baseline)
     odag_bytes: int = 0              # ODAG-compressed bytes (Fig 9)
     collective_bytes: int = 0        # bytes exchanged in the distributed step
@@ -38,12 +44,24 @@ class StepStats:
 class RunStats:
     steps: List[StepStats] = dataclasses.field(default_factory=list)
     wall_time: float = 0.0
+    #: chunk programs compiled during this run (jit cache growth); the
+    #: pow2 bucketing of chunk widths and output capacities bounds this to
+    #: O(log) entries per embedding size (DESIGN.md §8).
+    n_compiles: int = 0
+    #: the distinct (embedding_size, chunk_width, out_cap) signatures
+    #: actually dispatched — width and capacity must be powers of two
+    #: (tested); each signature compiles at most one chunk program.
+    chunk_signatures: List[tuple] = dataclasses.field(default_factory=list)
 
     @property
     def total_embeddings(self) -> int:
         return sum(s.n_children for s in self.steps) + (
             self.steps[0].n_frontier if self.steps else 0
         )
+
+    @property
+    def total_host_syncs(self) -> int:
+        return sum(s.n_host_syncs for s in self.steps)
 
     def summary(self) -> Dict:
         return {
@@ -54,6 +72,8 @@ class RunStats:
             "max_compression": round(
                 max((s.compression for s in self.steps), default=1.0), 1
             ),
+            "host_syncs": self.total_host_syncs,
+            "chunk_programs": self.n_compiles,
         }
 
     def compression_by_size(self) -> Dict[int, float]:

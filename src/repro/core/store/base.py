@@ -27,6 +27,39 @@ from typing import Iterator, List, Optional
 import numpy as np
 
 
+def _delete_buffer(buf) -> None:
+    try:
+        buf.delete()
+    except Exception:  # pragma: no cover - deletion is best-effort
+        pass
+
+
+def resolve_rows(rows, count=None) -> np.ndarray:
+    """Resolve one staged block to host int32 rows at the superstep seal.
+
+    ``rows`` may be a host array or a *device* array still padded to its
+    chunk program's capacity — the fused engine (DESIGN.md §8) appends
+    device buffers as-is so no transfer happens mid-superstep; the single
+    ``np.asarray`` here (after the step's one count drain) is where the
+    device→host copy lands. ``count`` slices the valid prefix of
+    capacity-padded blocks — sliced *on device first* so only the valid
+    rows cross to the host, never the padding. Device buffers are deleted
+    after the copy so peak HBM drops as chunks are folded into the store.
+    """
+    padded = None
+    if count is not None and hasattr(rows, "delete"):
+        padded, rows = rows, rows[: int(count)]    # device-side prefix slice
+        count = None
+    arr = np.asarray(rows, dtype=np.int32)
+    if arr is not rows and hasattr(rows, "delete"):
+        _delete_buffer(rows)
+    if padded is not None:
+        _delete_buffer(padded)
+    if count is not None:
+        arr = arr[: int(count)]
+    return arr
+
+
 class FrontierStore(abc.ABC):
     """Owns one frontier (all embeddings of the current size) between steps."""
 
@@ -35,11 +68,15 @@ class FrontierStore(abc.ABC):
 
     # -- write side (during a superstep's expansion) ----------------------
     @abc.abstractmethod
-    def append(self, rows: np.ndarray, worker: int = 0) -> None:
-        """Stage a block of same-size child embeddings (host int32 (B, k)).
+    def append(self, rows, worker: int = 0, count=None) -> None:
+        """Stage a block of same-size child embeddings (int32 (B, k)).
 
-        ``worker`` tags the producing worker so distributed seals can merge
-        worker-local state (RawStore ignores it)."""
+        ``rows`` may be a host array or a capacity-padded device array with
+        ``count`` valid leading rows; stores MUST NOT force a host transfer
+        here — staging is lazy and blocks resolve at ``seal`` (DESIGN.md
+        §8, via :func:`resolve_rows`). ``worker`` tags the producing worker
+        so distributed seals can merge worker-local state (RawStore
+        ignores it)."""
 
     @abc.abstractmethod
     def seal(self, size: int) -> None:
@@ -110,18 +147,19 @@ class RawStore(FrontierStore):
     kind = "raw"
 
     def __init__(self) -> None:
-        self._staged: List[np.ndarray] = []
+        self._staged: List[tuple] = []        # (rows, count) — lazy blocks
         self._frontier = np.zeros((0, 1), np.int32)
 
-    def append(self, rows: np.ndarray, worker: int = 0) -> None:
-        rows = np.asarray(rows, dtype=np.int32)
-        if len(rows):
-            self._staged.append(rows)
+    def append(self, rows, worker: int = 0, count=None) -> None:
+        if len(rows) and (count is None or count):
+            self._staged.append((rows, count))
 
     def seal(self, size: int) -> None:
+        blocks = [resolve_rows(r, c) for r, c in self._staged]
+        blocks = [b for b in blocks if len(b)]
         self._frontier = (
-            np.concatenate(self._staged, axis=0)
-            if self._staged
+            np.concatenate(blocks, axis=0)
+            if blocks
             else np.zeros((0, size), np.int32)
         )
         self._staged = []

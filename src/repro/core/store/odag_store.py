@@ -39,7 +39,7 @@ from typing import Dict, Iterator, List, Optional
 import numpy as np
 
 from repro.core import odag as odag_lib
-from repro.core.store.base import FrontierStore
+from repro.core.store.base import FrontierStore, resolve_rows
 
 
 class ODAGStore(FrontierStore):
@@ -61,23 +61,24 @@ class ODAGStore(FrontierStore):
         self._use_pallas = use_pallas
         self._interpret = interpret
         self._dense_exchange = dense_exchange
-        self._staged: Dict[int, List[np.ndarray]] = {}
+        self._staged: Dict[int, List[tuple]] = {}   # (rows, count) lazy blocks
         self._odag: Optional[odag_lib.ODAG] = None
         self._n_rows = 0
         self._size = 1
         self._exchange_bytes = 0
 
     # -- write side --------------------------------------------------------
-    def append(self, rows: np.ndarray, worker: int = 0) -> None:
-        rows = np.asarray(rows, dtype=np.int32)
-        if len(rows):
-            self._staged.setdefault(worker, []).append(rows)
+    def append(self, rows, worker: int = 0, count=None) -> None:
+        if len(rows) and (count is None or count):
+            self._staged.setdefault(worker, []).append((rows, count))
 
     def seal(self, size: int) -> None:
-        blocks = {
-            w: np.concatenate(parts, axis=0)
-            for w, parts in self._staged.items()
-        }
+        blocks = {}
+        for w, parts in self._staged.items():
+            resolved = [resolve_rows(r, c) for r, c in parts]
+            resolved = [b for b in resolved if len(b)]
+            if resolved:
+                blocks[w] = np.concatenate(resolved, axis=0)
         self._staged = {}
         self._size = size
         self._n_rows = sum(len(b) for b in blocks.values())

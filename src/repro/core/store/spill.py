@@ -42,8 +42,8 @@ class SpillStore(FrontierStore):
         return max(1, self._budget_bytes // (max(self._inner.size, 1) * 4))
 
     # -- delegation --------------------------------------------------------
-    def append(self, rows: np.ndarray, worker: int = 0) -> None:
-        self._inner.append(rows, worker=worker)
+    def append(self, rows, worker: int = 0, count=None) -> None:
+        self._inner.append(rows, worker=worker, count=count)
 
     def seal(self, size: int) -> None:
         self._inner.seal(size)

@@ -1,0 +1,129 @@
+"""Stream compaction (block prefix-sum + scatter) as a Pallas kernel.
+
+The chunk program of the fused superstep pipeline (DESIGN.md §8) must turn
+a flat keep mask over candidate slots into the dense child frontier. The
+jnp route is ``jnp.nonzero(keep, size=out_cap, fill_value=0)`` — a full
+sort-based gather that XLA materialises in HBM per chunk. This kernel
+replaces it with the classic stream-compaction dataflow: the grid walks
+``keep`` in blocks, each block computes its exclusive prefix sum, adds the
+running total carried across the (sequential) grid, and scatters its kept
+global indices straight into the VMEM-resident output window.
+
+Contract (identical to the jnp route, so the two are interchangeable
+inside one jitted chunk program):
+
+  * ``idx[:count]`` are the kept positions in ascending order; slots past
+    ``count`` hold 0 (the callers mask them out via ``count``).
+  * ``count`` is the TOTAL number of kept slots, *not* clamped to
+    ``out_cap`` — overflow detection stays a pure host decision on the
+    already-drained count, which is what keeps the fused engine's retry
+    path sync-free (``repro.core.engine``).
+
+Dispatch follows the shared rules in :mod:`repro.kernels.dispatch`:
+``interpret=None`` compiles on TPU/GPU and interprets on CPU; the engine's
+``compact_kernel=None`` auto-knob only routes here where Pallas lowers
+natively (TPU), everything else keeps the jnp route. Like the
+canonical-check kernels, the compiled (Mosaic) path is the TPU target; the
+Triton lowering of the in-kernel scatter has not been validated, so GPU
+remains opt-in.
+
+The output window is revisited (read-modified-written) by every grid
+step, so total traffic is O(n_blocks * out_cap) — the same
+VMEM-resident-window tradeoff as the canonical-check bitmap. Callers
+guard with :func:`fits_vmem` (``explore.compact`` falls back to the jnp
+gather past :data:`VMEM_IDX_LIMIT`) and the default block is sized large
+to keep the number of window passes small.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.dispatch import resolve_interpret
+
+#: bytes of packed-index output window we allow resident in VMEM; larger
+#: capacities route to the jnp nonzero gather (streamed from HBM by XLA).
+VMEM_IDX_LIMIT = 4 * 2**20
+
+
+def fits_vmem(out_cap: int) -> bool:
+    """True when the (out_cap + 1) int32 index window is VMEM-sized."""
+    return (int(out_cap) + 1) * 4 <= VMEM_IDX_LIMIT
+
+
+def _compact_kernel(keep_ref, idx_ref, count_ref):
+    """One grid step: block prefix-sum + scatter with a running carry.
+
+    ``idx_ref``/``count_ref`` use constant index maps, so the same output
+    window is revisited by every (sequential) grid step — ``count_ref``
+    doubles as the cross-block carry of the running kept total.
+    """
+    i = pl.program_id(0)
+    block = keep_ref.shape[0]
+    out_slots = idx_ref.shape[0]          # out_cap + 1 (last slot = dump)
+
+    @pl.when(i == 0)
+    def _init():
+        idx_ref[...] = jnp.zeros((out_slots,), jnp.int32)
+        count_ref[...] = jnp.zeros((1,), jnp.int32)
+
+    keep = keep_ref[...]
+    kept = keep.astype(jnp.int32)
+    base = count_ref[0]
+    # exclusive prefix sum inside the block, offset by the carried base
+    # (dtypes pinned: the repo enables x64, which would promote the sums)
+    local = jnp.cumsum(kept, dtype=jnp.int32) - kept
+    gpos = base + local
+    # global source index of every slot in this block (2-D iota: TPU has no
+    # 1-D iota — see the canonical-check kernels)
+    src = i * block + jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0)[:, 0]
+    # scatter kept sources to their output position; dropped and overflowed
+    # slots land in the dump slot (sliced off by the wrapper)
+    pos = jnp.where(keep & (gpos < out_slots - 1), gpos, out_slots - 1)
+    idx_ref[...] = idx_ref[...].at[pos].set(jnp.where(keep, src, 0))
+    count_ref[...] = (base + kept.sum(dtype=jnp.int32)).reshape(1)
+
+
+@functools.partial(jax.jit, static_argnames=("out_cap", "block", "interpret"))
+def stream_compact_pallas(keep, out_cap: int, block: int = 8192,
+                          interpret=None):
+    """keep (B,) bool -> (idx (out_cap,) int32, count () int32).
+
+    ``idx[:min(count, out_cap)]`` are the kept positions of ``keep`` in
+    ascending order (pad slots 0); ``count`` is the unclamped kept total.
+    Accepts any ``B`` including 0 and non-multiples of ``block``.
+    """
+    n = keep.shape[0]
+    if n == 0:
+        return jnp.zeros((out_cap,), jnp.int32), jnp.zeros((), jnp.int32)
+    block = max(1, min(block, n))
+    pad = (-n) % block
+    if pad:
+        keep = jnp.concatenate([keep, jnp.zeros((pad,), keep.dtype)])
+
+    idx, count = pl.pallas_call(
+        _compact_kernel,
+        grid=((n + pad) // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((out_cap + 1,), lambda i: (0,)),   # revisited window
+            pl.BlockSpec((1,), lambda i: (0,)),             # carry + result
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((out_cap + 1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(keep)
+    return idx[:out_cap], count[0]
+
+
+def stream_compact_ref(keep, out_cap: int):
+    """The jnp route (nonzero gather) with the kernel's exact contract —
+    the fallback `explore.compact` uses when the kernel is off."""
+    count = keep.sum().astype(jnp.int32)
+    (idx,) = jnp.nonzero(keep, size=out_cap, fill_value=0)
+    return idx.astype(jnp.int32), count
