@@ -13,11 +13,12 @@ test-fast:
 	$(PY) -m pytest -q -m "not slow"
 
 # full benchmark sweep (one bench per paper table/figure), with the
-# machine-readable trajectory written to BENCH_3.json
+# machine-readable trajectory written to BENCH_4.json
 bench:
 	PYTHONPATH=src:. python -m benchmarks.run --json
 
 # quick smoke: the mining-perf ladder (jnp vs pallas variants) plus the
 # fused-superstep gate (syncs-per-step + speedup vs the PR-2 chunk loop)
+# and the checkpoint-overhead gate (<=5% of superstep wall time)
 bench-smoke:
 	PYTHONPATH=src:. python -m benchmarks.run --smoke --json

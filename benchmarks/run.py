@@ -4,11 +4,12 @@ Prints ``name,us_per_call,derived`` CSV rows. The dry-run/roofline tables
 (assignment §Dry-run/§Roofline) live in dryrun_results.json, produced by
 ``python -m repro.launch.dryrun``; ``bench_roofline`` summarises them here.
 
-``--smoke`` runs the mining-perf ladder plus the fused-superstep gate —
-the quick sanity sweep behind ``make bench-smoke``. ``--json [PATH]``
-additionally writes every emitted row (us_per_call + parsed derived
-stats) as machine-readable JSON (default ``BENCH_3.json``), the perf
-trajectory future PRs gate against instead of an empty history.
+``--smoke`` runs the mining-perf ladder plus the fused-superstep and
+checkpoint-overhead gates — the quick sanity sweep behind
+``make bench-smoke``. ``--json [PATH]`` additionally writes every emitted
+row (us_per_call + parsed derived stats) as machine-readable JSON
+(default ``BENCH_4.json``), the perf trajectory future PRs gate against
+instead of an empty history.
 """
 from __future__ import annotations
 
@@ -26,13 +27,14 @@ def main(argv=None) -> None:
         help="run only the fast mining-perf ladder + superstep gate",
     )
     args.add_argument(
-        "--json", nargs="?", const="BENCH_3.json", default=None,
+        "--json", nargs="?", const="BENCH_4.json", default=None,
         metavar="PATH",
-        help="write emitted rows as JSON (default path: BENCH_3.json)",
+        help="write emitted rows as JSON (default path: BENCH_4.json)",
     )
     opts = args.parse_args(argv)
     from benchmarks import (
         bench_breakdown,
+        bench_checkpoint,
         bench_large,
         bench_mining_perf,
         bench_odag,
@@ -54,12 +56,14 @@ def main(argv=None) -> None:
         ("large(table5)", bench_large.main),
         ("mining_perf(§Perf)", bench_mining_perf.main),
         ("superstep(§8)", bench_superstep.main),
+        ("checkpoint(§9)", bench_checkpoint.main),
         ("roofline(dry-run)", bench_roofline.main),
     ]
     if opts.smoke:
         benches = [
             ("mining_perf(§Perf)", bench_mining_perf.main),
             ("superstep(§8)", bench_superstep.main),
+            ("checkpoint(§9)", bench_checkpoint.main),
         ]
     failures = 0
     for name, fn in benches:

@@ -9,7 +9,9 @@ exchanges the frontier as a dense embedding list with even block slicing;
 ``store="odag"`` merges worker-local DenseODAGs with one OR-allreduce and
 re-materialises cost-balanced per-worker slices (paper §5.2/§5.3) — see
 ``examples/motifs_odag_store.py`` for that variant with the live
-compression numbers.
+compression numbers. ``DistConfig(checkpoint_dir=...)`` checkpoints every
+sealed superstep; resuming on a mesh of a *different* worker count is
+elastic by construction (DESIGN.md §9, ``examples/resume_after_crash.py``).
 """
 import jax
 

@@ -11,6 +11,9 @@ itself runs as the fused pipeline of DESIGN.md §8: ``async_chunks=True``
 in the same device pass (``False`` = the PR-2 chunk loop, one host sync
 per chunk), and ``compact_kernel`` routes compaction through the Pallas
 stream-compaction kernel (auto-on where Pallas compiles natively).
+``checkpoint_dir=...`` persists every sealed superstep so an interrupted
+run resumes with identical output (DESIGN.md §9,
+``examples/resume_after_crash.py``).
 """
 from repro.core import EngineConfig, graph, run
 from repro.core.apps import MotifsApp

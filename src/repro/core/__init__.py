@@ -8,11 +8,15 @@ jax.config.update("jax_enable_x64", True)
 from repro.core.api import MiningApp
 from repro.core.engine import EngineConfig, MiningResult, run
 from repro.core.graph import DeviceGraph, Graph, to_device
+from repro.core.runtime import RunConfig, SuperstepRuntime, resume
 
 __all__ = [
     "MiningApp",
     "EngineConfig",
     "MiningResult",
+    "RunConfig",
+    "SuperstepRuntime",
+    "resume",
     "run",
     "DeviceGraph",
     "Graph",

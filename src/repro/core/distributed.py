@@ -1,470 +1,75 @@
-"""Distributed TLE exploration on a device mesh (paper §5.1/§5.3 on JAX).
+"""Distributed mining entry point — a thin wrapper over the unified runtime.
 
-The Giraph BSP superstep becomes one jitted ``shard_map`` program per
-exploration step:
-
-  * expansion + canonicality is *coordination-free* (paper §5.1): each worker
-    expands its frontier slice with zero communication;
-  * pattern aggregation is ONE collective: per-pattern counts and FSM domain
-    bitmaps are ``psum``/OR-allreduced (two-level aggregation: bytes scale
-    with #patterns, never #embeddings — Table 4 as collective-bytes);
-  * the frontier between supersteps is owned by a pluggable
-    :mod:`repro.core.store` (DESIGN.md §7). With ``store="raw"`` the
-    re-balancing is broadcast-then-partition (paper §5.3): an all-gather of
-    the frontier followed by deterministic block slicing, so every worker
-    ends with |F|/W embeddings. With ``store="odag"`` each worker's children
-    are folded into a fixed-shape DenseODAG and the worker bitmaps are
-    merged with a bitwise OR — host-side in this single-process runtime,
-    bit-for-bit the §5.2 "merge and broadcast" OR-allreduce of a multi-host
-    mesh — and every worker re-materialises its slice via cost-annotated
-    partitioning + extraction (§5.3). Exchange bytes (``collective_bytes``)
-    then scale with the ODAG, never the embedding list.
-
-The superstep body is the fused pipeline of DESIGN.md §8
-(``DistConfig.async_chunks``): every worker's shard runs the same
-``explore.fused_chunk_step`` program the serial engine jits — expansion +
-canonicality + app filter + stream compaction + (raw store) the children's
-quick-pattern codes in one device pass — children land in the store as
-device arrays, and the host takes ONE control sync per superstep on the
-exact (unclamped) child counts.
+The shard-map superstep this module used to implement (paper §5.1/§5.3 as
+one jitted ``shard_map`` program per exploration step, with the two-level
+aggregation collective and the §5.2 DenseODAG OR-merge exchange) now lives
+ONCE in :mod:`repro.core.runtime.shard` behind the
+:class:`~repro.core.runtime.backend.ExecutionBackend` protocol; the BSP
+loop around it is the same :class:`~repro.core.runtime.SuperstepRuntime`
+the serial engine drives. ``run_distributed`` and ``DistConfig`` are kept
+as the stable public names — ``DistConfig`` is a deprecation shim over
+:class:`RunConfig` (the shard-map backend reads ``axes`` /
+``naive_aggregation`` from it and ignores the serial-only knobs).
 
 ``run_distributed`` mirrors ``engine.run`` and must produce identical
 results (integration-tested); ``mining_step_for_dryrun`` is the fixed-shape
 program the multi-pod dry-run lowers on the 512-chip mesh.
+
+Checkpoint/resume (DESIGN.md §9): ``DistConfig(checkpoint_dir=...)``
+persists every sealed superstep; resuming with a mesh of a *different*
+worker count is elastic by construction — per-worker slices are
+re-partitioned from the restored store at extraction time.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-try:  # jax >= 0.6 exports shard_map at top level
-    shard_map = jax.shard_map
-except AttributeError:  # jax 0.4/0.5: experimental namespace
-    from jax.experimental.shard_map import shard_map
-
-
-def _shard_map_pallas_ok(f, mesh, in_specs, out_specs):
-    """shard_map with the replication check disabled: pallas_call has no
-    replication rule, so worker bodies that may contain a kernel need
-    check_rep=False (renamed check_vma in newer jax)."""
-    try:
-        return shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_rep=False,
-        )
-    except TypeError:
-        return shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
-        )
-
-from repro.core import aggregation, explore, pattern as pattern_lib
+from repro.core import explore, pattern as pattern_lib
 from repro.core.api import MiningApp
-from repro.core.engine import (
-    EngineConfig,
+from repro.core.graph import DeviceGraph, Graph
+from repro.core.runtime import (
     MiningResult,
-    _next_pow2,
-    _retire,
-    store_app_filter,
+    RunConfig,
+    ShardMapBackend,
+    SuperstepRuntime,
 )
-from repro.core.graph import DeviceGraph, Graph, to_device
-from repro.core.stats import RunStats, StepStats, Timer
-from repro.core.store import make_store
+from repro.core.runtime.shard import (  # noqa: F401  (canonical home)
+    make_sharded_aggregate,
+    make_sharded_expand,
+    mesh_axis_size as _mesh_axis_size,
+    pad_parts,
+    partition_frontier,
+    shard_map,
+    shard_map_pallas_ok as _shard_map_pallas_ok,
+)
 from repro.kernels.dispatch import default_use_pallas
 
-
-def _mesh_axis_size(mesh: Mesh, axes) -> int:
-    size = 1
-    for a in axes:
-        size *= mesh.shape[a]
-    return size
-
-
-def pad_parts(parts, k: int):
-    """Pad variable-length per-worker row blocks to one dense
-    ``(W, per, k)`` int32 array (pad value -1) + per-worker counts — THE
-    shard-padding convention, shared by the even block split below and the
-    store-provided (cost-balanced) parts in ``run_distributed``."""
-    n = len(parts)
-    per = max(max((len(p) for p in parts), default=0), 1)
-    padded = np.full((n, per, k), -1, dtype=np.int32)
-    counts = np.zeros(n, dtype=np.int32)
-    for s, p in enumerate(parts):
-        padded[s, : len(p)] = p
-        counts[s] = len(p)
-    return padded, counts
-
-
-def partition_frontier(frontier: np.ndarray, n_shards: int):
-    """Broadcast-then-partition (paper §5.3): even block split, padded."""
-    b, k = frontier.shape
-    per = -(-b // n_shards) if b else 1
-    return pad_parts(
-        [frontier[s * per : (s + 1) * per] for s in range(n_shards)], k
-    )
-
-
-def make_sharded_expand(app: MiningApp, mesh: Mesh, axes=("data",),
-                        use_pallas: bool = False, interpret=None,
-                        compact_kernel: bool = False,
-                        with_patterns: bool = False):
-    """One BSP superstep: coordination-free expand over the mesh.
-
-    The worker body is the SAME fused chunk program the serial engine jits
-    (``explore.fused_chunk_step``, DESIGN.md §8): expansion + canonicality
-    + app filter + stream compaction, and — with ``with_patterns`` — the
-    children's quick-pattern codes in the same device pass, so the next
-    superstep's aggregation needs no second upload of the frontier.
-    """
-
-    mode = app.mode
-    spec_in = P(axes)
-
-    @functools.partial(jax.jit, static_argnames=("out_cap",))
-    def step(g: DeviceGraph, members, n_valid, out_cap: int):
-        def worker(g, members, n_valid):
-            m = members[0]          # shard_map adds the leading shard dim
-            nv = n_valid[0]
-            children, count, codes, lv, ngen, ncanon = explore.fused_chunk_step(
-                g, m, nv, out_cap,
-                mode=mode,
-                app=app,
-                with_patterns=with_patterns,
-                use_pallas=use_pallas,
-                compact_kernel=compact_kernel,
-                interpret=interpret,
-            )
-            outs = (children[None], count[None], ngen[None], ncanon[None])
-            if with_patterns:
-                outs += (codes[None], lv[None])
-            return outs
-
-        mapper = (
-            _shard_map_pallas_ok if (use_pallas or compact_kernel) else shard_map
-        )
-        n_out = 6 if with_patterns else 4
-        return mapper(
-            functools.partial(worker, g),
-            mesh=mesh,
-            in_specs=(spec_in, spec_in),
-            out_specs=(spec_in,) * n_out,
-        )(members, n_valid)
-
-    return step
-
-
-def make_sharded_aggregate(mesh: Mesh, axes=("data",)):
-    """Two-level aggregation's global reduce as ONE collective: counts psum +
-    domain-bitmap OR(max)-allreduce over the mesh axes."""
-
-    spec = P(axes)
-
-    @functools.partial(jax.jit, static_argnames=("n_canon", "n_vertices"))
-    def agg(canon_slot, verts_canon, valid, n_canon: int, n_vertices: int):
-        def worker(canon_slot, verts_canon, valid):
-            slot = canon_slot[0]
-            counts = jax.ops.segment_sum(
-                valid[0].astype(jnp.int64),
-                jnp.where(valid[0], slot, n_canon),
-                n_canon + 1,
-            )[:n_canon]
-            bitmaps = aggregation.domain_bitmaps(
-                slot, verts_canon[0], valid[0], n_canon, n_vertices
-            )
-            # THE collective: bytes ∝ #patterns, not #embeddings (Table 4)
-            counts = jax.lax.psum(counts, axes)
-            bitmaps = jax.lax.pmax(bitmaps.astype(jnp.int32), axes) > 0
-            return counts[None], bitmaps[None]
-
-        counts, bitmaps = shard_map(
-            worker,
-            mesh=mesh,
-            in_specs=(spec, spec, spec),
-            out_specs=(spec, spec),
-        )(canon_slot, verts_canon, valid)
-        return counts[0], bitmaps[0]
-
-    return agg
+__all__ = ["DistConfig", "run_distributed", "mining_step_for_dryrun"]
 
 
 @dataclasses.dataclass
-class DistConfig:
-    axes: tuple = ("data",)
-    initial_capacity: int = 4096     # per-shard children capacity bucket
-    max_steps: int = 16
-    #: frontier store between supersteps: "raw" = broadcast-then-partition
-    #: block slicing of the dense embedding list; "odag" = worker-local
-    #: DenseODAGs merged with a bitwise OR (the §5.2 OR-allreduce, computed
-    #: host-side here), per-worker slices re-materialised via §5.3
-    #: cost-balanced extraction.
-    store: str = "raw"
-    #: disable two-level aggregation (§Perf baseline): every worker
-    #: all-gathers all embeddings' quick codes and canonicalises each
-    #: embedding's pattern itself — the paper's Fig.11 naive scheme.
-    naive_aggregation: bool = False
-    #: route the Alg.-2 check through the Pallas kernel inside each
-    #: worker's shard (same dispatch rules as EngineConfig.use_pallas).
-    use_pallas: Optional[bool] = None
-    #: Pallas interpret override; None -> auto per backend.
-    pallas_interpret: Optional[bool] = None
-    #: fused superstep pipeline (DESIGN.md §8), mirroring
-    #: ``EngineConfig.async_chunks``: with ``store="raw"`` the sharded
-    #: expand also emits the children's quick-pattern codes, so the next
-    #: superstep's aggregation runs from carried codes instead of
-    #: re-uploading the frontier for a second device pass; children are
-    #: appended to the store as device arrays (no forced host transfer).
-    async_chunks: bool = True
-    #: route worker-shard compaction through the Pallas stream-compaction
-    #: kernel (``kernels/compact.py``); None -> auto, on where Pallas
-    #: compiles natively (same rule as EngineConfig.compact_kernel).
-    compact_kernel: Optional[bool] = None
+class DistConfig(RunConfig):
+    """Deprecated alias of :class:`repro.core.runtime.RunConfig`.
 
-    def resolve_use_pallas(self) -> bool:
-        return default_use_pallas() if self.use_pallas is None else self.use_pallas
-
-    def resolve_compact_kernel(self) -> bool:
-        return (
-            default_use_pallas()
-            if self.compact_kernel is None
-            else self.compact_kernel
-        )
+    Kept as an empty subclass so every pre-runtime call site (and kwarg)
+    keeps working; new code should construct ``RunConfig`` directly."""
 
 
 def run_distributed(
     graph: Graph | DeviceGraph,
     app: MiningApp,
     mesh: Mesh,
-    config: Optional[DistConfig] = None,
+    config: Optional[RunConfig] = None,
 ) -> MiningResult:
-    """Distributed mirror of ``engine.run`` (same MiningResult contract)."""
-    config = config or DistConfig()
-    g = to_device(graph) if isinstance(graph, Graph) else graph
-    n_shards = _mesh_axis_size(mesh, config.axes)
-    resolved_pallas = config.resolve_use_pallas()
-    fused_pipe = config.async_chunks
-    # carried child codes need the next frontier to be exactly the appended
-    # rows in order — raw store only (ODAG extraction resurrects rows), and
-    # the naive-aggregation baseline deliberately re-derives everything.
-    with_patterns = (
-        fused_pipe
-        and app.wants_patterns
-        and config.store == "raw"
-        and not config.naive_aggregation
-    )
-    expand = make_sharded_expand(
-        app, mesh, config.axes,
-        use_pallas=resolved_pallas,
-        interpret=config.pallas_interpret,
-        compact_kernel=config.resolve_compact_kernel(),
-        with_patterns=with_patterns,
-    )
-    aggregate = make_sharded_aggregate(mesh, config.axes)
-    store = make_store(
-        config.store, g,
-        mode=app.mode,
-        app_filter=store_app_filter(app, g),
-        use_pallas=resolved_pallas,
-        interpret=config.pallas_interpret,
-        dense_exchange=True,
-    )
-
-    result = MiningResult(patterns={}, aggregates=[], stats=RunStats(), embeddings={})
-    t_start = time.perf_counter()
-
-    n0 = g.n if app.mode == "vertex" else g.m
-    store.append(np.arange(n0, dtype=np.int32)[:, None])
-    store.seal(1)
-    size = 1
-    cap = config.initial_capacity
-    #: fused mode: (codes, local_verts) of the sealed frontier, emitted by
-    #: the previous superstep's sharded expand (DESIGN.md §8)
-    carried = None
-
-    for step_i in range(1, config.max_steps + 1):
-        if store.n_rows == 0:
-            break
-        st = StepStats(step=step_i, size=size, n_frontier=store.n_rows)
-        st.frontier_bytes = store.raw_bytes
-        if store.kind == "odag":
-            st.odag_bytes = store.stored_bytes
-        timer = Timer()
-
-        # ---- re-materialise per-worker slices from the store -------------
-        # raw: deterministic block split (broadcast-then-partition); odag:
-        # §5.3 cost-annotated partitions, one extraction per worker.
-        parts = store.worker_parts(n_shards)
-        frontier = (
-            np.concatenate(parts, axis=0)
-            if any(len(p) for p in parts)
-            else np.zeros((0, size), np.int32)
-        )
-        b = len(frontier)
-        # extraction may resurrect pattern-pruned rows (a superset of the
-        # appended rows; see ODAGStore) — stats count what is actually mined
-        st.n_frontier = b
-        st.t_storage = timer.lap()
-
-        # ---- pattern aggregation (collective) ---------------------------
-        canon_slot = None
-        agg_out = None
-        if app.wants_patterns:
-            if carried is not None and len(carried[0]) == b:
-                # fused pipeline: codes were computed by the sharded expand
-                # that produced these rows — no re-upload, no second pass
-                codes_np, lv_np = carried
-            else:
-                n_valid_h = jnp.full((b,), size, dtype=jnp.int32)
-                qp = (
-                    pattern_lib.quick_pattern_vertex(
-                        g, jnp.asarray(frontier), n_valid_h
-                    )
-                    if app.mode == "vertex"
-                    else pattern_lib.quick_pattern_edge(
-                        g, jnp.asarray(frontier), n_valid_h
-                    )
-                )
-                codes_np = np.asarray(qp.codes)
-                lv_np = np.asarray(qp.local_verts)
-            if config.naive_aggregation:
-                # naive scheme: exchange per-EMBEDDING codes (an all-gather
-                # of B x 24 bytes x workers) and run pattern canonicalisation
-                # once per embedding instead of once per quick pattern.
-                st.collective_bytes += int(codes_np.size * 8) * n_shards
-                for row in codes_np:
-                    pattern_lib.canonicalize_one(row)       # B iso checks
-            uniq, inv = aggregation.quick_slot_ids(codes_np, np.ones(b, bool))
-            table = pattern_lib.build_pattern_table(
-                uniq, with_orbits=app.wants_domains
-            )
-            pc = len(table.canon_codes)
-            canon_slot, verts_canon = aggregation.map_to_canonical_positions(
-                table, inv, lv_np
-            )
-            # shard the level-1 inputs, reduce with the collective
-            slot_sh, slot_counts = partition_frontier(canon_slot[:, None], n_shards)
-            vc_sh, _ = partition_frontier(np.asarray(verts_canon), n_shards)
-            per = slot_sh.shape[1]
-            valid_sh = (
-                np.arange(per)[None, :] < slot_counts[:, None]
-            )
-            counts, bitmaps = aggregate(
-                jnp.asarray(slot_sh[:, :, 0]),
-                jnp.asarray(vc_sh.reshape(n_shards, per, -1)),
-                jnp.asarray(valid_sh),
-                n_canon=max(pc, 1),
-                n_vertices=g.n,
-            )
-            counts = np.asarray(counts[:pc])
-            if app.wants_domains:
-                supports = aggregation.min_image_support(
-                    bitmaps[:pc], table.canon_n_verts, table.canon_orbits
-                )
-            else:
-                supports = counts.copy()
-            agg_out = aggregation.StepAggregates(
-                canon_codes=table.canon_codes,
-                counts=counts.astype(np.int64),
-                supports=np.asarray(supports).astype(np.int64),
-                n_quick=len(uniq),
-                n_canonical=pc,
-                n_iso_checks=table.n_iso_checks,
-            )
-            result.aggregates.append(agg_out)
-            st.n_quick_patterns = agg_out.n_quick
-            st.n_canonical_patterns = agg_out.n_canonical
-            st.n_iso_checks = b if config.naive_aggregation else agg_out.n_iso_checks
-            st.collective_bytes += counts.nbytes + (
-                int(np.asarray(bitmaps[:pc]).size) // 8 if app.wants_domains else 0
-            )
-        carried = None
-        st.t_aggregate = timer.lap()
-
-        # ---- alpha + outputs --------------------------------------------
-        if agg_out is not None:
-            alpha = app.aggregation_filter(canon_slot, agg_out)
-            for pcs in (np.unique(canon_slot[alpha]) if alpha.any() else []):
-                code = tuple(int(x) for x in agg_out.canon_codes[pcs])
-                value = int(
-                    agg_out.supports[pcs] if app.wants_domains else agg_out.counts[pcs]
-                )
-                result.patterns[code] = result.patterns.get(code, 0) + value
-            if not alpha.all():
-                off, pruned = 0, []
-                for p in parts:
-                    pruned.append(p[alpha[off : off + len(p)]])
-                    off += len(p)
-                parts = pruned
-                frontier = frontier[alpha]
-                b = len(frontier)
-        if app.collect_embeddings and b:
-            result.embeddings[size] = frontier.copy()
-
-        if app.termination_filter(size) or b == 0 or step_i == config.max_steps:
-            result.stats.steps.append(st)
-            break
-
-        # ---- coordination-free sharded expansion over the (§5.3
-        # cost-balanced) per-worker slices ---------------------------------
-        shards, counts_sh = pad_parts(parts, size)
-        per = shards.shape[1]
-        n_valid = (np.arange(per)[None, :] < counts_sh[:, None]) * size
-        members_dev = jnp.asarray(shards)
-        n_valid_dev = jnp.asarray(n_valid.astype(np.int32))
-        while True:
-            outs = expand(g, members_dev, n_valid_dev, out_cap=cap)
-            children, ccount = outs[0], outs[1]
-            ccount = np.asarray(ccount)     # THE per-step control sync
-            st.n_host_syncs += 1
-            st.n_chunks += 1
-            if int(ccount.max()) <= cap:
-                break
-            # counts are exact (unclamped compaction), so exactly one
-            # re-dispatch at the next pow2 bucket suffices
-            _retire(*outs)
-            cap = _next_pow2(int(ccount.max()))
-        st.n_generated = int(np.asarray(outs[2]).sum())
-        st.n_canonical = int(np.asarray(outs[3]).sum())
-
-        # ---- frontier exchange: worker-local children into the store as
-        # device arrays (resolved at seal; odag: DenseODAG OR-allreduce,
-        # §5.2); with the fused pipeline the children's pattern codes are
-        # carried to the next superstep's aggregation -----------------------
-        for s in range(n_shards):
-            store.append(children[s], worker=s, count=int(ccount[s]))
-        if with_patterns:
-            codes_all = np.asarray(outs[4])
-            lv_all = np.asarray(outs[5])
-            carried = (
-                np.concatenate(
-                    [codes_all[s, : ccount[s]] for s in range(n_shards)]
-                ),
-                np.concatenate(
-                    [lv_all[s, : ccount[s]] for s in range(n_shards)]
-                ),
-            )
-        st.t_expand = timer.lap()
-        store.seal(size + 1)
-        st.t_storage += timer.lap()
-        st.n_children = store.n_rows
-        # frontier exchange: what a worker ships (raw rows, or the merged
-        # ODAG with store="odag") rides the same collective accounting as
-        # the aggregation reduce
-        st.collective_bytes += store.exchange_bytes
-        result.stats.steps.append(st)
-
-        if store.n_rows == 0:
-            break
-        size += 1
-
-    result.stats.wall_time = time.perf_counter() - t_start
-    return result
+    """Mine ``graph`` with ``app`` sharded over ``mesh`` (same
+    ``MiningResult`` contract as ``engine.run``)."""
+    return SuperstepRuntime(graph, app, config, ShardMapBackend(mesh)).run()
 
 
 # ---------------------------------------------------------------------------

@@ -1,591 +1,55 @@
-"""The exploration driver — Algorithm 1, BFS level-synchronous.
+"""Serial mining entry point — a thin wrapper over the unified runtime.
 
-Each exploration step is one (chunked) jitted device program; the host loop
-only orchestrates capacities and the pattern dictionary, mirroring the
-paper's BSP supersteps. Frontier arrays are bucketed to power-of-two
-capacities so XLA recompiles only per bucket.
+The exploration driver this module used to implement (Algorithm 1 as a
+BFS level-synchronous loop of jitted chunk programs, DESIGN.md §8) now
+lives ONCE in :mod:`repro.core.runtime`: :class:`SuperstepRuntime` owns
+the superstep loop, :class:`SerialBackend` owns the fused pilot +
+stacked-drain chunk pipeline (and the PR-2 ``async_chunks=False``
+baseline), and :class:`RunConfig` owns every knob. ``run`` and
+``EngineConfig`` are kept as the stable public names — ``EngineConfig`` is
+a deprecation shim over :class:`RunConfig` (same fields, same defaults,
+same ``resolve_*`` behaviour; tested in ``tests/test_runtime.py``).
 
-Between supersteps the frontier is owned by a pluggable
-:mod:`repro.core.store` (DESIGN.md §7): the engine appends child blocks
-while expanding, ``seal``s at the superstep boundary, and mines the next
-step wave-by-wave from ``store.chunks()`` — with ``store="odag"`` the
-frontier lives ODAG-compressed (paper §5.2) and ``device_budget_bytes``
-bounds how many rows are device-resident at once (larger-than-memory
-mining, paper §5.3 cost-balanced waves).
-
-The superstep itself runs as a *fused, device-resident pipeline*
-(DESIGN.md §8, ``async_chunks``): every wave is uploaded once and sliced
-into chunks on device, each chunk program returns children + counts +
-child quick-pattern codes in one pass, counts stay device-resident while
-chunks dispatch back-to-back, and the host drains all control values once
-per superstep — O(1) host syncs instead of the O(chunks) of the PR-2 loop
-(kept as ``async_chunks=False``, the benchmark baseline).
+Checkpoint/resume (DESIGN.md §9): pass ``EngineConfig(checkpoint_dir=...)``
+to persist every sealed superstep, and continue an interrupted run with
+:func:`repro.core.runtime.resume`.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-import time
-from typing import Dict, List, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import aggregation, explore, pattern as pattern_lib
 from repro.core.api import MiningApp
-from repro.core.graph import DeviceGraph, Graph, to_device
-from repro.core.stats import RunStats, StepStats, Timer
-from repro.core.store import make_store
-from repro.kernels.dispatch import default_use_pallas
+from repro.core.graph import DeviceGraph, Graph
+from repro.core.runtime import (
+    MiningResult,
+    RunConfig,
+    SerialBackend,
+    SuperstepRuntime,
+)
+from repro.core.runtime.config import next_pow2 as _next_pow2  # noqa: F401
+from repro.core.runtime.programs import (  # noqa: F401  (compat re-exports)
+    make_expand_fn as _make_expand_fn,
+    quick_patterns as _quick_patterns,
+    retire as _retire,
+    store_app_filter,
+)
+
+__all__ = ["EngineConfig", "MiningResult", "run"]
 
 
 @dataclasses.dataclass
-class EngineConfig:
-    chunk_size: int = 4096        # frontier rows per expansion program
-    initial_capacity: int = 4096  # starting output-capacity bucket
-    max_steps: int = 16           # hard cap on exploration depth
-    #: route the Alg.-2 canonicality check through the Pallas kernel
-    #: (VMEM-sized graphs, vertex mode). None -> auto: on for backends with
-    #: a native Pallas lowering (TPU/GPU), off on CPU.
-    use_pallas: Optional[bool] = None
-    #: with use_pallas, also fuse candidate validity + dedup + Alg.-2 into
-    #: the single-pass expand_canonical kernel (vertex mode).
-    fused_expand: bool = False
-    #: Pallas interpret override; None -> auto per backend (compiled on
-    #: TPU/GPU, interpreter on CPU).
-    pallas_interpret: Optional[bool] = None
-    #: how the frontier lives between supersteps: "raw" keeps the dense
-    #: embedding list, "odag" stores per-size ODAGs (paper §5.2) and
-    #: re-materialises via cost-balanced extraction (§5.3).
-    store: str = "raw"
-    #: device byte budget for one materialised frontier wave; when set, the
-    #: frontier store is wrapped in a SpillStore and each superstep is mined
-    #: in waves of at most this many bytes of embedding rows (frontiers
-    #: larger than device memory). None -> one wave per step.
-    device_budget_bytes: Optional[int] = None
-    #: fused superstep pipeline (DESIGN.md §8): chunk programs return
-    #: children + counts + child quick-pattern codes in one device pass,
-    #: counts stay device-resident and the host drains them ONCE per
-    #: superstep (O(1) host syncs instead of O(chunks); with a device
-    #: budget, once per budget wave so only one wave is ever resident);
-    #: chunk buffers are retired as they fold into the store to cut peak
-    #: HBM. False = the PR-2 chunk loop (one host sync per chunk, separate
-    #: quick-pattern pass over every wave) — kept as the measured baseline.
-    async_chunks: bool = True
-    #: route chunk compaction through the Pallas stream-compaction kernel
-    #: (block prefix-sum + scatter, ``kernels/compact.py``) instead of the
-    #: jnp nonzero gather. None -> auto: on where Pallas compiles to
-    #: native code (TPU), off on CPU where the interpreter would lose.
-    compact_kernel: Optional[bool] = None
+class EngineConfig(RunConfig):
+    """Deprecated alias of :class:`repro.core.runtime.RunConfig`.
 
-    def resolve_use_pallas(self) -> bool:
-        return default_use_pallas() if self.use_pallas is None else self.use_pallas
-
-    def resolve_compact_kernel(self) -> bool:
-        return (
-            default_use_pallas()
-            if self.compact_kernel is None
-            else self.compact_kernel
-        )
-
-
-@dataclasses.dataclass
-class MiningResult:
-    patterns: Dict[tuple, int]                    # canon code -> count/support
-    aggregates: List[aggregation.StepAggregates]
-    stats: RunStats
-    embeddings: Dict[int, np.ndarray]             # size -> (B, size) arrays
-
-    def pattern_count(self, code) -> int:
-        return self.patterns.get(tuple(int(x) for x in code), 0)
-
-
-def _next_pow2(x: int) -> int:
-    return 1 << max(0, (int(x) - 1).bit_length())
-
-
-#: process-wide jitted chunk programs, keyed by (app identity, flags).
-#: Re-running an engine with an equivalent app config reuses the compiled
-#: programs instead of re-tracing per run — the jit cache is what the pow2
-#: bucketing bounds (DESIGN.md §8), so it should be shared, not rebuilt.
-_CHUNK_PROGRAM_CACHE: Dict[tuple, object] = {}
-
-
-def _app_cache_key(app: MiningApp):
-    """Hashable identity of an app's *traced* behaviour (class + dataclass
-    fields), or None when the app carries unhashable state."""
-    try:
-        fields = tuple(
-            (f.name, getattr(app, f.name)) for f in dataclasses.fields(app)
-        )
-        key = (type(app).__module__, type(app).__qualname__, fields)
-        hash(key)
-        return key
-    except (TypeError, ValueError):
-        return None
-
-
-def _make_expand_fn(app: MiningApp, mode: str, use_pallas: bool = False,
-                    fused: bool = False, interpret=None,
-                    compact_kernel: bool = False, with_patterns: bool = False,
-                    with_local_verts: bool = True):
-    """Jitted chunk program of the superstep pipeline: expand + canonicality
-    + app filter + compaction (+ child quick patterns when the pipeline is
-    fused). Recompiled per (width, capacity) pow2 bucket; cached across
-    runs for hashable app configs."""
-    app_key = _app_cache_key(app)
-    key = None
-    if app_key is not None:
-        key = (app_key, mode, use_pallas, fused, interpret,
-               compact_kernel, with_patterns, with_local_verts)
-        cached = _CHUNK_PROGRAM_CACHE.get(key)
-        if cached is not None:
-            return cached
-
-    @functools.partial(jax.jit, static_argnames=("out_cap",))
-    def fn(g: DeviceGraph, members, n_valid, out_cap: int):
-        return explore.fused_chunk_step(
-            g, members, n_valid, out_cap,
-            mode=mode,
-            app=app,
-            with_patterns=with_patterns,
-            with_local_verts=with_local_verts,
-            use_pallas=use_pallas,
-            fused=fused,
-            compact_kernel=compact_kernel,
-            interpret=interpret,
-        )
-
-    if key is not None:
-        _CHUNK_PROGRAM_CACHE[key] = fn
-    return fn
-
-
-def _jit_cache_size(fn) -> Optional[int]:
-    try:
-        return int(fn._cache_size())
-    except Exception:  # pragma: no cover - older/newer jax internals
-        return None
-
-
-def _initial_frontier(g: DeviceGraph, mode: str) -> np.ndarray:
-    n0 = g.n if mode == "vertex" else g.m
-    return np.arange(n0, dtype=np.int32)[:, None]
-
-
-def _quick_patterns(g: DeviceGraph, mode: str, members, n_valid):
-    if mode == "vertex":
-        return pattern_lib.quick_pattern_vertex(g, members, n_valid)
-    return pattern_lib.quick_pattern_edge(g, members, n_valid)
-
-
-def _device_chunk(wave_dev, lo: int, cb: int, bucket: int, k: int):
-    """Slice chunk ``[lo, lo+cb)`` out of a device-resident wave and pad it
-    to its pow2 ``bucket`` on device — no host round-trip per chunk (the
-    PR-2 loop re-built every chunk from the host wave)."""
-    chunk = jax.lax.slice_in_dim(wave_dev, lo, lo + cb)
-    n_valid = jnp.full((cb,), k, jnp.int32)
-    if bucket > cb:
-        chunk = jnp.concatenate(
-            [chunk, jnp.full((bucket - cb, k), -1, jnp.int32)]
-        )
-        n_valid = jnp.concatenate(
-            [n_valid, jnp.zeros((bucket - cb,), jnp.int32)]
-        )
-    return chunk, n_valid
-
-
-def _retire(*buffers) -> None:
-    """Best-effort immediate deletion of drained device buffers (instead of
-    waiting for GC) — the fused pipeline's peak-HBM control."""
-    for b in buffers:
-        if hasattr(b, "delete"):
-            try:
-                b.delete()
-            except Exception:
-                pass
-
-
-def store_app_filter(app: MiningApp, g: DeviceGraph):
-    """Adapt ``app.filter`` to the per-candidate signature ODAG extraction
-    re-applies (DESIGN.md §7): extraction rows are already one member-set per
-    candidate, so the parent-row indirection is the identity. Returns None
-    for the base accept-all filter (nothing to re-apply)."""
-    if type(app).filter is MiningApp.filter:
-        return None
-
-    def phi(mem, nv, cnd):
-        rows = jnp.arange(int(mem.shape[0]), dtype=jnp.int32)
-        return app.filter(g, mem, nv, rows, cnd)
-
-    return phi
+    Kept as an empty subclass so every pre-runtime call site (and kwarg)
+    keeps working; new code should construct ``RunConfig`` directly."""
 
 
 def run(
     graph: Graph | DeviceGraph,
     app: MiningApp,
-    config: Optional[EngineConfig] = None,
+    config: Optional[RunConfig] = None,
 ) -> MiningResult:
-    config = config or EngineConfig()
-    g = to_device(graph) if isinstance(graph, Graph) else graph
-    mode = app.mode
-    use_pallas = config.resolve_use_pallas()
-    compact_kernel = config.resolve_compact_kernel()
-    fused_pipe = config.async_chunks
-    store = make_store(
-        config.store, g,
-        mode=mode,
-        app_filter=store_app_filter(app, g),
-        use_pallas=use_pallas,
-        interpret=config.pallas_interpret,
-        device_budget_bytes=config.device_budget_bytes,
-    )
-    # child codes computed in the chunk program are only reusable when the
-    # next superstep re-materialises exactly the appended rows in order —
-    # true for the raw store (also under a spill budget), not for ODAG
-    # extraction (which may resurrect pattern-pruned rows).
-    with_patterns = fused_pipe and app.wants_patterns and store.kind == "raw"
-    expand_fn = _make_expand_fn(
-        app, mode,
-        use_pallas=use_pallas,
-        fused=config.fused_expand,
-        interpret=config.pallas_interpret,
-        compact_kernel=compact_kernel,
-        with_patterns=with_patterns,
-        with_local_verts=app.wants_domains,
-    )
-    cache_before = _jit_cache_size(expand_fn)
-
-    result = MiningResult(patterns={}, aggregates=[], stats=RunStats(), embeddings={})
-    t_start = time.perf_counter()
-
-    store.append(_initial_frontier(g, mode))
-    store.seal(1)
-    size = 1
-    #: fused mode: (codes, local_verts) of the sealed frontier, carried from
-    #: the previous superstep's chunk programs — the next aggregation pass
-    #: is pure host work, no re-upload, no second device pass.
-    carried: Optional[tuple] = None
-    #: fused mode: the output-capacity bucket persists across supersteps so
-    #: one overflow re-dispatch per run (not per step) is the common case.
-    cap = max(config.initial_capacity, 1)
-    signatures = set()
-
-    for step in range(1, config.max_steps + 1):
-        b = store.n_rows
-        if b == 0:
-            break
-        st = StepStats(step=step, size=size, n_frontier=b)
-        st.frontier_bytes = store.raw_bytes
-        if store.kind == "odag":
-            st.odag_bytes = store.stored_bytes
-        timer = Timer()
-
-        # ---- re-materialise the frontier in device-budget waves ----------
-        waves = list(store.chunks())
-        wave_dev: List[Optional[jnp.ndarray]] = [None] * len(waves)
-        # extraction may resurrect pattern-pruned rows (a superset of the
-        # appended rows; see ODAGStore) — stats count what is actually mined
-        st.n_frontier = sum(len(w) for w in waves)
-        st.t_storage = timer.lap()
-
-        # ---- pattern aggregation of this step's embeddings (end of the
-        # step that generated them, per Algorithm 1): quick patterns either
-        # carried from the chunk programs that produced the rows (fused,
-        # raw store) or computed per wave on the one device-resident upload
-        # the expansion below reuses; level-1 merge on host ----------------
-        canon_slot = None
-        agg = None
-        if app.wants_patterns:
-            if carried is not None and len(carried[0]) == st.n_frontier:
-                codes, lv = carried
-            else:
-                codes_parts, lv_parts = [], []
-                for wi, w in enumerate(waves):
-                    wave_dev[wi] = jnp.asarray(np.ascontiguousarray(w))
-                    qp = _quick_patterns(
-                        g, mode, wave_dev[wi],
-                        jnp.full((len(w),), size, dtype=jnp.int32),
-                    )
-                    codes_parts.append(np.asarray(qp.codes))
-                    lv_parts.append(np.asarray(qp.local_verts))
-                    if config.device_budget_bytes is not None:
-                        # SpillStore contract: one budget wave resident at
-                        # a time — expansion re-uploads its own wave
-                        _retire(wave_dev[wi])
-                        wave_dev[wi] = None
-                codes = (
-                    np.concatenate(codes_parts)
-                    if codes_parts else np.zeros((0, 3), np.int64)
-                )
-                lv = (
-                    np.concatenate(lv_parts)
-                    if lv_parts
-                    else np.zeros((0, pattern_lib.MAX_PATTERN_VERTICES), np.int32)
-                )
-            agg, canon_slot = aggregation.aggregate_rows(
-                g.n, codes, lv, app.wants_domains
-            )
-            result.aggregates.append(agg)
-            st.n_quick_patterns = agg.n_quick
-            st.n_canonical_patterns = agg.n_canonical
-            st.n_iso_checks = agg.n_iso_checks
-        carried = None
-        st.t_aggregate = timer.lap()
-
-        # ---- alpha: aggregation filter on the frontier -------------------
-        if app.wants_patterns and agg is not None:
-            alpha = app.aggregation_filter(canon_slot, agg)
-            # beta / outputs: record aggregates of surviving patterns
-            surviving = np.unique(canon_slot[alpha]) if alpha.any() else []
-            for pc in surviving:
-                code = tuple(int(x) for x in agg.canon_codes[pc])
-                value = int(
-                    agg.supports[pc] if app.wants_domains else agg.counts[pc]
-                )
-                result.patterns[code] = result.patterns.get(code, 0) + value
-
-            if not alpha.all():
-                off, pruned = 0, []
-                for w in waves:
-                    pruned.append(w[alpha[off : off + len(w)]])
-                    off += len(w)
-                waves = pruned
-                # pruned rows invalidate the device-resident waves
-                _retire(*[wd for wd in wave_dev if wd is not None])
-                wave_dev = [None] * len(waves)
-        b_live = sum(len(w) for w in waves)
-        if app.collect_embeddings and b_live:
-            live = [w for w in waves if len(w)]
-            result.embeddings[size] = (
-                np.asarray(live[0])
-                if len(live) == 1
-                else np.concatenate(live, axis=0)
-            )
-
-        # ---- termination ---------------------------------------------------
-        if app.termination_filter(size) or b_live == 0 or step == config.max_steps:
-            result.stats.steps.append(st)
-            break
-
-        # ---- expansion (chunked, capacity-bucketed), children appended to
-        # the store as they are produced ----------------------------------
-        if fused_pipe:
-            if config.device_budget_bytes is not None and len(waves) > 1:
-                # SpillStore contract (DESIGN.md §7): at most one budget
-                # wave device-resident at a time — pipeline and drain one
-                # wave per pass (syncs O(waves), i.e. O(frontier/budget),
-                # still independent of the chunk count) and retire each
-                # wave's buffers before the next is uploaded.
-                parts = []
-                for wi in range(len(waves)):
-                    sub_dev = [wave_dev[wi]]
-                    c, cap = _expand_fused(
-                        g, expand_fn, store, config, [waves[wi]], sub_dev,
-                        size, cap, st, signatures, with_patterns,
-                    )
-                    _retire(sub_dev[0])
-                    wave_dev[wi] = None
-                    if c is not None:
-                        parts.append(c)
-                carried = (
-                    (
-                        np.concatenate([p[0] for p in parts]),
-                        np.concatenate([p[1] for p in parts]),
-                    )
-                    if parts
-                    else None
-                )
-            else:
-                carried, cap = _expand_fused(
-                    g, expand_fn, store, config, waves, wave_dev, size, cap,
-                    st, signatures, with_patterns,
-                )
-        else:
-            _expand_legacy(g, expand_fn, store, config, waves, size, st,
-                           signatures)
-
-        # every chunk has been drained — the step's device waves are dead
-        _retire(*[wd for wd in wave_dev if wd is not None])
-        st.t_expand = timer.lap()
-        store.seal(size + 1)
-        st.t_storage += timer.lap()
-        result.stats.steps.append(st)
-
-        if store.n_rows == 0:
-            break
-        size += 1
-
-    result.stats.wall_time = time.perf_counter() - t_start
-    result.stats.chunk_signatures = sorted(signatures)
-    cache_after = _jit_cache_size(expand_fn)
-    result.stats.n_compiles = (
-        cache_after - cache_before
-        if cache_before is not None and cache_after is not None
-        else len(signatures)
-    )
-    return result
-
-
-def _iter_chunks(waves, wave_dev, chunk_size: int, size: int):
-    """Yield device-sliced, pow2-padded chunks over all waves, uploading
-    each wave at most once (reusing the aggregation pass's upload)."""
-    for wi, w in enumerate(waves):
-        if not len(w):
-            continue
-        if wave_dev[wi] is None:
-            wave_dev[wi] = jnp.asarray(np.ascontiguousarray(w))
-        wd = wave_dev[wi]
-        for lo in range(0, len(w), chunk_size):
-            cb = min(chunk_size, len(w) - lo)
-            bucket = min(chunk_size, _next_pow2(max(cb, 1)))
-            chunk, n_valid = _device_chunk(wd, lo, cb, bucket, size)
-            yield wi, lo, cb, bucket, chunk, n_valid
-
-
-#: chunk programs in flight between drains: bounds how many capacity-
-#: padded output buffers are device-resident at once (peak HBM is
-#: O(window * step_cap), not O(step output)) while keeping host syncs at
-#: O(chunks / window) per superstep — 1 + pilot for any step under ~32
-#: chunks.
-_DRAIN_WINDOW = 32
-
-
-def _expand_fused(g, expand_fn, store, config, waves, wave_dev, size, cap,
-                  st, signatures, with_patterns):
-    """The fused superstep expansion (DESIGN.md §8).
-
-    One *pilot* chunk calibrates the step's output-capacity bucket (sync 1
-    — the PR-2 loop instead discovers capacity growth once per chunk); the
-    remaining chunks dispatch back-to-back with counts left on device and
-    drain in stacked reads of ``_DRAIN_WINDOW`` chunks (one more sync per
-    window, a single one for typical steps). Compaction counts are exact
-    (never clamped to the capacity), so overshot chunks are re-dispatched
-    at their exact pow2 bucket without any further sync. As a window
-    drains, its children fold into the store via device-side prefix
-    slices (only valid rows cross to the host), its pattern codes are
-    collected for the next step's aggregation, and every buffer of the
-    window is retired."""
-    chunks = list(_iter_chunks(waves, wave_dev, config.chunk_size, size))
-    st.n_chunks += len(chunks)
-    if not chunks:
-        return None, cap
-
-    # ---- pilot: sync 1 calibrates the capacity bucket for the step ------
-    _, _, cb0, bucket0, chunk0, n_valid0 = chunks[0]
-    signatures.add((size, bucket0, cap))
-    out = expand_fn(g, chunk0, n_valid0, out_cap=cap)
-    c0 = int(out[1])
-    st.n_host_syncs += 1
-    if c0 > cap:
-        _retire(out[0], out[2], out[3])
-        cap = _next_pow2(c0)
-        signatures.add((size, bucket0, cap))
-        out = expand_fn(g, chunk0, n_valid0, out_cap=cap)  # count known exact
-    # scale the pilot count to a full bucket for the remaining chunks; a
-    # chunk that still overshoots is re-dispatched individually below
-    est = -((-c0 * bucket0) // max(cb0, 1))        # ceil(c0 * bucket0 / cb0)
-    step_cap = max(_next_pow2(max(est, 1)), 64)
-
-    codes_parts, lv_parts = [], []
-
-    def drain(pending):
-        """One stacked control sync for a window of dispatched chunks,
-        exact-cap overflow retries, then fold + retire."""
-        meta = np.asarray(
-            jnp.stack([s for p in pending for s in (p[9], p[10], p[11])])
-        ).reshape(-1, 3)
-        st.n_host_syncs += 1
-        counts = meta[:, 0]
-        st.n_generated += int(meta[:, 1].sum())
-        st.n_canonical += int(meta[:, 2].sum())
-        for i, p in enumerate(pending):
-            if counts[i] <= p[12]:
-                continue
-            _retire(p[6], p[7], p[8])          # oversubscribed outputs
-            retry_cap = _next_pow2(int(counts[i]))
-            signatures.add((size, p[3], retry_cap))
-            children, _, codes, lv, _, _ = expand_fn(
-                g, p[4], p[5], out_cap=retry_cap
-            )
-            p[6], p[7], p[8] = children, codes, lv
-        for i, p in enumerate(pending):
-            cnt = int(counts[i])
-            _retire(p[4], p[5])                # chunk inputs are dead now
-            if cnt:
-                # device-side prefix slices: the padding never crosses to
-                # the host (same contract as store.resolve_rows)
-                store.append(np.asarray(p[6][:cnt], dtype=np.int32))
-                st.n_children += cnt
-                if with_patterns:
-                    codes_parts.append(np.asarray(p[7][:cnt]))
-                    lv_parts.append(np.asarray(p[8][:cnt]))
-            _retire(p[6], p[7], p[8])
-
-    # [wi, lo, cb, bucket, chunk, n_valid, children, codes, lv,
-    #  count, ngen, ncanon, used_cap]
-    pending = [list(chunks[0]) + [out[0], out[2], out[3],
-                                  out[1], out[4], out[5], cap]]
-    for ch in chunks[1:]:
-        _, _, _, bucket_i, chunk_i, n_valid_i = ch
-        signatures.add((size, bucket_i, step_cap))
-        children, count, codes, lv, ngen, ncanon = expand_fn(
-            g, chunk_i, n_valid_i, out_cap=step_cap
-        )
-        pending.append(
-            list(ch) + [children, codes, lv, count, ngen, ncanon, step_cap]
-        )
-        if len(pending) >= _DRAIN_WINDOW:
-            drain(pending)
-            pending = []
-    if pending:
-        drain(pending)
-    cap = max(cap, step_cap)
-
-    carried = None
-    if with_patterns and codes_parts:
-        carried = (np.concatenate(codes_parts), np.concatenate(lv_parts))
-    return carried, cap
-
-
-def _expand_legacy(g, expand_fn, store, config, waves, size, st, signatures):
-    """The PR-2 chunk loop, preserved bit-for-bit as the measured baseline
-    (``benchmarks/bench_superstep.py``): every chunk is sliced and padded
-    on the host and re-uploaded (even when aggregation already uploaded
-    the wave — the double upload the fused pipeline removes), one blocking
-    ``int(count)`` host sync per chunk plus one per capacity retry, the
-    capacity bucket reset every superstep, children forced through
-    ``np.asarray`` per chunk."""
-    cap = max(config.initial_capacity, 1)
-    for w in waves:
-        for lo in range(0, len(w), config.chunk_size):
-            chunk = np.asarray(w[lo : lo + config.chunk_size])
-            cb = int(chunk.shape[0])
-            bucket = min(config.chunk_size, _next_pow2(max(cb, 1)))
-            pad = bucket - cb
-            if pad:
-                chunk = np.concatenate(
-                    [chunk, np.full((pad, size), -1, np.int32)], axis=0
-                )
-            n_valid = jnp.concatenate(
-                [jnp.full((cb,), size, jnp.int32), jnp.zeros((pad,), jnp.int32)]
-            )
-            chunk = jnp.asarray(chunk)
-            st.n_chunks += 1
-            while True:
-                signatures.add((size, bucket, cap))
-                children, count, _, _, ngen, ncanon = expand_fn(
-                    g, chunk, n_valid, out_cap=cap
-                )
-                count = int(count)
-                st.n_host_syncs += 1
-                if count <= cap:
-                    break
-                _retire(children)
-                cap = _next_pow2(count)
-            st.n_generated += int(ngen)
-            st.n_canonical += int(ncanon)
-            if count:
-                store.append(np.asarray(children[:count]))
-                st.n_children += count
+    """Mine ``graph`` with ``app`` on the serial backend (one device)."""
+    return SuperstepRuntime(graph, app, config, SerialBackend()).run()

@@ -1,0 +1,36 @@
+"""Unified superstep runtime (DESIGN.md §9).
+
+One :class:`SuperstepRuntime` BSP loop, parameterised by an
+:class:`ExecutionBackend` — :class:`SerialBackend` (single-device fused
+chunk pipeline) or :class:`ShardMapBackend` (mesh workers + collectives) —
+configured by one :class:`RunConfig`, with superstep-granular
+checkpoint/resume (``checkpoint_dir=`` / :func:`resume`) and elastic
+restore under a different worker count. ``engine.run`` and
+``distributed.run_distributed`` are thin wrappers kept for compatibility.
+"""
+from repro.core.runtime.backend import ExecutionBackend
+from repro.core.runtime.checkpoint import (
+    CheckpointState,
+    app_fingerprint,
+    graph_fingerprint,
+    latest_checkpoint,
+)
+from repro.core.runtime.config import RunConfig, next_pow2
+from repro.core.runtime.loop import MiningResult, SuperstepRuntime, resume
+from repro.core.runtime.serial import SerialBackend
+from repro.core.runtime.shard import ShardMapBackend
+
+__all__ = [
+    "CheckpointState",
+    "ExecutionBackend",
+    "MiningResult",
+    "RunConfig",
+    "SerialBackend",
+    "ShardMapBackend",
+    "SuperstepRuntime",
+    "app_fingerprint",
+    "graph_fingerprint",
+    "latest_checkpoint",
+    "next_pow2",
+    "resume",
+]

@@ -1,0 +1,278 @@
+"""Superstep-granular checkpoint/resume for the mining runtime (DESIGN.md §9).
+
+Because sealed frontier stores are the *only* inter-superstep state
+(DESIGN.md §7), a mining checkpoint is tiny and exact: {sealed store
+payload (raw rows, or the ODAG's per-level domains + connectivity
+bitmaps), the patterns/aggregates/stats accumulated so far, the superstep
+cursor (next step, embedding size, capacity bucket), and app + graph
+fingerprints}. It is written atomically at the seal boundary — the same
+cut the paper's fault-tolerance story checkpoints (Aridhi et al.,
+arXiv:1212.0017) — so a resumed run replays nothing and recomputes only
+the carried quick-pattern codes (identical by construction).
+
+Elasticity falls out of the store subsystem: the payload is
+worker-count-free, and per-worker slices are re-partitioned from the
+restored store at extraction time (``worker_parts`` / ``partition_by_cost``),
+so a run checkpointed under W workers resumes under any W' — or under the
+serial backend — with identical pattern output (tested in
+``tests/test_checkpoint.py``).
+
+This file replaces nothing in ``training/checkpoint.py`` (the model-zoo
+scaffolding keeps its own shard-metadata format); the *mining* engines
+checkpoint here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import re
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.aggregation import StepAggregates
+from repro.core.graph import DeviceGraph
+from repro.core.stats import StepStats
+
+CHECKPOINT_VERSION = 1
+_FILE_RE = re.compile(r"^ckpt-step(\d+)\.npz$")
+
+
+# ---------------------------------------------------------------------------
+# fingerprints: a checkpoint only resumes against the run that wrote it
+# ---------------------------------------------------------------------------
+
+def graph_fingerprint(g: DeviceGraph) -> str:
+    """Content hash of the mined graph (labels + edges + edge labels)."""
+    h = hashlib.sha1()
+    for arr in (g.labels, g.edge_uv, g.edge_labels):
+        a = np.ascontiguousarray(np.asarray(arr))
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def app_fingerprint(app) -> str:
+    """Identity of the app's traced behaviour: class + dataclass fields
+    (the same identity the chunk-program cache keys on)."""
+    if dataclasses.is_dataclass(app):
+        fields = {
+            f.name: repr(getattr(app, f.name))
+            for f in dataclasses.fields(app)
+        }
+    else:  # non-dataclass apps: best effort over the instance dict
+        fields = {k: repr(v) for k, v in sorted(vars(app).items())}
+    payload = json.dumps(
+        [type(app).__module__, type(app).__qualname__, fields], sort_keys=True
+    )
+    return hashlib.sha1(payload.encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# on-disk format: one .npz per checkpoint, meta as an embedded JSON string
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CheckpointState:
+    """Everything a resumed run needs, already deserialised."""
+
+    step: int                      # next superstep index to execute
+    size: int                      # embedding size of the sealed frontier
+    capacity: int                  # persistent output-capacity bucket
+    wall_time: float               # wall clock accumulated before the cut
+    patterns: Dict[tuple, int]
+    embeddings: Dict[int, np.ndarray]
+    aggregates: List[StepAggregates]
+    stats_steps: List[StepStats]
+    store_state: dict              # FrontierStore.state_dict() payload
+    graph_fp: str
+    app_fp: str
+
+
+def checkpoint_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"ckpt-step{step:04d}.npz")
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    """The highest-step checkpoint file in ``directory`` (None if empty)."""
+    best, best_step = None, -1
+    try:
+        names = os.listdir(directory)
+    except FileNotFoundError:
+        return None
+    for name in names:
+        m = _FILE_RE.match(name)
+        if m and int(m.group(1)) > best_step:
+            best_step = int(m.group(1))
+            best = os.path.join(directory, name)
+    return best
+
+
+def save(path: str, state: CheckpointState) -> None:
+    """Atomic single-file write: everything lands in one ``np.savez`` (no
+    pickle — arrays plus one JSON meta string), staged next to the target
+    and ``os.replace``d so a crash mid-write never leaves a torn
+    checkpoint behind."""
+    arrays: Dict[str, np.ndarray] = {}
+    if state.patterns:
+        arrays["pat_codes"] = np.asarray(
+            [list(code) for code in state.patterns], dtype=np.int64
+        )
+        arrays["pat_values"] = np.asarray(
+            list(state.patterns.values()), dtype=np.int64
+        )
+    for size, emb in state.embeddings.items():
+        arrays[f"emb{int(size)}"] = np.asarray(emb, dtype=np.int32)
+    agg_meta = []
+    for i, agg in enumerate(state.aggregates):
+        arrays[f"agg{i}_canon"] = np.asarray(agg.canon_codes, dtype=np.int64)
+        arrays[f"agg{i}_counts"] = np.asarray(agg.counts, dtype=np.int64)
+        arrays[f"agg{i}_supports"] = np.asarray(agg.supports, dtype=np.int64)
+        agg_meta.append([agg.n_quick, agg.n_canonical, agg.n_iso_checks])
+    for name, arr in state.store_state["arrays"].items():
+        arrays[f"store_{name}"] = np.asarray(arr)
+    meta = {
+        "version": CHECKPOINT_VERSION,
+        "step": int(state.step),
+        "size": int(state.size),
+        "capacity": int(state.capacity),
+        "wall_time": float(state.wall_time),
+        "graph_fp": state.graph_fp,
+        "app_fp": state.app_fp,
+        "emb_sizes": sorted(int(s) for s in state.embeddings),
+        "n_aggregates": len(state.aggregates),
+        "agg_meta": agg_meta,
+        "stats": [dataclasses.asdict(s) for s in state.stats_steps],
+        "store": {
+            "kind": state.store_state["kind"],
+            "meta": state.store_state["meta"],
+            "array_keys": sorted(state.store_state["arrays"]),
+        },
+    }
+    arrays["meta"] = np.asarray(json.dumps(meta))
+
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = f"{path}.tmp-{os.getpid()}.npz"
+    try:
+        np.savez(tmp, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):  # pragma: no cover - only on a failed write
+            os.unlink(tmp)
+
+
+def load(path: str) -> CheckpointState:
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["meta"][()]))
+        if meta["version"] != CHECKPOINT_VERSION:
+            raise ValueError(
+                f"checkpoint version {meta['version']} != "
+                f"{CHECKPOINT_VERSION} ({path})"
+            )
+        patterns: Dict[tuple, int] = {}
+        if "pat_codes" in z:
+            codes, values = z["pat_codes"], z["pat_values"]
+            patterns = {
+                tuple(int(x) for x in codes[i]): int(values[i])
+                for i in range(len(codes))
+            }
+        embeddings = {
+            int(s): np.asarray(z[f"emb{int(s)}"]) for s in meta["emb_sizes"]
+        }
+        aggregates = [
+            StepAggregates(
+                canon_codes=np.asarray(z[f"agg{i}_canon"]),
+                counts=np.asarray(z[f"agg{i}_counts"]),
+                supports=np.asarray(z[f"agg{i}_supports"]),
+                n_quick=int(meta["agg_meta"][i][0]),
+                n_canonical=int(meta["agg_meta"][i][1]),
+                n_iso_checks=int(meta["agg_meta"][i][2]),
+            )
+            for i in range(meta["n_aggregates"])
+        ]
+        store_state = {
+            "kind": meta["store"]["kind"],
+            "meta": meta["store"]["meta"],
+            "arrays": {
+                key: np.asarray(z[f"store_{key}"])
+                for key in meta["store"]["array_keys"]
+            },
+        }
+    return CheckpointState(
+        step=int(meta["step"]),
+        size=int(meta["size"]),
+        capacity=int(meta["capacity"]),
+        wall_time=float(meta["wall_time"]),
+        patterns=patterns,
+        embeddings=embeddings,
+        aggregates=aggregates,
+        stats_steps=[StepStats(**d) for d in meta["stats"]],
+        store_state=store_state,
+        graph_fp=meta["graph_fp"],
+        app_fp=meta["app_fp"],
+    )
+
+
+def load_for(checkpoint: Optional[str], g: DeviceGraph, app) -> CheckpointState:
+    """Resolve + load + fingerprint-verify a checkpoint for (graph, app).
+
+    ``checkpoint`` may be a file, a directory (latest checkpoint in it
+    wins), or None (error). Raises ``ValueError`` when the checkpoint was
+    written against a different graph or app — resuming would silently mix
+    two runs' patterns otherwise."""
+    if checkpoint is None:
+        raise ValueError("no checkpoint given (and no checkpoint_dir set)")
+    path = checkpoint
+    if os.path.isdir(path):
+        path = latest_checkpoint(path)
+        if path is None:
+            raise FileNotFoundError(f"no checkpoints in {checkpoint!r}")
+    state = load(path)
+    gfp = graph_fingerprint(g)
+    if state.graph_fp != gfp:
+        raise ValueError(
+            f"checkpoint {path} was written for a different graph "
+            f"({state.graph_fp[:12]} != {gfp[:12]})"
+        )
+    afp = app_fingerprint(app)
+    if state.app_fp != afp:
+        raise ValueError(
+            f"checkpoint {path} was written for a different app config "
+            f"({state.app_fp[:12]} != {afp[:12]})"
+        )
+    return state
+
+
+class Checkpointer:
+    """Writes one checkpoint per seal boundary the cadence selects."""
+
+    def __init__(self, config, g: DeviceGraph, app) -> None:
+        self.directory = config.checkpoint_dir
+        self.graph_fp = graph_fingerprint(g)
+        self.app_fp = app_fingerprint(app)
+        os.makedirs(self.directory, exist_ok=True)
+
+    def save(self, *, step: int, size: int, capacity: int, store, result,
+             wall_time: float) -> float:
+        """Persist the cut after a sealed superstep; returns seconds spent
+        (charged to ``StepStats.t_checkpoint`` — the bench_checkpoint
+        overhead gate reads exactly this)."""
+        t0 = time.perf_counter()
+        state = CheckpointState(
+            step=step,
+            size=size,
+            capacity=capacity,
+            wall_time=wall_time,
+            patterns=result.patterns,
+            embeddings=result.embeddings,
+            aggregates=result.aggregates,
+            stats_steps=result.stats.steps,
+            store_state=store.state_dict(),
+            graph_fp=self.graph_fp,
+            app_fp=self.app_fp,
+        )
+        save(checkpoint_path(self.directory, step), state)
+        return time.perf_counter() - t0

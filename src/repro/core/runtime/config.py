@@ -1,0 +1,97 @@
+"""The one run configuration for the unified superstep runtime (DESIGN.md §9).
+
+``RunConfig`` supersedes the two hand-maintained config dataclasses the
+engines grew (``EngineConfig`` in ``core/engine.py`` and ``DistConfig`` in
+``core/distributed.py``): every knob, every ``resolve_*`` helper, and the
+pow2 capacity-bucket arithmetic now live here exactly once. The old names
+are kept as empty subclasses (deprecation shims), so every existing call
+site keeps working and old kwargs resolve identically (tested in
+``tests/test_runtime.py``).
+
+Serial-only knobs (``chunk_size``, ``device_budget_bytes``) are ignored by
+the shard-map backend; distributed-only knobs (``axes``,
+``naive_aggregation``) are ignored by the serial backend — a config is a
+description of the *run*, the backend picks what applies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.kernels.dispatch import default_use_pallas
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (1 for x <= 1): THE capacity-bucket rule.
+
+    Chunk widths and output capacities are bucketed to powers of two so XLA
+    recompiles only per bucket (DESIGN.md §8) — shared by both backends and
+    the benchmarks."""
+    return 1 << max(0, (int(x) - 1).bit_length())
+
+
+@dataclasses.dataclass
+class RunConfig:
+    """Configuration of one mining run, backend-agnostic (DESIGN.md §9)."""
+
+    chunk_size: int = 4096        # frontier rows per expansion program (serial)
+    initial_capacity: int = 4096  # starting output-capacity bucket (per shard
+                                  # in the distributed backend)
+    max_steps: int = 16           # hard cap on exploration depth
+    #: route the Alg.-2 canonicality check through the Pallas kernel
+    #: (VMEM-sized graphs, vertex mode). None -> auto: on for backends with
+    #: a native Pallas lowering (TPU/GPU), off on CPU.
+    use_pallas: Optional[bool] = None
+    #: with use_pallas, also fuse candidate validity + dedup + Alg.-2 into
+    #: the single-pass expand_canonical kernel (vertex mode).
+    fused_expand: bool = False
+    #: Pallas interpret override; None -> auto per backend (compiled on
+    #: TPU/GPU, interpreter on CPU).
+    pallas_interpret: Optional[bool] = None
+    #: how the frontier lives between supersteps: "raw" keeps the dense
+    #: embedding list, "odag" stores per-size ODAGs (paper §5.2) and
+    #: re-materialises via cost-balanced extraction (§5.3).
+    store: str = "raw"
+    #: device byte budget for one materialised frontier wave; when set, the
+    #: frontier store is wrapped in a SpillStore and each superstep is mined
+    #: in waves of at most this many bytes of embedding rows (frontiers
+    #: larger than device memory). None -> one wave per step. Serial
+    #: backend only.
+    device_budget_bytes: Optional[int] = None
+    #: fused superstep pipeline (DESIGN.md §8): chunk programs return
+    #: children + counts + child quick-pattern codes in one device pass,
+    #: counts stay device-resident and the host drains them ONCE per
+    #: superstep (O(1) host syncs instead of O(chunks)). False = the PR-2
+    #: chunk loop (one host sync per chunk, separate quick-pattern pass) —
+    #: kept as the measured baseline.
+    async_chunks: bool = True
+    #: route chunk compaction through the Pallas stream-compaction kernel
+    #: (block prefix-sum + scatter, ``kernels/compact.py``) instead of the
+    #: jnp nonzero gather. None -> auto: on where Pallas compiles to
+    #: native code (TPU), off on CPU where the interpreter would lose.
+    compact_kernel: Optional[bool] = None
+    #: mesh axes the shard-map backend shards the frontier over.
+    axes: tuple = ("data",)
+    #: disable two-level aggregation (§Perf baseline, distributed backend):
+    #: every worker all-gathers all embeddings' quick codes and
+    #: canonicalises each embedding's pattern itself — the paper's Fig.11
+    #: naive scheme.
+    naive_aggregation: bool = False
+    #: directory for superstep-granular checkpoints (DESIGN.md §9): when
+    #: set, the runtime writes {sealed store payload, stats, patterns,
+    #: superstep cursor, app+graph fingerprints} at the seal boundary and
+    #: ``runtime.resume`` continues from the latest one — under any worker
+    #: count (elastic restore: re-partition happens at extraction time).
+    checkpoint_dir: Optional[str] = None
+    #: write a checkpoint every this-many supersteps (1 = every seal).
+    checkpoint_every: int = 1
+
+    def resolve_use_pallas(self) -> bool:
+        return default_use_pallas() if self.use_pallas is None else self.use_pallas
+
+    def resolve_compact_kernel(self) -> bool:
+        return (
+            default_use_pallas()
+            if self.compact_kernel is None
+            else self.compact_kernel
+        )

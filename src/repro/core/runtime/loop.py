@@ -1,0 +1,235 @@
+"""The ONE superstep driver (DESIGN.md §9): Algorithm 1, BFS level-synchronous.
+
+``SuperstepRuntime`` owns the BSP loop every deployment runs — init frontier
+→ (fused or legacy) expand → store seal → pattern aggregate → app post-step —
+parameterised by an :class:`~repro.core.runtime.backend.ExecutionBackend`
+(serial chunk pipeline or shard-map mesh). ``engine.run`` and
+``distributed.run_distributed`` are thin wrappers over this class; the loop
+logic they used to duplicate (pilot-chunk calibration, capacity buckets,
+drain windows, aggregation/alpha/output plumbing) lives here and in the
+backends exactly once.
+
+Because PR 2 made sealed frontier stores the *only* inter-superstep state,
+the seal boundary is a checkpointable cut: with ``checkpoint_dir`` set the
+runtime persists {sealed store payload, stats, patterns, superstep cursor,
+app+graph fingerprints} every ``checkpoint_every`` supersteps, and
+:func:`resume` (or :meth:`SuperstepRuntime.resume`) continues an
+interrupted run — under ANY backend or worker count, since per-worker
+slices are re-partitioned from the store at extraction time (elastic
+restore, ``runtime/checkpoint.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import aggregation
+from repro.core.api import MiningApp
+from repro.core.graph import DeviceGraph, Graph, to_device
+from repro.core.runtime import checkpoint as checkpoint_lib
+from repro.core.runtime import programs
+from repro.core.runtime.backend import ExecutionBackend
+from repro.core.runtime.config import RunConfig
+from repro.core.stats import RunStats, StepStats, Timer
+
+
+@dataclasses.dataclass
+class MiningResult:
+    patterns: Dict[tuple, int]                    # canon code -> count/support
+    aggregates: List[aggregation.StepAggregates]
+    stats: RunStats
+    embeddings: Dict[int, np.ndarray]             # size -> (B, size) arrays
+
+    def pattern_count(self, code) -> int:
+        return self.patterns.get(tuple(int(x) for x in code), 0)
+
+
+class SuperstepRuntime:
+    """One BSP mining run: a graph, an app, a config, and a backend."""
+
+    def __init__(
+        self,
+        graph: Graph | DeviceGraph,
+        app: MiningApp,
+        config: Optional[RunConfig] = None,
+        backend: Optional[ExecutionBackend] = None,
+    ) -> None:
+        from repro.core.runtime.serial import SerialBackend
+
+        self.g = to_device(graph) if isinstance(graph, Graph) else graph
+        self.app = app
+        self.config = config if config is not None else RunConfig()
+        self.backend = backend if backend is not None else SerialBackend()
+        self.store = self.backend.bind(self.g, self.app, self.config)
+
+    # -- entry points -------------------------------------------------------
+    def run(self) -> MiningResult:
+        """Mine from scratch (superstep 1 seeds every vertex/edge)."""
+        return self._run(None)
+
+    def resume(self, checkpoint: Optional[str] = None) -> MiningResult:
+        """Continue an interrupted run from a checkpoint file or directory
+        (directory -> the latest checkpoint in it; None -> the configured
+        ``checkpoint_dir``). Graph and app must fingerprint-match what the
+        checkpoint was written with; backend and worker count may differ
+        (elastic restore)."""
+        state = checkpoint_lib.load_for(
+            checkpoint if checkpoint is not None else self.config.checkpoint_dir,
+            g=self.g,
+            app=self.app,
+        )
+        self.store.from_state_dict(state.store_state)
+        self.backend.capacity = max(int(state.capacity), 1)
+        return self._run(state)
+
+    # -- the unified loop ---------------------------------------------------
+    def _run(self, state) -> MiningResult:
+        config, app, store, backend = (
+            self.config, self.app, self.store, self.backend,
+        )
+        ckpt = (
+            checkpoint_lib.Checkpointer(config, self.g, app)
+            if config.checkpoint_dir is not None
+            else None
+        )
+        t_start = time.perf_counter()
+
+        if state is None:
+            result = MiningResult(
+                patterns={}, aggregates=[], stats=RunStats(), embeddings={}
+            )
+            prior_wall = 0.0
+            store.append(programs.initial_frontier(self.g, app.mode))
+            store.seal(1)
+            size, first_step = 1, 1
+        else:
+            result = MiningResult(
+                patterns=dict(state.patterns),
+                aggregates=list(state.aggregates),
+                stats=RunStats(steps=list(state.stats_steps)),
+                embeddings=dict(state.embeddings),
+            )
+            prior_wall = state.wall_time
+            size, first_step = state.size, state.step
+
+        #: fused mode: (codes, local_verts) of the sealed frontier, carried
+        #: from the previous superstep's chunk programs — the next
+        #: aggregation pass needs no re-upload and no second device pass.
+        #: Dropped across a resume (recomputed from the store, same result).
+        carried: Optional[tuple] = None
+
+        for step in range(first_step, config.max_steps + 1):
+            b = store.n_rows
+            if b == 0:
+                break
+            st = StepStats(step=step, size=size, n_frontier=b)
+            st.frontier_bytes = store.raw_bytes
+            if store.kind == "odag":
+                st.odag_bytes = store.stored_bytes
+            timer = Timer()
+
+            # ---- re-materialise the frontier (waves / worker slices) -----
+            blocks = backend.begin_step(store, st)
+            # extraction may resurrect pattern-pruned rows (a superset of
+            # the appended rows; see ODAGStore) — stats count what is
+            # actually mined
+            st.n_frontier = sum(len(blk) for blk in blocks)
+            st.t_storage = timer.lap()
+
+            # ---- pattern aggregation of this step's embeddings (end of
+            # the step that generated them, per Algorithm 1): quick
+            # patterns either carried from the chunk programs that produced
+            # the rows (fused, raw store) or recomputed by the backend ----
+            canon_slot = None
+            agg = None
+            if app.wants_patterns:
+                if carried is not None and len(carried[0]) == st.n_frontier:
+                    codes, lv = carried
+                else:
+                    codes, lv = backend.quick_codes(blocks, size)
+                agg, canon_slot = backend.aggregate(codes, lv, st)
+                result.aggregates.append(agg)
+            carried = None
+            st.t_aggregate = timer.lap()
+
+            # ---- alpha: aggregation filter on the frontier ---------------
+            if agg is not None:
+                alpha = app.aggregation_filter(canon_slot, agg)
+                # beta / outputs: record aggregates of surviving patterns
+                surviving = np.unique(canon_slot[alpha]) if alpha.any() else []
+                for pc in surviving:
+                    code = tuple(int(x) for x in agg.canon_codes[pc])
+                    value = int(
+                        agg.supports[pc] if app.wants_domains else agg.counts[pc]
+                    )
+                    result.patterns[code] = result.patterns.get(code, 0) + value
+                if not alpha.all():
+                    blocks = backend.prune(blocks, alpha)
+            b_live = sum(len(blk) for blk in blocks)
+            if app.collect_embeddings and b_live:
+                live = [blk for blk in blocks if len(blk)]
+                result.embeddings[size] = (
+                    np.asarray(live[0])
+                    if len(live) == 1
+                    else np.concatenate(live, axis=0)
+                )
+
+            # ---- termination ---------------------------------------------
+            if (
+                app.termination_filter(size)
+                or b_live == 0
+                or step == config.max_steps
+            ):
+                result.stats.steps.append(st)
+                break
+
+            # ---- expansion: children appended to the store as produced ---
+            carried = backend.expand(store, blocks, size, st)
+            st.t_expand = timer.lap()
+            store.seal(size + 1)
+            st.n_children = store.n_rows
+            st.t_storage += timer.lap()
+            backend.end_step(store, st)
+            result.stats.steps.append(st)
+
+            # ---- checkpoint at the seal boundary (DESIGN.md §9) ----------
+            if (
+                ckpt is not None
+                and store.n_rows
+                and step % max(config.checkpoint_every, 1) == 0
+            ):
+                st.t_checkpoint = ckpt.save(
+                    step=step + 1,
+                    size=size + 1,
+                    capacity=backend.capacity,
+                    store=store,
+                    result=result,
+                    wall_time=prior_wall + (time.perf_counter() - t_start),
+                )
+
+            if store.n_rows == 0:
+                break
+            size += 1
+
+        result.stats.wall_time = prior_wall + (time.perf_counter() - t_start)
+        backend.finalize(result.stats)
+        return result
+
+
+def resume(
+    graph: Graph | DeviceGraph,
+    app: MiningApp,
+    checkpoint: str,
+    config: Optional[RunConfig] = None,
+    backend: Optional[ExecutionBackend] = None,
+) -> MiningResult:
+    """Convenience wrapper: resume a checkpointed run to completion.
+
+    ``checkpoint`` is a checkpoint file or a directory (the latest one in
+    it wins). ``config``/``backend`` may differ from the interrupted run —
+    notably the worker count (elastic restore) — but the store kind must
+    match the payload and graph/app must fingerprint-match."""
+    return SuperstepRuntime(graph, app, config, backend).resume(checkpoint)

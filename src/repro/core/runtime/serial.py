@@ -1,0 +1,313 @@
+"""Serial execution backend: the single-device fused superstep pipeline.
+
+Wraps the chunk-program dataflow of DESIGN.md §8 behind the
+:class:`~repro.core.runtime.backend.ExecutionBackend` protocol: the sealed
+frontier re-materialises in device-budget waves, each wave is uploaded
+once and sliced into pow2-padded chunks on device, a *pilot* chunk
+calibrates the step's output-capacity bucket, the remaining chunks dispatch
+back-to-back with counts left on device, and the host drains all control
+values in stacked window reads — at most TWO host syncs per superstep
+(``async_chunks=True``). The PR-2 chunk loop (one blocking ``int(count)``
+per chunk) is preserved bit-for-bit as ``async_chunks=False``, the
+benchmark baseline of ``benchmarks/bench_superstep.py``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, pattern as pattern_lib
+from repro.core.runtime import programs
+from repro.core.runtime.backend import ExecutionBackend
+from repro.core.runtime.config import next_pow2
+from repro.core.store import FrontierStore, make_store
+
+#: chunk programs in flight between drains: bounds how many capacity-
+#: padded output buffers are device-resident at once (peak HBM is
+#: O(window * step_cap), not O(step output)) while keeping host syncs at
+#: O(chunks / window) per superstep — 1 + pilot for any step under ~32
+#: chunks.
+_DRAIN_WINDOW = 32
+
+
+class SerialBackend(ExecutionBackend):
+    name = "serial"
+
+    def _make_store(self) -> FrontierStore:
+        config, app = self.config, self.app
+        self._use_pallas = config.resolve_use_pallas()
+        store = make_store(
+            config.store, self.g,
+            mode=app.mode,
+            app_filter=programs.store_app_filter(app, self.g),
+            use_pallas=self._use_pallas,
+            interpret=config.pallas_interpret,
+            device_budget_bytes=config.device_budget_bytes,
+        )
+        # child codes computed in the chunk program are only reusable when
+        # the next superstep re-materialises exactly the appended rows in
+        # order — true for the raw store (also under a spill budget), not
+        # for ODAG extraction (which may resurrect pattern-pruned rows).
+        self.with_patterns = (
+            config.async_chunks and app.wants_patterns and store.kind == "raw"
+        )
+        self._expand_fn = programs.make_expand_fn(
+            app, app.mode,
+            use_pallas=self._use_pallas,
+            fused=config.fused_expand,
+            interpret=config.pallas_interpret,
+            compact_kernel=config.resolve_compact_kernel(),
+            with_patterns=self.with_patterns,
+            with_local_verts=app.wants_domains,
+        )
+        self._cache_before = programs.jit_cache_size(self._expand_fn)
+        self._signatures = set()
+        return store
+
+    # -- superstep hooks ----------------------------------------------------
+    def begin_step(self, store, st) -> List[np.ndarray]:
+        self._waves = list(store.chunks())
+        self._wave_dev: List[Optional[jnp.ndarray]] = [None] * len(self._waves)
+        return self._waves
+
+    def quick_codes(self, blocks, size):
+        codes_parts, lv_parts = [], []
+        for wi, w in enumerate(blocks):
+            self._wave_dev[wi] = jnp.asarray(np.ascontiguousarray(w))
+            qp = programs.quick_patterns(
+                self.g, self.app.mode, self._wave_dev[wi],
+                jnp.full((len(w),), size, dtype=jnp.int32),
+            )
+            codes_parts.append(np.asarray(qp.codes))
+            lv_parts.append(np.asarray(qp.local_verts))
+            if self.config.device_budget_bytes is not None:
+                # SpillStore contract: one budget wave resident at a time —
+                # expansion re-uploads its own wave
+                programs.retire(self._wave_dev[wi])
+                self._wave_dev[wi] = None
+        codes = (
+            np.concatenate(codes_parts)
+            if codes_parts else np.zeros((0, 3), np.int64)
+        )
+        lv = (
+            np.concatenate(lv_parts)
+            if lv_parts
+            else np.zeros((0, pattern_lib.MAX_PATTERN_VERTICES), np.int32)
+        )
+        return codes, lv
+
+    def aggregate(self, codes, lv, st):
+        agg, canon_slot = aggregation.aggregate_rows(
+            self.g.n, codes, lv, self.app.wants_domains
+        )
+        st.n_quick_patterns = agg.n_quick
+        st.n_canonical_patterns = agg.n_canonical
+        st.n_iso_checks = agg.n_iso_checks
+        return agg, canon_slot
+
+    def prune(self, blocks, alpha):
+        # pruned rows invalidate the device-resident waves
+        programs.retire(*[wd for wd in self._wave_dev if wd is not None])
+        blocks = super().prune(blocks, alpha)
+        self._waves = blocks
+        self._wave_dev = [None] * len(blocks)
+        return blocks
+
+    def expand(self, store, blocks, size, st):
+        config = self.config
+        waves = blocks
+        # the device-upload cache is valid only for the exact block list
+        # this backend handed out (begin_step) or pruned — anything else
+        # re-uploads rather than risking stale rows
+        wave_dev = (
+            self._wave_dev
+            if blocks is self._waves
+            else [None] * len(blocks)
+        )
+        carried = None
+        if config.async_chunks:
+            if config.device_budget_bytes is not None and len(waves) > 1:
+                # SpillStore contract (DESIGN.md §7): at most one budget
+                # wave device-resident at a time — pipeline and drain one
+                # wave per pass (syncs O(waves), i.e. O(frontier/budget),
+                # still independent of the chunk count) and retire each
+                # wave's buffers before the next is uploaded.
+                parts = []
+                for wi in range(len(waves)):
+                    sub_dev = [wave_dev[wi]]
+                    c, self.capacity = self._expand_fused(
+                        store, [waves[wi]], sub_dev, size, self.capacity, st
+                    )
+                    programs.retire(sub_dev[0])
+                    wave_dev[wi] = None
+                    if c is not None:
+                        parts.append(c)
+                carried = (
+                    (
+                        np.concatenate([p[0] for p in parts]),
+                        np.concatenate([p[1] for p in parts]),
+                    )
+                    if parts
+                    else None
+                )
+            else:
+                carried, self.capacity = self._expand_fused(
+                    store, waves, wave_dev, size, self.capacity, st
+                )
+        else:
+            self._expand_legacy(store, waves, size, st)
+        # every chunk has been drained — the step's device waves are dead
+        programs.retire(*[wd for wd in wave_dev if wd is not None])
+        return carried
+
+    def finalize(self, stats) -> None:
+        stats.chunk_signatures = sorted(self._signatures)
+        cache_after = programs.jit_cache_size(self._expand_fn)
+        stats.n_compiles = (
+            cache_after - self._cache_before
+            if self._cache_before is not None and cache_after is not None
+            else len(self._signatures)
+        )
+
+    # -- the fused pipeline (DESIGN.md §8) ----------------------------------
+    def _expand_fused(self, store, waves, wave_dev, size, cap, st):
+        """One *pilot* chunk calibrates the step's output-capacity bucket
+        (sync 1 — the PR-2 loop instead discovers capacity growth once per
+        chunk); the remaining chunks dispatch back-to-back with counts left
+        on device and drain in stacked reads of ``_DRAIN_WINDOW`` chunks
+        (one more sync per window, a single one for typical steps).
+        Compaction counts are exact (never clamped to the capacity), so
+        overshot chunks are re-dispatched at their exact pow2 bucket
+        without any further sync. As a window drains, its children fold
+        into the store via device-side prefix slices (only valid rows cross
+        to the host), its pattern codes are collected for the next step's
+        aggregation, and every buffer of the window is retired."""
+        g, expand_fn = self.g, self._expand_fn
+        config, signatures = self.config, self._signatures
+        with_patterns = self.with_patterns
+        chunks = list(
+            programs.iter_chunks(waves, wave_dev, config.chunk_size, size)
+        )
+        st.n_chunks += len(chunks)
+        if not chunks:
+            return None, cap
+
+        # ---- pilot: sync 1 calibrates the capacity bucket for the step --
+        _, _, cb0, bucket0, chunk0, n_valid0 = chunks[0]
+        signatures.add((size, bucket0, cap))
+        out = expand_fn(g, chunk0, n_valid0, out_cap=cap)
+        c0 = int(out[1])
+        st.n_host_syncs += 1
+        if c0 > cap:
+            programs.retire(out[0], out[2], out[3])
+            cap = next_pow2(c0)
+            signatures.add((size, bucket0, cap))
+            out = expand_fn(g, chunk0, n_valid0, out_cap=cap)  # count known exact
+        # scale the pilot count to a full bucket for the remaining chunks; a
+        # chunk that still overshoots is re-dispatched individually below
+        est = -((-c0 * bucket0) // max(cb0, 1))        # ceil(c0 * bucket0 / cb0)
+        step_cap = max(next_pow2(max(est, 1)), 64)
+
+        codes_parts, lv_parts = [], []
+
+        def drain(pending):
+            """One stacked control sync for a window of dispatched chunks,
+            exact-cap overflow retries, then fold + retire."""
+            meta = np.asarray(
+                jnp.stack([s for p in pending for s in (p[9], p[10], p[11])])
+            ).reshape(-1, 3)
+            st.n_host_syncs += 1
+            counts = meta[:, 0]
+            st.n_generated += int(meta[:, 1].sum())
+            st.n_canonical += int(meta[:, 2].sum())
+            for i, p in enumerate(pending):
+                if counts[i] <= p[12]:
+                    continue
+                programs.retire(p[6], p[7], p[8])   # oversubscribed outputs
+                retry_cap = next_pow2(int(counts[i]))
+                signatures.add((size, p[3], retry_cap))
+                children, _, codes, lv, _, _ = expand_fn(
+                    g, p[4], p[5], out_cap=retry_cap
+                )
+                p[6], p[7], p[8] = children, codes, lv
+            for i, p in enumerate(pending):
+                cnt = int(counts[i])
+                programs.retire(p[4], p[5])         # chunk inputs are dead now
+                if cnt:
+                    # device-side prefix slices: the padding never crosses
+                    # to the host (same contract as store.resolve_rows)
+                    store.append(np.asarray(p[6][:cnt], dtype=np.int32))
+                    if with_patterns:
+                        codes_parts.append(np.asarray(p[7][:cnt]))
+                        lv_parts.append(np.asarray(p[8][:cnt]))
+                programs.retire(p[6], p[7], p[8])
+
+        # [wi, lo, cb, bucket, chunk, n_valid, children, codes, lv,
+        #  count, ngen, ncanon, used_cap]
+        pending = [list(chunks[0]) + [out[0], out[2], out[3],
+                                      out[1], out[4], out[5], cap]]
+        for ch in chunks[1:]:
+            _, _, _, bucket_i, chunk_i, n_valid_i = ch
+            signatures.add((size, bucket_i, step_cap))
+            children, count, codes, lv, ngen, ncanon = expand_fn(
+                g, chunk_i, n_valid_i, out_cap=step_cap
+            )
+            pending.append(
+                list(ch) + [children, codes, lv, count, ngen, ncanon, step_cap]
+            )
+            if len(pending) >= _DRAIN_WINDOW:
+                drain(pending)
+                pending = []
+        if pending:
+            drain(pending)
+        cap = max(cap, step_cap)
+
+        carried = None
+        if with_patterns and codes_parts:
+            carried = (np.concatenate(codes_parts), np.concatenate(lv_parts))
+        return carried, cap
+
+    # -- the PR-2 chunk loop, preserved as the measured baseline -----------
+    def _expand_legacy(self, store, waves, size, st):
+        """The PR-2 chunk loop, preserved bit-for-bit
+        (``benchmarks/bench_superstep.py``): every chunk is sliced and
+        padded on the host and re-uploaded (even when aggregation already
+        uploaded the wave — the double upload the fused pipeline removes),
+        one blocking ``int(count)`` host sync per chunk plus one per
+        capacity retry, the capacity bucket reset every superstep, children
+        forced through ``np.asarray`` per chunk."""
+        g, expand_fn, config = self.g, self._expand_fn, self.config
+        cap = max(config.initial_capacity, 1)
+        for w in waves:
+            for lo in range(0, len(w), config.chunk_size):
+                chunk = np.asarray(w[lo : lo + config.chunk_size])
+                cb = int(chunk.shape[0])
+                bucket = min(config.chunk_size, next_pow2(max(cb, 1)))
+                pad = bucket - cb
+                if pad:
+                    chunk = np.concatenate(
+                        [chunk, np.full((pad, size), -1, np.int32)], axis=0
+                    )
+                n_valid = jnp.concatenate(
+                    [jnp.full((cb,), size, jnp.int32),
+                     jnp.zeros((pad,), jnp.int32)]
+                )
+                chunk = jnp.asarray(chunk)
+                st.n_chunks += 1
+                while True:
+                    self._signatures.add((size, bucket, cap))
+                    children, count, _, _, ngen, ncanon = expand_fn(
+                        g, chunk, n_valid, out_cap=cap
+                    )
+                    count = int(count)
+                    st.n_host_syncs += 1
+                    if count <= cap:
+                        break
+                    programs.retire(children)
+                    cap = next_pow2(count)
+                st.n_generated += int(ngen)
+                st.n_canonical += int(ncanon)
+                if count:
+                    store.append(np.asarray(children[:count]))

@@ -1,0 +1,344 @@
+"""Shard-map execution backend: the mesh superstep (paper §5.1/§5.3 on JAX).
+
+The Giraph BSP superstep becomes one jitted ``shard_map`` program per
+exploration step, behind the same
+:class:`~repro.core.runtime.backend.ExecutionBackend` protocol as the
+serial pipeline:
+
+  * expansion + canonicality is *coordination-free* (paper §5.1): each
+    worker expands its frontier slice with zero communication — the worker
+    body is the SAME fused chunk program the serial backend jits
+    (``explore.fused_chunk_step``, DESIGN.md §8), children land in the
+    store as capacity-padded device arrays, and the host takes ONE control
+    sync per superstep on the exact (unclamped) child counts;
+  * pattern aggregation is ONE collective: per-pattern counts and FSM
+    domain bitmaps are ``psum``/OR-allreduced (two-level aggregation:
+    bytes scale with #patterns, never #embeddings — Table 4 as
+    collective-bytes);
+  * the frontier between supersteps is owned by the shared store
+    subsystem: ``store="raw"`` re-balances broadcast-then-partition
+    (paper §5.3, even block slicing); ``store="odag"`` folds each worker's
+    children into a fixed-shape DenseODAG, merges the worker bitmaps with
+    a bitwise OR — host-side in this single-process runtime, bit-for-bit
+    the §5.2 "merge and broadcast" OR-allreduce of a multi-host mesh —
+    and re-materialises every worker's slice via cost-annotated
+    partitioning (§5.3). Exchange bytes ride ``StepStats.collective_bytes``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import aggregation, explore, pattern as pattern_lib
+from repro.core.api import MiningApp
+from repro.core.runtime import programs
+from repro.core.runtime.backend import ExecutionBackend
+from repro.core.runtime.config import next_pow2
+from repro.core.store import FrontierStore, make_store
+
+try:  # jax >= 0.6 exports shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # jax 0.4/0.5: experimental namespace
+    from jax.experimental.shard_map import shard_map
+
+
+def shard_map_pallas_ok(f, mesh, in_specs, out_specs):
+    """shard_map with the replication check disabled: pallas_call has no
+    replication rule, so worker bodies that may contain a kernel need
+    check_rep=False (renamed check_vma in newer jax)."""
+    try:
+        return shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+    except TypeError:
+        return shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+
+
+def mesh_axis_size(mesh: Mesh, axes) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def pad_parts(parts, k: int):
+    """Pad variable-length per-worker row blocks to one dense
+    ``(W, per, k)`` int32 array (pad value -1) + per-worker counts — THE
+    shard-padding convention, shared by the even block split below and the
+    store-provided (cost-balanced) parts in the shard-map backend."""
+    n = len(parts)
+    per = max(max((len(p) for p in parts), default=0), 1)
+    padded = np.full((n, per, k), -1, dtype=np.int32)
+    counts = np.zeros(n, dtype=np.int32)
+    for s, p in enumerate(parts):
+        padded[s, : len(p)] = p
+        counts[s] = len(p)
+    return padded, counts
+
+
+def partition_frontier(frontier: np.ndarray, n_shards: int):
+    """Broadcast-then-partition (paper §5.3): even block split, padded."""
+    b, k = frontier.shape
+    per = -(-b // n_shards) if b else 1
+    return pad_parts(
+        [frontier[s * per : (s + 1) * per] for s in range(n_shards)], k
+    )
+
+
+def make_sharded_expand(app: MiningApp, mesh: Mesh, axes=("data",),
+                        use_pallas: bool = False, interpret=None,
+                        compact_kernel: bool = False,
+                        with_patterns: bool = False):
+    """One BSP superstep: coordination-free expand over the mesh.
+
+    The worker body is the SAME fused chunk program the serial backend jits
+    (``explore.fused_chunk_step``, DESIGN.md §8): expansion + canonicality
+    + app filter + stream compaction, and — with ``with_patterns`` — the
+    children's quick-pattern codes in the same device pass, so the next
+    superstep's aggregation needs no second upload of the frontier.
+    """
+
+    mode = app.mode
+    spec_in = P(axes)
+
+    @functools.partial(jax.jit, static_argnames=("out_cap",))
+    def step(g, members, n_valid, out_cap: int):
+        def worker(g, members, n_valid):
+            m = members[0]          # shard_map adds the leading shard dim
+            nv = n_valid[0]
+            children, count, codes, lv, ngen, ncanon = explore.fused_chunk_step(
+                g, m, nv, out_cap,
+                mode=mode,
+                app=app,
+                with_patterns=with_patterns,
+                use_pallas=use_pallas,
+                compact_kernel=compact_kernel,
+                interpret=interpret,
+            )
+            outs = (children[None], count[None], ngen[None], ncanon[None])
+            if with_patterns:
+                outs += (codes[None], lv[None])
+            return outs
+
+        mapper = (
+            shard_map_pallas_ok if (use_pallas or compact_kernel) else shard_map
+        )
+        n_out = 6 if with_patterns else 4
+        return mapper(
+            functools.partial(worker, g),
+            mesh=mesh,
+            in_specs=(spec_in, spec_in),
+            out_specs=(spec_in,) * n_out,
+        )(members, n_valid)
+
+    return step
+
+
+def make_sharded_aggregate(mesh: Mesh, axes=("data",)):
+    """Two-level aggregation's global reduce as ONE collective: counts psum +
+    domain-bitmap OR(max)-allreduce over the mesh axes."""
+
+    spec = P(axes)
+
+    @functools.partial(jax.jit, static_argnames=("n_canon", "n_vertices"))
+    def agg(canon_slot, verts_canon, valid, n_canon: int, n_vertices: int):
+        def worker(canon_slot, verts_canon, valid):
+            slot = canon_slot[0]
+            counts = jax.ops.segment_sum(
+                valid[0].astype(jnp.int64),
+                jnp.where(valid[0], slot, n_canon),
+                n_canon + 1,
+            )[:n_canon]
+            bitmaps = aggregation.domain_bitmaps(
+                slot, verts_canon[0], valid[0], n_canon, n_vertices
+            )
+            # THE collective: bytes ∝ #patterns, not #embeddings (Table 4)
+            counts = jax.lax.psum(counts, axes)
+            bitmaps = jax.lax.pmax(bitmaps.astype(jnp.int32), axes) > 0
+            return counts[None], bitmaps[None]
+
+        counts, bitmaps = shard_map(
+            worker,
+            mesh=mesh,
+            in_specs=(spec, spec, spec),
+            out_specs=(spec, spec),
+        )(canon_slot, verts_canon, valid)
+        return counts[0], bitmaps[0]
+
+    return agg
+
+
+class ShardMapBackend(ExecutionBackend):
+    name = "shard_map"
+
+    def __init__(self, mesh: Mesh, axes=None) -> None:
+        self.mesh = mesh
+        self._axes_override = axes
+
+    def _make_store(self) -> FrontierStore:
+        config, app = self.config, self.app
+        self.axes = (
+            self._axes_override if self._axes_override is not None
+            else config.axes
+        )
+        self.n_shards = mesh_axis_size(self.mesh, self.axes)
+        resolved_pallas = config.resolve_use_pallas()
+        store = make_store(
+            config.store, self.g,
+            mode=app.mode,
+            app_filter=programs.store_app_filter(app, self.g),
+            use_pallas=resolved_pallas,
+            interpret=config.pallas_interpret,
+            dense_exchange=True,
+        )
+        # carried child codes need the next frontier to be exactly the
+        # appended rows in order — raw store only (ODAG extraction
+        # resurrects rows), and the naive-aggregation baseline deliberately
+        # re-derives everything.
+        self.with_patterns = (
+            config.async_chunks
+            and app.wants_patterns
+            and store.kind == "raw"
+            and not config.naive_aggregation
+        )
+        self._expand = make_sharded_expand(
+            app, self.mesh, self.axes,
+            use_pallas=resolved_pallas,
+            interpret=config.pallas_interpret,
+            compact_kernel=config.resolve_compact_kernel(),
+            with_patterns=self.with_patterns,
+        )
+        self._aggregate = make_sharded_aggregate(self.mesh, self.axes)
+        return store
+
+    # -- superstep hooks ----------------------------------------------------
+    def begin_step(self, store, st) -> List[np.ndarray]:
+        # raw: deterministic block split (broadcast-then-partition); odag:
+        # §5.3 cost-annotated partitions, one extraction per worker.
+        return store.worker_parts(self.n_shards)
+
+    def quick_codes(self, blocks, size):
+        frontier = (
+            np.concatenate(blocks, axis=0)
+            if any(len(p) for p in blocks)
+            else np.zeros((0, size), np.int32)
+        )
+        b = len(frontier)
+        qp = programs.quick_patterns(
+            self.g, self.app.mode, jnp.asarray(frontier),
+            jnp.full((b,), size, dtype=jnp.int32),
+        )
+        return np.asarray(qp.codes), np.asarray(qp.local_verts)
+
+    def aggregate(self, codes, lv, st):
+        g, app, config = self.g, self.app, self.config
+        n_shards = self.n_shards
+        b = len(codes)
+        if config.naive_aggregation:
+            # naive scheme: exchange per-EMBEDDING codes (an all-gather of
+            # B x 24 bytes x workers) and run pattern canonicalisation once
+            # per embedding instead of once per quick pattern.
+            st.collective_bytes += int(codes.size * 8) * n_shards
+            for row in codes:
+                pattern_lib.canonicalize_one(row)           # B iso checks
+        uniq, inv = aggregation.quick_slot_ids(codes, np.ones(b, bool))
+        table = pattern_lib.build_pattern_table(
+            uniq, with_orbits=app.wants_domains
+        )
+        pc = len(table.canon_codes)
+        canon_slot, verts_canon = aggregation.map_to_canonical_positions(
+            table, inv, lv
+        )
+        # shard the level-1 inputs, reduce with the collective
+        slot_sh, slot_counts = partition_frontier(canon_slot[:, None], n_shards)
+        vc_sh, _ = partition_frontier(np.asarray(verts_canon), n_shards)
+        per = slot_sh.shape[1]
+        valid_sh = np.arange(per)[None, :] < slot_counts[:, None]
+        counts, bitmaps = self._aggregate(
+            jnp.asarray(slot_sh[:, :, 0]),
+            jnp.asarray(vc_sh.reshape(n_shards, per, -1)),
+            jnp.asarray(valid_sh),
+            n_canon=max(pc, 1),
+            n_vertices=g.n,
+        )
+        counts = np.asarray(counts[:pc])
+        if app.wants_domains:
+            supports = aggregation.min_image_support(
+                bitmaps[:pc], table.canon_n_verts, table.canon_orbits
+            )
+        else:
+            supports = counts.copy()
+        agg_out = aggregation.StepAggregates(
+            canon_codes=table.canon_codes,
+            counts=counts.astype(np.int64),
+            supports=np.asarray(supports).astype(np.int64),
+            n_quick=len(uniq),
+            n_canonical=pc,
+            n_iso_checks=table.n_iso_checks,
+        )
+        st.n_quick_patterns = agg_out.n_quick
+        st.n_canonical_patterns = agg_out.n_canonical
+        st.n_iso_checks = b if config.naive_aggregation else agg_out.n_iso_checks
+        st.collective_bytes += counts.nbytes + (
+            int(np.asarray(bitmaps[:pc]).size) // 8 if app.wants_domains else 0
+        )
+        return agg_out, canon_slot
+
+    def expand(self, store, blocks, size, st):
+        # coordination-free sharded expansion over the (§5.3 cost-balanced)
+        # per-worker slices
+        g, n_shards = self.g, self.n_shards
+        shards, counts_sh = pad_parts(blocks, size)
+        per = shards.shape[1]
+        n_valid = (np.arange(per)[None, :] < counts_sh[:, None]) * size
+        members_dev = jnp.asarray(shards)
+        n_valid_dev = jnp.asarray(n_valid.astype(np.int32))
+        while True:
+            outs = self._expand(g, members_dev, n_valid_dev,
+                                out_cap=self.capacity)
+            children, ccount = outs[0], outs[1]
+            ccount = np.asarray(ccount)     # THE per-step control sync
+            st.n_host_syncs += 1
+            st.n_chunks += 1
+            if int(ccount.max()) <= self.capacity:
+                break
+            # counts are exact (unclamped compaction), so exactly one
+            # re-dispatch at the next pow2 bucket suffices
+            programs.retire(*outs)
+            self.capacity = next_pow2(int(ccount.max()))
+        st.n_generated = int(np.asarray(outs[2]).sum())
+        st.n_canonical = int(np.asarray(outs[3]).sum())
+
+        # frontier exchange: worker-local children into the store as device
+        # arrays (resolved at seal; odag: DenseODAG OR-allreduce, §5.2);
+        # with the fused pipeline the children's pattern codes are carried
+        # to the next superstep's aggregation
+        for s in range(n_shards):
+            store.append(children[s], worker=s, count=int(ccount[s]))
+        if not self.with_patterns:
+            return None
+        codes_all = np.asarray(outs[4])
+        lv_all = np.asarray(outs[5])
+        return (
+            np.concatenate(
+                [codes_all[s, : ccount[s]] for s in range(n_shards)]
+            ),
+            np.concatenate(
+                [lv_all[s, : ccount[s]] for s in range(n_shards)]
+            ),
+        )
+
+    def end_step(self, store, st) -> None:
+        # frontier exchange: what a worker ships (raw rows, or the merged
+        # ODAG with store="odag") rides the same collective accounting as
+        # the aggregation reduce
+        st.collective_bytes += store.exchange_bytes

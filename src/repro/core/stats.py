@@ -29,6 +29,10 @@ class StepStats:
     t_expand: float = 0.0            # G+C phases of Fig 12
     t_aggregate: float = 0.0         # P phase
     t_storage: float = 0.0           # W+R phases (ODAG build/extract)
+    #: seconds writing this step's superstep checkpoint (DESIGN.md §9);
+    #: 0.0 when checkpointing is off or the cadence skipped the step.
+    #: ``bench_checkpoint.py`` gates the sum at ≤5% of superstep wall time.
+    t_checkpoint: float = 0.0
 
     @property
     def compression(self) -> float:

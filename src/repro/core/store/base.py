@@ -136,6 +136,30 @@ class FrontierStore(abc.ABC):
         per = -(-b // n_workers) if b else 0
         return [rows[w * per : (w + 1) * per] for w in range(n_workers)]
 
+    # -- checkpointing (DESIGN.md §9) --------------------------------------
+    @abc.abstractmethod
+    def state_dict(self) -> dict:
+        """The sealed frontier as a serialisable payload:
+        ``{"kind": str, "meta": {json-able scalars}, "arrays": {name:
+        ndarray}}``. Sealed stores are the ONLY inter-superstep state, so
+        this (plus the superstep cursor) IS the mining checkpoint
+        (``repro.core.runtime.checkpoint``)."""
+
+    @abc.abstractmethod
+    def from_state_dict(self, sd: dict) -> None:
+        """Restore a sealed frontier from :meth:`state_dict` output onto a
+        freshly constructed store (construction args — graph, filters,
+        budgets — come from the resuming run's config, which is what makes
+        restore elastic). Raises ``ValueError`` on a payload of a
+        different store kind."""
+
+    def _check_kind(self, sd: dict) -> None:
+        if sd.get("kind") != self.kind:
+            raise ValueError(
+                f"checkpoint store payload is {sd.get('kind')!r}, this run "
+                f"is configured for a {self.kind!r} store"
+            )
+
 
 class RawStore(FrontierStore):
     """Dense embedding-list store: the pre-subsystem engine behaviour.
@@ -185,6 +209,19 @@ class RawStore(FrontierStore):
 
     def materialize(self) -> np.ndarray:
         return self._frontier
+
+    def state_dict(self) -> dict:
+        return {
+            "kind": "raw",
+            "meta": {"size": int(self.size)},
+            "arrays": {"frontier": self._frontier},
+        }
+
+    def from_state_dict(self, sd: dict) -> None:
+        self._check_kind(sd)
+        rows = np.asarray(sd["arrays"]["frontier"], dtype=np.int32)
+        self._frontier = rows.reshape(len(rows), int(sd["meta"]["size"]))
+        self._staged = []
 
 
 def make_store(

@@ -172,6 +172,58 @@ class ODAGStore(FrontierStore):
             for lo in range(0, len(rows), max_rows):
                 yield rows[lo : lo + max_rows]
 
+    def state_dict(self) -> dict:
+        """Checkpoint payload (DESIGN.md §9): the per-level domains and
+        connectivity bitmaps of the sealed ragged ODAG — the compressed
+        form IS what gets persisted, so a checkpoint costs ``stored_bytes``
+        (not ``raw_bytes``) on disk too."""
+        arrays = {}
+        levels = 0
+        if self._odag is not None:
+            levels = self._odag.k
+            for i, d in enumerate(self._odag.domains):
+                arrays[f"domain{i}"] = d
+            for i, c in enumerate(self._odag.conn):
+                arrays[f"conn{i}"] = np.packbits(c, axis=1)
+        return {
+            "kind": "odag",
+            "meta": {
+                "size": int(self._size),
+                "n_rows": int(self._n_rows),
+                "exchange_bytes": int(self._exchange_bytes),
+                "levels": levels,
+                "conn_widths": (
+                    [int(c.shape[1]) for c in self._odag.conn]
+                    if self._odag is not None
+                    else []
+                ),
+            },
+            "arrays": arrays,
+        }
+
+    def from_state_dict(self, sd: dict) -> None:
+        self._check_kind(sd)
+        meta = sd["meta"]
+        self._size = int(meta["size"])
+        self._n_rows = int(meta["n_rows"])
+        self._exchange_bytes = int(meta["exchange_bytes"])
+        self._staged = {}
+        levels = int(meta["levels"])
+        if not levels:
+            self._odag = None
+            return
+        domains = [
+            np.asarray(sd["arrays"][f"domain{i}"], dtype=np.int32)
+            for i in range(levels)
+        ]
+        conn = [
+            np.unpackbits(
+                np.asarray(sd["arrays"][f"conn{i}"], dtype=np.uint8), axis=1
+            )[:, : int(meta["conn_widths"][i])].astype(bool)
+            for i in range(levels - 1)
+        ]
+        self._odag = odag_lib.ODAG(k=levels, domains=domains, conn=conn)
+
     def worker_parts(self, n_workers: int) -> List[np.ndarray]:
         """Cost-balanced per-worker slices (§5.3 as a real execution path)."""
         if self._odag is None:

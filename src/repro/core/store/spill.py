@@ -70,6 +70,15 @@ class SpillStore(FrontierStore):
     def worker_parts(self, n_workers: int) -> List[np.ndarray]:
         return self._inner.worker_parts(n_workers)
 
+    def state_dict(self) -> dict:
+        # the budget is config, not state: a spill-wrapped checkpoint is
+        # byte-identical to the inner store's, so a run may resume with a
+        # different (or no) device budget — elastic in the memory dimension
+        return self._inner.state_dict()
+
+    def from_state_dict(self, sd: dict) -> None:
+        self._inner.from_state_dict(sd)
+
     # -- the point of the wrapper -----------------------------------------
     def chunks(self, max_rows: Optional[int] = None) -> Iterator[np.ndarray]:
         budget = self.budget_rows()

@@ -1,0 +1,362 @@
+"""Superstep-granular checkpoint/resume tests (DESIGN.md §9).
+
+The acceptance contract: a run checkpointed at superstep k and resumed
+reproduces the uninterrupted run's ``patterns`` dicts and embedding *sets*
+(not row order — ODAG resurrection reorders) for motifs / cliques / FSM
+across raw / ODAG / spill stores on both execution backends, including
+resuming under a *different* worker count (elastic restore). Plus store
+``state_dict`` round-trips, fingerprint guards, cadence, and atomicity
+details. Graphs stay ~40 vertices (engine runs are seconds each)."""
+import glob
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig,
+    RunConfig,
+    SuperstepRuntime,
+    graph as G,
+    resume,
+    run,
+    to_device,
+)
+from repro.core.apps import CliquesApp, FSMApp, MotifsApp
+from repro.core.distributed import DistConfig, run_distributed
+from repro.core.runtime import (
+    SerialBackend,
+    ShardMapBackend,
+    latest_checkpoint,
+)
+from repro.core.runtime import checkpoint as ckpt_lib
+from repro.core.store import ODAGStore, RawStore, SpillStore
+
+
+def _emb_sets(res):
+    return {k: set(map(tuple, v.tolist())) for k, v in res.embeddings.items()}
+
+
+def _assert_same(base, other):
+    assert base.patterns == other.patterns
+    assert _emb_sets(base) == _emb_sets(other)
+
+
+def _ckpts(td):
+    return sorted(glob.glob(os.path.join(td, "ckpt-step*.npz")))
+
+
+# ---------------------------------------------------------------------------
+# store state_dict round-trips
+# ---------------------------------------------------------------------------
+
+def test_raw_store_state_roundtrip():
+    s = RawStore()
+    rows = np.arange(12, dtype=np.int32).reshape(4, 3)
+    s.append(rows)
+    s.seal(3)
+    sd = s.state_dict()
+    t = RawStore()
+    t.from_state_dict(sd)
+    assert t.n_rows == 4 and t.size == 3
+    np.testing.assert_array_equal(t.materialize(), rows)
+    # empty frontier keeps its width through the round trip
+    s.seal(4)
+    t2 = RawStore()
+    t2.from_state_dict(s.state_dict())
+    assert t2.n_rows == 0 and t2.size == 4
+
+
+def test_odag_store_state_roundtrip():
+    g = to_device(G.random_labeled(40, 90, n_labels=1, seed=2))
+    res = run(
+        G.random_labeled(40, 90, n_labels=1, seed=2),
+        MotifsApp(max_size=3, collect_embeddings=True),
+        EngineConfig(),
+    )
+    emb = res.embeddings[3]
+    s = ODAGStore(g)
+    s.append(emb)
+    s.seal(3)
+    sd = s.state_dict()
+    t = ODAGStore(g)
+    t.from_state_dict(sd)
+    assert t.n_rows == s.n_rows and t.size == 3
+    assert t.stored_bytes == s.stored_bytes
+    assert (
+        set(map(tuple, t.materialize().tolist()))
+        == set(map(tuple, s.materialize().tolist()))
+    )
+
+
+def test_spill_store_state_delegates_to_inner():
+    """A spill-wrapped checkpoint is byte-identical to the inner store's:
+    runs may resume with a different (or no) device budget."""
+    inner = RawStore()
+    inner.append(np.arange(20, dtype=np.int32).reshape(10, 2))
+    inner.seal(2)
+    s = SpillStore(inner, device_budget_bytes=3 * 2 * 4)
+    sd = s.state_dict()
+    assert sd["kind"] == "raw"
+    plain = RawStore()
+    plain.from_state_dict(sd)
+    np.testing.assert_array_equal(plain.materialize(), inner.materialize())
+
+
+def test_store_kind_mismatch_raises():
+    s = RawStore()
+    s.append(np.zeros((2, 2), np.int32))
+    s.seal(2)
+    g = to_device(G.triangle_plus_tail())
+    with pytest.raises(ValueError, match="store"):
+        ODAGStore(g).from_state_dict(s.state_dict())
+
+
+# ---------------------------------------------------------------------------
+# acceptance: resume == uninterrupted, all apps x all stores x both backends
+# ---------------------------------------------------------------------------
+
+APPS = [
+    ("motifs", lambda: MotifsApp(max_size=3, collect_embeddings=True)),
+    ("cliques", lambda: CliquesApp(max_size=4, collect_embeddings=True)),
+    ("fsm", lambda: FSMApp(support=3, max_size=3, collect_embeddings=True)),
+]
+STORES = [
+    ("raw", dict(store="raw")),
+    ("odag", dict(store="odag")),
+    ("spill", dict(store="raw", device_budget_bytes=2048)),
+]
+SMALL = dict(chunk_size=64, initial_capacity=64)
+
+
+@pytest.mark.parametrize("sname,skw", STORES, ids=[s[0] for s in STORES])
+@pytest.mark.parametrize("aname,mk", APPS, ids=[a[0] for a in APPS])
+def test_serial_resume_equals_uninterrupted(aname, mk, sname, skw, tmp_path):
+    g = G.random_labeled(40, 90, n_labels=3, seed=3)
+    ref = run(
+        g, mk(), EngineConfig(**SMALL, **skw, checkpoint_dir=str(tmp_path))
+    )
+    files = _ckpts(str(tmp_path))
+    assert files, "run wrote no checkpoints"
+    # resume from the EARLIEST cut: replays the longest tail
+    resumed = resume(g, mk(), files[0], EngineConfig(**SMALL, **skw))
+    _assert_same(ref, resumed)
+    # and from the latest (directory resolution)
+    resumed2 = resume(g, mk(), str(tmp_path), EngineConfig(**SMALL, **skw))
+    _assert_same(ref, resumed2)
+
+
+@pytest.mark.parametrize("sname,skw", STORES, ids=[s[0] for s in STORES])
+@pytest.mark.parametrize(
+    "aname,mk",
+    [APPS[0], APPS[2]],  # motifs (counts) + fsm (domains/alpha), edge cases
+    ids=["motifs", "fsm"],
+)
+def test_shard_resume_equals_uninterrupted(aname, mk, sname, skw, tmp_path):
+    mesh = jax.make_mesh((1,), ("data",))
+    g = G.random_labeled(40, 90, n_labels=3, seed=3)
+    ref = run(g, mk(), EngineConfig())
+    interrupted = run_distributed(
+        g, mk(), mesh, DistConfig(store=skw["store"],
+                                  checkpoint_dir=str(tmp_path))
+    )
+    _assert_same(ref, interrupted)
+    files = _ckpts(str(tmp_path))
+    assert files
+    resumed = resume(
+        g, mk(), files[0], DistConfig(store=skw["store"]),
+        ShardMapBackend(mesh),
+    )
+    _assert_same(ref, resumed)
+
+
+def test_cross_backend_elastic_resume(tmp_path):
+    """A checkpoint is backend-free: serial cut -> shard-map resume and
+    shard-map cut -> serial resume both reproduce the uninterrupted run."""
+    mesh = jax.make_mesh((1,), ("data",))
+    g = G.random_labeled(40, 90, n_labels=3, seed=7)
+    mk = lambda: MotifsApp(max_size=4, collect_embeddings=True)
+    ref = run(g, mk(), EngineConfig())
+
+    ser_dir = tmp_path / "ser"
+    run(g, mk(), EngineConfig(checkpoint_dir=str(ser_dir)))
+    resumed = resume(
+        g, mk(), _ckpts(str(ser_dir))[0], DistConfig(), ShardMapBackend(mesh)
+    )
+    _assert_same(ref, resumed)
+
+    dist_dir = tmp_path / "dist"
+    run_distributed(
+        g, mk(), mesh, DistConfig(store="odag", checkpoint_dir=str(dist_dir))
+    )
+    resumed = resume(
+        g, mk(), _ckpts(str(dist_dir))[0], EngineConfig(store="odag")
+    )
+    _assert_same(ref, resumed)
+
+
+def test_elastic_worker_parts_from_checkpoint(tmp_path):
+    """The store payload is worker-count-free: restoring one checkpoint and
+    re-partitioning for W-1, W, W+1 workers covers the identical row set
+    (what makes a different-mesh resume elastic by construction)."""
+    g = G.random_labeled(40, 90, n_labels=3, seed=9)
+    dg = to_device(g)
+    run(
+        g, MotifsApp(max_size=4),
+        EngineConfig(store="odag", checkpoint_dir=str(tmp_path)),
+    )
+    state = ckpt_lib.load(_ckpts(str(tmp_path))[-1])
+    rows = None
+    for w in (1, 2, 3):
+        store = ODAGStore(dg)
+        store.from_state_dict(state.store_state)
+        parts = store.worker_parts(w)
+        assert len(parts) == w
+        got = set(map(tuple, np.concatenate(parts, axis=0).tolist()))
+        if rows is None:
+            rows = got
+        assert got == rows
+    assert rows
+
+
+# ---------------------------------------------------------------------------
+# cadence, fingerprints, file handling
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_every_cadence(tmp_path):
+    g = G.random_labeled(40, 120, n_labels=2, seed=11)
+    run(
+        g, MotifsApp(max_size=4),
+        EngineConfig(checkpoint_dir=str(tmp_path), checkpoint_every=2),
+    )
+    steps = [
+        int(os.path.basename(f)[len("ckpt-step"):-len(".npz")])
+        for f in _ckpts(str(tmp_path))
+    ]
+    assert steps, "no checkpoints written"
+    # cursor step k+1 is written after completing superstep k; cadence 2
+    # keeps even completed steps only
+    assert all((s - 1) % 2 == 0 for s in steps)
+
+
+def test_latest_checkpoint_resolution(tmp_path):
+    assert latest_checkpoint(str(tmp_path)) is None
+    assert latest_checkpoint(str(tmp_path / "missing")) is None
+    for step in (2, 10, 3):
+        open(tmp_path / f"ckpt-step{step:04d}.npz", "wb").close()
+    (tmp_path / "not-a-checkpoint.npz").touch()
+    got = latest_checkpoint(str(tmp_path))
+    assert os.path.basename(got) == "ckpt-step0010.npz"
+
+
+def test_fingerprint_guards(tmp_path):
+    g = G.random_labeled(40, 90, n_labels=2, seed=13)
+    run(g, MotifsApp(max_size=4), EngineConfig(checkpoint_dir=str(tmp_path)))
+    path = _ckpts(str(tmp_path))[0]
+    with pytest.raises(ValueError, match="different app"):
+        resume(g, MotifsApp(max_size=3), path)
+    with pytest.raises(ValueError, match="different graph"):
+        resume(G.random_labeled(40, 90, n_labels=2, seed=14),
+               MotifsApp(max_size=4), path)
+    with pytest.raises(FileNotFoundError):
+        resume(g, MotifsApp(max_size=4), str(tmp_path / "empty"))
+
+
+def test_checkpoint_is_single_atomic_file(tmp_path):
+    g = G.random_labeled(40, 90, n_labels=2, seed=15)
+    res = run(
+        g, MotifsApp(max_size=3),
+        EngineConfig(checkpoint_dir=str(tmp_path)),
+    )
+    files = os.listdir(tmp_path)
+    assert all(f.startswith("ckpt-step") and f.endswith(".npz") for f in files)
+    assert not any(".tmp-" in f for f in files), "torn staging file left"
+    # checkpoint cost is observable per step
+    assert any(s.t_checkpoint > 0 for s in res.stats.steps)
+    assert all(s.t_checkpoint == 0 for s in res.stats.steps[-1:])
+
+
+def test_resume_preserves_stats_history(tmp_path):
+    g = G.random_labeled(40, 90, n_labels=2, seed=17)
+    ref = run(g, MotifsApp(max_size=4),
+              EngineConfig(checkpoint_dir=str(tmp_path)))
+    resumed = resume(g, MotifsApp(max_size=4), _ckpts(str(tmp_path))[0])
+    assert [s.step for s in resumed.stats.steps] == [
+        s.step for s in ref.stats.steps
+    ]
+    assert resumed.stats.total_embeddings == ref.stats.total_embeddings
+    assert len(resumed.aggregates) == len(ref.aggregates)
+    np.testing.assert_array_equal(
+        resumed.aggregates[-1].counts, ref.aggregates[-1].counts
+    )
+
+
+# ---------------------------------------------------------------------------
+# elastic restore on a real multi-device mesh (subprocess, @slow)
+# ---------------------------------------------------------------------------
+
+ELASTIC_SCRIPT = textwrap.dedent(
+    """
+    import glob, json, os, tempfile
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import EngineConfig, graph as G, resume, run
+    from repro.core.apps import FSMApp, MotifsApp
+    from repro.core.distributed import DistConfig, run_distributed
+    from repro.core.runtime import ShardMapBackend
+
+    assert len(jax.devices()) == 8
+    def mesh_of(w):
+        return Mesh(np.array(jax.devices()[:w]), ("data",))
+
+    g = G.random_labeled(60, 150, n_labels=3, seed=3)
+    out = {}
+    for name, mk in [
+        ("motifs", lambda: MotifsApp(max_size=4)),
+        ("fsm", lambda: FSMApp(support=3, max_size=3)),
+    ]:
+        ref = run(g, mk(), EngineConfig())
+        with tempfile.TemporaryDirectory() as td:
+            # checkpoint under W=2 workers...
+            run_distributed(
+                g, mk(), mesh_of(2),
+                DistConfig(store="odag", checkpoint_dir=td),
+            )
+            first = sorted(glob.glob(os.path.join(td, "ckpt-step*.npz")))[0]
+            # ...resume under W-1=1 and W+1=3 workers (elastic restore)
+            matches = {}
+            for w in (1, 3):
+                res = resume(
+                    g, mk(), first, DistConfig(store="odag"),
+                    ShardMapBackend(mesh_of(w)),
+                )
+                matches[w] = res.patterns == ref.patterns
+        out[name] = matches
+    print("RESULT" + json.dumps(out))
+    """
+)
+
+
+@pytest.mark.slow
+def test_elastic_restore_different_worker_count_8dev():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-W", "ignore", "-c", ELASTIC_SCRIPT],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    assert out["motifs"] == {"1": True, "3": True}
+    assert out["fsm"] == {"1": True, "3": True}
