@@ -1,0 +1,111 @@
+"""§Perf for device-resident level-1 aggregation (DESIGN.md §10): host
+bytes drained by pattern aggregation per superstep, device path vs the
+host reference path.
+
+Depth-3 motifs over ``mico_like(scale=0.005)`` (the acceptance workload —
+labeled, so the final step has ~37k distinct quick patterns, the worst
+realistic Q/B ratio). Two rows:
+
+  * ``host_path`` — ``device_aggregate=False``: level 1 drains the whole
+    frontier's (B, 3) int64 quick codes to the host every superstep
+    (24 bytes per frontier row; plus the (B, 8) local-vertex table when
+    domains are requested).
+  * ``device_path`` — the default: level 1 folds on device and only O(Q)
+    bytes cross (distinct codes packed to uint32 with unused label words
+    dropped, counts narrowed to int32, one (6,) scalar drain).
+
+Hard gates (enforced like bench_odag's compression gate):
+
+  * identical pattern dictionaries (and per-step aggregate arrays) across
+    the two paths;
+  * per superstep, device-path ``bytes_to_host`` is >= 10x below
+    ``B * ROW_CODE_BYTES`` (the per-row quick-code payload the host level-1
+    used to drain — the "shipping the frontier to the host" this PR stops);
+  * summed over the run, device-path bytes are >= 10x below the host
+    path's MEASURED ``bytes_to_host``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import EngineConfig, graph as G, run
+from repro.core.apps import MotifsApp
+
+SCALE = 0.005
+CHUNK = 512
+#: bytes of per-row aggregation payload the host path ships: one (3,)
+#: int64 quick code per frontier row (serial.py's old per-wave
+#: ``np.asarray(qp.codes)`` drain).
+ROW_CODE_BYTES = 24
+RATIO_GATE = 10.0
+
+
+def _cfg(device_aggregate: bool) -> EngineConfig:
+    return EngineConfig(
+        device_aggregate=device_aggregate,
+        chunk_size=CHUNK, initial_capacity=CHUNK,
+    )
+
+
+def main():
+    g = G.mico_like(scale=SCALE)
+    app = lambda: MotifsApp(max_size=3)     # noqa: E731
+    # warm the chunk-program + canonicalisation caches so timings are
+    # dataflow, not compiles (byte counts are deterministic either way)
+    run(g, app(), _cfg(True))
+    run(g, app(), _cfg(False))
+
+    dev = run(g, app(), _cfg(True))
+    host = run(g, app(), _cfg(False))
+
+    assert dev.patterns == host.patterns, (
+        "device aggregation diverged from the host reference path"
+    )
+    for a, b in zip(dev.aggregates, host.aggregates):
+        np.testing.assert_array_equal(a.canon_codes, b.canon_codes)
+        np.testing.assert_array_equal(a.counts, b.counts)
+        np.testing.assert_array_equal(a.supports, b.supports)
+
+    ratios = []
+    for st in dev.stats.steps:
+        if not st.n_quick_patterns:
+            continue
+        assert st.bytes_to_host > 0, "device path recorded no transfer"
+        ratio = st.n_frontier * ROW_CODE_BYTES / st.bytes_to_host
+        ratios.append(ratio)
+        assert ratio >= RATIO_GATE, (
+            f"step {st.step}: aggregation shipped {st.bytes_to_host} bytes "
+            f"for a {st.n_frontier}-row frontier — only {ratio:.1f}x below "
+            f"B*{ROW_CODE_BYTES}, gate is {RATIO_GATE}x"
+        )
+    assert ratios, "no aggregation steps measured"
+
+    dev_bytes = dev.stats.total_bytes_to_host
+    host_bytes = host.stats.total_bytes_to_host
+    measured_ratio = host_bytes / max(dev_bytes, 1)
+    assert measured_ratio >= RATIO_GATE, (
+        f"device path shipped {dev_bytes} aggregation bytes vs the host "
+        f"path's {host_bytes} — only {measured_ratio:.1f}x, gate is "
+        f"{RATIO_GATE}x"
+    )
+
+    t_dev = sum(s.t_aggregate for s in dev.stats.steps)
+    t_host = sum(s.t_aggregate for s in host.stats.steps)
+    last = dev.stats.steps[-1]
+    emit(
+        "aggregate.host_path", t_host * 1e6,
+        f"bytes={host_bytes};"
+        f"bytes_by_step={'/'.join(str(s.bytes_to_host) for s in host.stats.steps)}",
+    )
+    emit(
+        "aggregate.device_path", t_dev * 1e6,
+        f"bytes={dev_bytes};"
+        f"bytes_by_step={'/'.join(str(s.bytes_to_host) for s in dev.stats.steps)};"
+        f"quick={last.n_quick_patterns};frontier={last.n_frontier};"
+        f"min_row_ratio={min(ratios):.1f}x;vs_host_measured={measured_ratio:.1f}x",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -4,11 +4,12 @@ Prints ``name,us_per_call,derived`` CSV rows. The dry-run/roofline tables
 (assignment §Dry-run/§Roofline) live in dryrun_results.json, produced by
 ``python -m repro.launch.dryrun``; ``bench_roofline`` summarises them here.
 
-``--smoke`` runs the mining-perf ladder plus the fused-superstep and
-checkpoint-overhead gates — the quick sanity sweep behind
+``--smoke`` runs the mining-perf ladder plus the fused-superstep,
+checkpoint-overhead, and aggregation-bytes gates — the quick sanity sweep
+behind
 ``make bench-smoke``. ``--json [PATH]`` additionally writes every emitted
 row (us_per_call + parsed derived stats) as machine-readable JSON
-(default ``BENCH_4.json``), the perf trajectory future PRs gate against
+(default ``BENCH_5.json``), the perf trajectory future PRs gate against
 instead of an empty history.
 """
 from __future__ import annotations
@@ -27,12 +28,13 @@ def main(argv=None) -> None:
         help="run only the fast mining-perf ladder + superstep gate",
     )
     args.add_argument(
-        "--json", nargs="?", const="BENCH_4.json", default=None,
+        "--json", nargs="?", const="BENCH_5.json", default=None,
         metavar="PATH",
-        help="write emitted rows as JSON (default path: BENCH_4.json)",
+        help="write emitted rows as JSON (default path: BENCH_5.json)",
     )
     opts = args.parse_args(argv)
     from benchmarks import (
+        bench_aggregate,
         bench_breakdown,
         bench_checkpoint,
         bench_large,
@@ -57,6 +59,7 @@ def main(argv=None) -> None:
         ("mining_perf(§Perf)", bench_mining_perf.main),
         ("superstep(§8)", bench_superstep.main),
         ("checkpoint(§9)", bench_checkpoint.main),
+        ("aggregate(§10)", bench_aggregate.main),
         ("roofline(dry-run)", bench_roofline.main),
     ]
     if opts.smoke:
@@ -64,6 +67,7 @@ def main(argv=None) -> None:
             ("mining_perf(§Perf)", bench_mining_perf.main),
             ("superstep(§8)", bench_superstep.main),
             ("checkpoint(§9)", bench_checkpoint.main),
+            ("aggregate(§10)", bench_aggregate.main),
         ]
     failures = 0
     for name, fn in benches:

@@ -5,6 +5,15 @@ bitmaps keyed by *quick*-pattern slot). Level 2 maps quick slots to canonical
 slots (host table from :mod:`repro.core.pattern`) and folds level-1 state —
 the only stage that ever touches graph isomorphism.
 
+Since DESIGN.md §10 level 1 is *device-resident* end to end:
+:class:`DeviceLevel1` folds per-chunk / per-wave quick codes into a
+device-side distinct table (``kernels/aggregate.py`` sort + segment-reduce),
+and only O(Q) bytes — the distinct codes (packed uint32), their counts, and
+the (Pc, 8, N) canonical domain bitmaps — ever cross to the host for level-2
+canonicalisation. :func:`aggregate_rows` below is the host reference path
+(``device_aggregate=False``), bit-identical by construction because both
+paths emit distinct codes in ascending lexicographic order.
+
 In the distributed runtime the level-1 state is exactly what gets
 all-reduced: per-pattern scalars and domain bitmaps, never embeddings
 (DESIGN.md §4) — this is how the paper's Table-4 reduction becomes a
@@ -13,13 +22,22 @@ collective-bytes reduction.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pattern as pattern_lib
+from repro.kernels import aggregate as agg_kernel
+
+
+def _next_pow2(x: int) -> int:
+    # lazy import: runtime.config (the canonical home of next_pow2) sits in
+    # a package whose __init__ imports the loop, which imports this module
+    from repro.core.runtime.config import next_pow2
+
+    return next_pow2(x)
 
 
 class StepAggregates(NamedTuple):
@@ -104,10 +122,16 @@ def min_image_support(
     """
     bm = np.asarray(bitmaps)                          # (Pc, 8, N) bool
     pc, kmax, n = bm.shape
-    merged = np.zeros_like(bm)
-    for p in range(pc):
-        for pos in range(kmax):
-            merged[p, pos] = bm[p, canon_orbits[p] == canon_orbits[p, pos]].any(axis=0)
+    if pc == 0:
+        return np.zeros((0,), np.int64)
+    # orbit merge as one batched boolean matmul: eq[p, i, j] marks positions
+    # in the same orbit, so (eq @ bm)[p, pos] > 0 ORs the orbit-mates'
+    # domains — the (Pc x 8) Python double loop this replaces dominated
+    # t_aggregate on labeled graphs (Pc large). uint8 is safe: row sums
+    # are bounded by kmax = 8.
+    orb = np.asarray(canon_orbits)[:, :kmax]
+    eq = (orb[:, :, None] == orb[:, None, :]).astype(np.uint8)   # (Pc, 8, 8)
+    merged = np.matmul(eq, bm.astype(np.uint8)) > 0              # (Pc, 8, N)
     counts = merged.sum(axis=2)                       # (Pc, 8)
     pos_ok = np.arange(kmax)[None, :] < np.asarray(canon_n_verts)[:, None]
     counts = np.where(pos_ok, counts, np.iinfo(np.int64).max)
@@ -145,8 +169,13 @@ def aggregate_rows(
     scatter), so aggregation never allocates a device array of frontier
     length — the frontier-store subsystem's device-budget contract. The
     distributed runtime keeps its own sharded level-1 path
-    (:func:`make_sharded_aggregate` in :mod:`repro.core.distributed`) whose
-    reduce is the collective.
+    (:func:`make_sharded_aggregate` in :mod:`repro.core.runtime.shard`)
+    whose reduce is the collective.
+
+    Since DESIGN.md §10 this is the ``device_aggregate=False`` *reference*
+    path: the default engines fold level 1 on device (:class:`DeviceLevel1`)
+    and only O(Q) bytes cross to the host. Both paths emit distinct codes
+    in ascending lexicographic order, so their outputs are bit-identical.
 
     Returns (aggregates, per-embedding canonical slot).
     """
@@ -197,3 +226,308 @@ def aggregate_rows(
         n_iso_checks=table.n_iso_checks,
     )
     return agg, canon_slot
+
+
+# ---------------------------------------------------------------------------
+# Device-resident level 1 (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("cap", "use_kernel", "interpret")
+)
+def _bin_all_valid(codes, cap: int, use_kernel: bool, interpret):
+    """Bin one batch of all-valid quick codes at capacity ``cap``."""
+    b = codes.shape[0]
+    return agg_kernel.bin_rows(
+        codes, jnp.ones((b,), bool), cap,
+        use_kernel=use_kernel, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cap", "use_kernel", "interpret")
+)
+def _bin_weighted(codes, valid, weights, cap: int, use_kernel: bool,
+                  interpret):
+    """Fold pre-binned partials: weighted re-bin of stacked unique tables."""
+    return agg_kernel.bin_rows(
+        codes, valid, cap, weights=weights,
+        use_kernel=use_kernel, interpret=interpret,
+    )
+
+
+@jax.jit
+def _finish_flags(uniq, counts, uvalid, n_stack, corrupt):
+    """The ONE scalar drain of a step's level-1 state: [final distinct
+    count, max distinct count over every fold (merge-overflow detection),
+    partial-corruption flag (a chunk's distinct count overflowed its bin
+    capacity), w1/w2 column-used flags, counts-fit-int32 flag] — read
+    together so overflow handling and the packed transfer cost no extra
+    round trips."""
+    w1_used = jnp.any(jnp.where(uvalid, uniq[:, 1], 0) != 0)
+    w2_used = jnp.any(jnp.where(uvalid, uniq[:, 2], 0) != 0)
+    fit32 = jnp.max(jnp.where(uvalid, counts, 0)) < jnp.int64(2) ** 31
+    return jnp.stack(
+        [n_stack[-1], jnp.max(n_stack), corrupt.astype(jnp.int32),
+         w1_used.astype(jnp.int32), w2_used.astype(jnp.int32),
+         fit32.astype(jnp.int32)]
+    ).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("flat_slots", "n_vertices"))
+def _scatter_canon_flat(bm_flat, slot, lv, q2c, sigma_inv,
+                        flat_slots: int, n_vertices: int):
+    """Phase-2 FSM domain scatter (device): one batch of rows into the
+    flat (pc_cap * 8 * N + 1) canonical-position bitmap (last slot = dump).
+
+    ``slot`` is the per-row quick slot (final table order), ``q2c`` /
+    ``sigma_inv`` the uploaded level-2 tables; vertex ``lv[r, sigma_inv[p]]``
+    lands at canonical position ``p`` — the same re-ordering
+    :func:`map_to_canonical_positions` applies on the host."""
+    b, kmax = lv.shape
+    safe = jnp.maximum(slot, 0)
+    cs = jnp.where(slot >= 0, q2c[safe], -1)                       # (B,)
+    vc = jnp.take_along_axis(lv, sigma_inv[safe], axis=1)          # (B, 8)
+    ok = (vc >= 0) & (cs[:, None] >= 0)
+    idx = (
+        cs[:, None].astype(jnp.int64) * (kmax * n_vertices)
+        + jnp.arange(kmax)[None, :] * n_vertices
+        + jnp.maximum(vc, 0)
+    )
+    idx = jnp.where(ok, idx, flat_slots)
+    return bm_flat.at[idx.reshape(-1)].set(True)
+
+
+class DeviceLevel1:
+    """Device-resident level-1 state of ONE superstep (DESIGN.md §10).
+
+    Folds batches of quick codes — raw rows from a frontier wave
+    (:meth:`fold_rows`) or pre-binned per-chunk partials emitted by the
+    fused chunk programs (:meth:`fold_partial`) — into a device-side
+    distinct table, without any host transfer. :meth:`finish` drains the
+    O(Q) result: one (6,) scalar read, then the distinct codes packed to
+    uint32 (label words dropped when unused) and the counts (int32 when
+    they fit). Distinct codes come out in ascending lexicographic order,
+    matching the host reference path bit for bit.
+
+    Capacity discipline mirrors the chunk pipeline: per-batch bins use the
+    batch's own pow2 capacity (can never overflow); cross-batch *merges*
+    use ``merge_cap``, and an overflow — the unclamped distinct total rides
+    the one scalar read — is re-merged at the exact pow2 capacity from the
+    retained partials. Only when eager compaction (the stacked-drain fold,
+    which merges pending chunk partials to bound device memory) has already
+    dropped partials does :meth:`finish` return ``None``, and the caller
+    re-folds from the frontier waves.
+
+    Partial buffers are dropped (not eagerly deleted) once merged — they
+    are O(cap) control state, not the O(step-output) children buffers the
+    drain window retires.
+    """
+
+    def __init__(self, *, merge_cap: int, use_kernel: bool = False,
+                 interpret=None, pending_limit: int = 32) -> None:
+        self.merge_cap = int(merge_cap)
+        self.rows = 0                   # host-known rows folded so far
+        self.parts: List[tuple] = []    # (uniq, counts i64, uvalid, cap, n)
+        self.batches: List[tuple] = []  # (inv, lv, part_idx)  [fold_rows]
+        self._merge_ns: List = []       # device n of every cross-batch merge
+        self._corrupt = None            # device flag: a partial overflowed
+        self._compacted = False
+        self._use_kernel = use_kernel
+        self._interpret = interpret
+        self._pending_limit = pending_limit
+        self._final = None              # (uniq, counts, uvalid, cap, n)
+        self._maps: Optional[List] = None
+
+    # -- folding ------------------------------------------------------------
+    def fold_rows(self, codes, lv=None) -> None:
+        """Fold one wave's (B, 3) quick codes (all rows valid); ``lv``
+        (device) is retained for the FSM phase-2 domain scatter."""
+        b = int(codes.shape[0])
+        if b == 0:
+            return
+        cap = _next_pow2(b)
+        u, c, inv, n, uv = _bin_all_valid(
+            codes, cap, self._use_kernel, self._interpret
+        )
+        self.parts.append((u, c, uv, cap, n))
+        self.batches.append((inv, lv, len(self.parts) - 1))
+        self.rows += b
+
+    def fold_partial(self, uniq, counts, n, cap: int, rows: int,
+                     may_overflow: bool = False) -> None:
+        """Fold one chunk program's pre-binned partial: ``uniq`` (cap, 3),
+        ``counts`` (cap,) and the device distinct count ``n`` (unclamped).
+        ``may_overflow`` marks partials binned below the chunk's child
+        capacity (``agg_qcap``-bounded): ``n > cap`` then means the dump
+        slot swallowed patterns — tracked as a device flag that rides the
+        finish drain, after which the caller re-folds from the waves."""
+        uv = jnp.arange(cap, dtype=jnp.int32) < jnp.minimum(n, cap)
+        self.parts.append((uniq, counts.astype(jnp.int64), uv, cap, n))
+        self.rows += rows
+        if may_overflow:
+            bad = n > cap
+            self._corrupt = bad if self._corrupt is None else (
+                self._corrupt | bad
+            )
+        if len(self.parts) >= self._pending_limit:
+            self._compact()
+
+    def _merge(self, parts, cap: int):
+        u = jnp.concatenate([p[0] for p in parts])
+        c = jnp.concatenate([p[1] for p in parts])
+        v = jnp.concatenate([p[2] for p in parts])
+        mu, mc, minv, mn, muv = _bin_weighted(
+            u, v, c, cap, self._use_kernel, self._interpret
+        )
+        self._merge_ns.append(mn)
+        return mu, mc, minv, mn, muv
+
+    def _compact(self) -> None:
+        mu, mc, _, mn, muv = self._merge(self.parts, self.merge_cap)
+        self.parts = [(mu, mc, muv, self.merge_cap, mn)]
+        self._compacted = True
+
+    # -- the O(Q) drain -----------------------------------------------------
+    def _finalize(self, cap: int):
+        if len(self.parts) == 1:
+            # a lone batch bin (cap >= rows) or an eager compaction: never
+            # re-merged — overflow of the latter is caught via _merge_ns
+            u, c, uv, pcap, n = self.parts[0]
+            self._maps = [None]
+            return u, c, uv, pcap, n
+        mu, mc, minv, mn, muv = self._merge(self.parts, cap)
+        off, maps = 0, []
+        for p in self.parts:
+            maps.append(jax.lax.slice_in_dim(minv, off, off + p[3]))
+            off += p[3]
+        self._maps = maps
+        return mu, mc, muv, cap, mn
+
+    def finish(self):
+        """Drain the folded state to the host: ``(uniq (Q, 3) int64,
+        counts (Q,) int64, bytes_to_host)`` — or ``None`` when an eager
+        compaction overflowed ``merge_cap`` (state unrecoverable on device;
+        re-fold from the frontier waves). ``observed_n`` afterwards holds
+        the true distinct total, so the re-fold can size itself exactly."""
+        if not self.parts:
+            self.observed_n = 0
+            return np.zeros((0, 3), np.int64), np.zeros((0,), np.int64), 0
+        u, c, uv, cap, n = self._finalize(self.merge_cap)
+        corrupt = (
+            self._corrupt if self._corrupt is not None else jnp.zeros((), bool)
+        )
+        stack = jnp.stack([jnp.asarray(x, jnp.int32) for x in
+                           (self._merge_ns + [n])])
+        flags = np.asarray(_finish_flags(u, c, uv, stack, corrupt))
+        nbytes = flags.nbytes
+        self.observed_n = n_final = int(flags[0])
+        max_n = int(flags[1])
+        if flags[2]:
+            return None             # a chunk partial overflowed its bin
+        if max_n > cap:
+            if self._compacted:
+                return None
+            # exact re-merge from the retained partials: the unclamped
+            # distinct total rode the scalar read, no extra sync
+            u, c, uv, cap, n = self._finalize(_next_pow2(max_n))
+            stack = jnp.stack([jnp.asarray(self._merge_ns[-1], jnp.int32)])
+            flags = np.asarray(
+                _finish_flags(u, c, uv, stack, jnp.zeros((), bool))
+            )
+            nbytes += flags.nbytes
+            self.observed_n = n_final = int(flags[0])
+        # packed transfer: only used code words cross, counts narrowed
+        uniq, counts, tbytes = drain_distinct(
+            u, c, n_final,
+            w1_used=bool(flags[3]), w2_used=bool(flags[4]),
+            fit32=bool(flags[5]),
+        )
+        self._final = (u, c, uv, cap, n)
+        return uniq, counts, nbytes + tbytes
+
+    # -- per-row slots (alpha masks, FSM phase 2) ---------------------------
+    def batch_slots(self, i: int):
+        """Device per-row slot ids of batch ``i`` in FINAL table order."""
+        inv, _, pidx = self.batches[i]
+        m = self._maps[pidx] if self._maps is not None else None
+        return m[inv] if m is not None else inv
+
+    @property
+    def final_cap(self) -> int:
+        return self._final[3] if self._final is not None else self.merge_cap
+
+
+def drain_distinct(u_dev, c_dev, n: int, w1_used: bool, w2_used: bool,
+                   fit32: bool):
+    """The packed O(Q) device→host drain both backends share: distinct
+    codes as uint32 with unused label words dropped (lossless by the
+    encoding), counts narrowed to int32 when they fit. Returns
+    ``(uniq (n, 3) int64, counts (n,) int64, bytes_transferred)``."""
+    cols = [0] + ([1] if w1_used else []) + ([2] if w2_used else [])
+    packed = np.asarray(
+        agg_kernel.pack_codes_u32(u_dev[:n][:, jnp.asarray(cols)])
+    )
+    uniq = np.zeros((n, 3), np.int64)
+    uniq[:, cols] = agg_kernel.unpack_codes_u32(packed)
+    cdev = c_dev[:n]
+    counts = np.asarray(cdev.astype(jnp.int32) if fit32 else cdev)
+    return uniq, counts.astype(np.int64), packed.nbytes + counts.nbytes
+
+
+def build_step_aggregates(table: pattern_lib.PatternTable,
+                          counts: np.ndarray, supports, n_quick: int,
+                          st) -> StepAggregates:
+    """Assemble a step's :class:`StepAggregates` from level-2 output and
+    mirror the pattern counters into the step stats — shared by both
+    backends' device-aggregation paths so the two can never drift."""
+    agg = StepAggregates(
+        canon_codes=table.canon_codes,
+        counts=counts,
+        supports=np.asarray(supports).astype(np.int64),
+        n_quick=n_quick,
+        n_canonical=len(table.canon_codes),
+        n_iso_checks=table.n_iso_checks,
+    )
+    st.n_quick_patterns = agg.n_quick
+    st.n_canonical_patterns = agg.n_canonical
+    st.n_iso_checks = agg.n_iso_checks
+    return agg
+
+
+def finish_quick_level2(uniq: np.ndarray, counts_q: np.ndarray,
+                        with_domains: bool):
+    """Host level 2 over device-drained level-1 state: canonicalise the Q
+    distinct quick codes (memoised, :func:`pattern.build_pattern_table`)
+    and fold the quick counts to canonical slots. Returns
+    ``(table, counts (Pc,) int64)``."""
+    table = pattern_lib.build_pattern_table(uniq, with_orbits=with_domains)
+    pc = len(table.canon_codes)
+    counts = np.zeros(pc, dtype=np.int64)
+    np.add.at(counts, table.quick_to_canon, counts_q.astype(np.int64))
+    return table, counts
+
+
+def level2_device_tables(table: pattern_lib.PatternTable, cap: int):
+    """Upload the level-2 mapping for device phase-2 consumers (domain
+    scatter, alpha-mask gathers): ``q2c`` (cap,) int32 padded with -1 and
+    ``sigma_inv`` (cap, 8) int32 (canonical pos -> local pos)."""
+    q = len(table.quick_codes)
+    q2c = np.full(cap, -1, np.int32)
+    q2c[:q] = table.quick_to_canon
+    si = np.zeros((cap, pattern_lib.MAX_PATTERN_VERTICES), np.int32)
+    si[:q] = np.argsort(table.sigma, axis=1)
+    return jnp.asarray(q2c), jnp.asarray(si)
+
+
+def scatter_canon_bitmaps(bm_flat, slot, lv, q2c, sigma_inv,
+                          pc_cap: int, n_vertices: int):
+    """Accumulate one batch into the flat canonical domain bitmap (see
+    :func:`_scatter_canon_flat`); ``bm_flat`` is the
+    (pc_cap * 8 * N + 1,) bool accumulator threaded across batches."""
+    return _scatter_canon_flat(
+        bm_flat, slot, lv, q2c, sigma_inv,
+        pc_cap * pattern_lib.MAX_PATTERN_VERTICES * n_vertices, n_vertices,
+    )
+
+

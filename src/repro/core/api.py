@@ -55,6 +55,18 @@ class MiningApp:
         """Anti-monotonic candidate predicate; default: accept all."""
         return jnp.ones(rows.shape, dtype=bool)
 
+    # -- alpha: aggregation filter, pattern-granular -----------------------
+    def pattern_filter(self, agg) -> Optional[np.ndarray]:
+        """Per-PATTERN keep mask ``(Pc,) bool`` over ``agg.canon_codes``,
+        or None for keep-all (the default alpha). This is the granularity
+        the device-resident aggregation evaluates alpha at (DESIGN.md §10):
+        per-row masks are derived on device from per-pattern verdicts, so
+        no per-row state has to cross to the host unless pruning actually
+        fires. Apps that genuinely need per-*row* alpha override
+        :meth:`aggregation_filter` instead (and the engine falls back to
+        the host aggregation path for them)."""
+        return None
+
     # -- alpha: aggregation filter on the frontier, host-side --------------
     def aggregation_filter(
         self,
@@ -62,8 +74,15 @@ class MiningApp:
         agg,                        # StepAggregates from the generating step
     ) -> np.ndarray:
         """Prune frontier rows using aggregates of their generating step;
-        default: keep all (paper: alpha defaults to true)."""
-        return np.ones(canon_slot.shape, dtype=bool)
+        default: broadcast :meth:`pattern_filter` to rows (keep all when it
+        returns None — paper: alpha defaults to true)."""
+        pk = self.pattern_filter(agg)
+        if pk is None:
+            return np.ones(canon_slot.shape, dtype=bool)
+        pk = np.asarray(pk, dtype=bool)
+        return np.where(
+            canon_slot >= 0, pk[np.maximum(canon_slot, 0)], False
+        )
 
     # -- beta: aggregation process (outputs keyed by pattern) --------------
     def aggregation_process(self, agg) -> Optional[dict]:

@@ -36,6 +36,9 @@ class FSMApp(MiningApp):
         n_edges = n_valid[rows] + 1
         return n_edges + 1 <= self.max_vertices + 1
 
-    def aggregation_filter(self, canon_slot: np.ndarray, agg) -> np.ndarray:
-        sup = np.where(canon_slot >= 0, agg.supports[np.maximum(canon_slot, 0)], 0)
-        return sup >= self.support
+    def pattern_filter(self, agg) -> np.ndarray:
+        """alpha at pattern granularity: a pattern survives iff its
+        min-image support reaches theta (the per-row mask — identical to
+        the old per-row ``aggregation_filter`` — is derived by the engine,
+        on device under ``device_aggregate``)."""
+        return np.asarray(agg.supports) >= self.support

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import canonical, pattern as pattern_lib
 from repro.core.graph import DeviceGraph
+from repro.kernels import aggregate as aggregate_kernel_lib
 from repro.kernels import compact as compact_kernel_lib
 from repro.kernels.canonical_check import ops as cc_ops
 
@@ -274,10 +275,13 @@ def fused_chunk_step(
     mode: str,
     app=None,
     with_patterns: bool = False,
+    with_aggregates: bool = False,
+    agg_qcap: int = 4096,
     with_local_verts: bool = True,
     use_pallas: bool = False,
     fused: bool = False,
     compact_kernel: bool = False,
+    aggregate_kernel: bool = False,
     interpret=None,
 ):
     """ONE device pass of the fused superstep pipeline (DESIGN.md §8):
@@ -289,6 +293,20 @@ def fused_chunk_step(
     decisions need no recomputation); with ``with_patterns`` the codes/
     local-vertex tables are ``(out_cap, 3)`` / ``(out_cap, 8)`` aligned
     with ``children`` (pad slots inert), else both are 0-row placeholders.
+
+    ``with_aggregates`` (DESIGN.md §10, mutually exclusive with
+    ``with_patterns``) additionally bins the children's quick codes into a
+    per-chunk level-1 PARTIAL in the same pass and returns the 7-tuple
+    ``(children, count, uniq (acap, 3), ucounts (acap,) int32, n_uniq,
+    n_generated, n_canonical)`` where ``acap = min(out_cap, agg_qcap)`` —
+    the raw code array never leaves the program; the engine folds the
+    partials across the stacked-drain window
+    (``aggregation.DeviceLevel1``). Bounding the partial at ``agg_qcap``
+    keeps the cross-chunk merges O(Q)-sized instead of O(children);
+    ``n_uniq`` is unclamped, so a chunk whose distinct count overflows
+    ``acap`` is detected at the fold (device-side flag, no extra sync) and
+    the engine re-bins from the frontier waves instead.
+
     Shared by the serial engine's jitted chunk program and the distributed
     worker body under ``shard_map`` — the same program in both runtimes.
     """
@@ -308,7 +326,7 @@ def fused_chunk_step(
         members, exp, keep, out_cap,
         use_kernel=compact_kernel, interpret=interpret,
     )
-    if with_patterns:
+    if with_patterns or with_aggregates:
         child_k = members.shape[1] + 1
         child_nv = jnp.where(
             jnp.arange(out_cap) < count, child_k, 0
@@ -318,6 +336,13 @@ def fused_chunk_step(
             if mode == "vertex"
             else pattern_lib.quick_pattern_edge(g, children, child_nv)
         )
+        if with_aggregates:
+            uniq, ucounts, _, n_uniq, _ = aggregate_kernel_lib.bin_rows(
+                qp.codes, child_nv > 0, min(out_cap, agg_qcap),
+                use_kernel=aggregate_kernel, interpret=interpret,
+            )
+            return (children, count, uniq, ucounts.astype(jnp.int32),
+                    n_uniq, exp.n_generated, exp.n_canonical)
         codes = qp.codes
         # only FSM's min-image domains read the local-vertex table; when
         # unused, dropping it from the outputs lets XLA DCE its scatter

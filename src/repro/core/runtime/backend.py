@@ -80,6 +80,37 @@ class ExecutionBackend(abc.ABC):
         Returns ``(aggregates, per-row canonical slot)`` and fills the
         step's pattern/iso/collective counters."""
 
+    def aggregate_step(
+        self, blocks: List[np.ndarray], size: int, carried, st: StepStats
+    ) -> Tuple[StepAggregates, Optional[np.ndarray]]:
+        """One superstep's pattern aggregation, end to end. ``carried`` is
+        whatever this backend's :meth:`expand` returned last step (opaque
+        to the loop). Returns ``(aggregates, per-row canonical slot)``;
+        a ``None`` slot array means level 1 stayed on device (DESIGN.md
+        §10) and alpha must be evaluated via ``app.pattern_filter`` +
+        :meth:`alpha_rows`. This base implementation is the host reference
+        flow: host codes (carried or recomputed) through
+        ``aggregation.aggregate_rows``-style :meth:`aggregate`."""
+        n_frontier = sum(len(blk) for blk in blocks)
+        if (
+            isinstance(carried, tuple)
+            and len(carried) == 2
+            and len(carried[0]) == n_frontier
+        ):
+            codes, lv = carried
+        else:
+            codes, lv = self.quick_codes(blocks, size)
+        st.bytes_to_host += codes.nbytes + lv.nbytes
+        return self.aggregate(codes, lv, st)
+
+    def alpha_rows(self, pk: np.ndarray, st: StepStats) -> np.ndarray:
+        """Per-row alpha mask over the materialised frontier, derived from
+        the per-pattern verdict ``pk`` ((Pc,) bool) of the device
+        aggregation path. Only called when ``pk`` actually prunes."""
+        raise NotImplementedError(
+            "per-row alpha requires the host aggregation path"
+        )
+
     def prune(self, blocks: List[np.ndarray],
               alpha: np.ndarray) -> List[np.ndarray]:
         """Apply the app's aggregation filter to the materialised blocks

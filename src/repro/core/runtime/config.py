@@ -70,6 +70,26 @@ class RunConfig:
     #: jnp nonzero gather. None -> auto: on where Pallas compiles to
     #: native code (TPU), off on CPU where the interpreter would lose.
     compact_kernel: Optional[bool] = None
+    #: device-resident level-1 pattern aggregation (DESIGN.md §10): quick
+    #: codes are binned into per-pattern counts (and FSM domain bitmaps) on
+    #: device, and only O(#patterns) bytes cross to the host for level-2
+    #: canonicalisation. False = the host reference path
+    #: (``aggregation.aggregate_rows``), which drains the full frontier's
+    #: codes each superstep. Apps overriding the per-row
+    #: ``aggregation_filter`` (instead of ``pattern_filter``) fall back to
+    #: the host path automatically — alpha then needs per-row slots.
+    device_aggregate: bool = True
+    #: route the level-1 segment-unique/reduce through the Pallas kernel
+    #: (``kernels/aggregate.py``; the row sort stays on XLA's tuned sort).
+    #: None -> auto: on where Pallas compiles natively (TPU), off on CPU.
+    aggregate_kernel: Optional[bool] = None
+    #: starting capacity of the cross-batch level-1 merge table (distinct
+    #: quick patterns per superstep). Like the output-capacity bucket it
+    #: grows by pow2 on overflow — the unclamped distinct count rides the
+    #: one aggregation drain, so growth costs a re-merge (or a wave
+    #: re-fold), never an extra sync. Labeled graphs with tens of
+    #: thousands of quick patterns can set it higher up front.
+    agg_qcap: int = 4096
     #: mesh axes the shard-map backend shards the frontier over.
     axes: tuple = ("data",)
     #: disable two-level aggregation (§Perf baseline, distributed backend):
@@ -94,4 +114,11 @@ class RunConfig:
             default_use_pallas()
             if self.compact_kernel is None
             else self.compact_kernel
+        )
+
+    def resolve_aggregate_kernel(self) -> bool:
+        return (
+            default_use_pallas()
+            if self.aggregate_kernel is None
+            else self.aggregate_kernel
         )

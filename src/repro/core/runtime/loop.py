@@ -140,33 +140,52 @@ class SuperstepRuntime:
             st.t_storage = timer.lap()
 
             # ---- pattern aggregation of this step's embeddings (end of
-            # the step that generated them, per Algorithm 1): quick
-            # patterns either carried from the chunk programs that produced
-            # the rows (fused, raw store) or recomputed by the backend ----
+            # the step that generated them, per Algorithm 1): level-1 state
+            # either carried from the chunk programs that produced the rows
+            # (fused, raw store) or recomputed by the backend; a None
+            # canon_slot means level 1 stayed on device (DESIGN.md §10) ----
             canon_slot = None
             agg = None
             if app.wants_patterns:
-                if carried is not None and len(carried[0]) == st.n_frontier:
-                    codes, lv = carried
-                else:
-                    codes, lv = backend.quick_codes(blocks, size)
-                agg, canon_slot = backend.aggregate(codes, lv, st)
+                agg, canon_slot = backend.aggregate_step(
+                    blocks, size, carried, st
+                )
                 result.aggregates.append(agg)
             carried = None
             st.t_aggregate = timer.lap()
 
             # ---- alpha: aggregation filter on the frontier ---------------
             if agg is not None:
-                alpha = app.aggregation_filter(canon_slot, agg)
+                if canon_slot is not None:
+                    # host path: per-row alpha over per-row canonical slots
+                    alpha = app.aggregation_filter(canon_slot, agg)
+                    surviving = (
+                        np.unique(canon_slot[alpha]) if alpha.any() else []
+                    )
+                else:
+                    # device path: alpha at pattern granularity; the O(B)
+                    # row mask only materialises when pruning fires
+                    pk = app.pattern_filter(agg)
+                    live = agg.counts > 0
+                    if pk is None:
+                        surviving = np.flatnonzero(live)
+                        alpha = None
+                    else:
+                        pk = np.asarray(pk, dtype=bool)
+                        surviving = np.flatnonzero(live & pk)
+                        alpha = (
+                            backend.alpha_rows(pk, st)
+                            if not pk.all()
+                            else None
+                        )
                 # beta / outputs: record aggregates of surviving patterns
-                surviving = np.unique(canon_slot[alpha]) if alpha.any() else []
                 for pc in surviving:
                     code = tuple(int(x) for x in agg.canon_codes[pc])
                     value = int(
                         agg.supports[pc] if app.wants_domains else agg.counts[pc]
                     )
                     result.patterns[code] = result.patterns.get(code, 0) + value
-                if not alpha.all():
+                if alpha is not None and not alpha.all():
                     blocks = backend.prune(blocks, alpha)
             b_live = sum(len(blk) for blk in blocks)
             if app.collect_embeddings and b_live:

@@ -45,16 +45,20 @@ def app_cache_key(app: MiningApp):
 def make_expand_fn(app: MiningApp, mode: str, use_pallas: bool = False,
                    fused: bool = False, interpret=None,
                    compact_kernel: bool = False, with_patterns: bool = False,
+                   with_aggregates: bool = False, agg_qcap: int = 4096,
+                   aggregate_kernel: bool = False,
                    with_local_verts: bool = True):
     """Jitted chunk program of the superstep pipeline: expand + canonicality
     + app filter + compaction (+ child quick patterns when the pipeline is
-    fused). Recompiled per (width, capacity) pow2 bucket; cached across
-    runs for hashable app configs."""
+    fused, or the binned per-chunk level-1 partial with ``with_aggregates``
+    — DESIGN.md §10). Recompiled per (width, capacity) pow2 bucket; cached
+    across runs for hashable app configs."""
     app_key = app_cache_key(app)
     key = None
     if app_key is not None:
         key = (app_key, mode, use_pallas, fused, interpret,
-               compact_kernel, with_patterns, with_local_verts)
+               compact_kernel, with_patterns, with_aggregates, agg_qcap,
+               aggregate_kernel, with_local_verts)
         cached = _CHUNK_PROGRAM_CACHE.get(key)
         if cached is not None:
             return cached
@@ -66,10 +70,13 @@ def make_expand_fn(app: MiningApp, mode: str, use_pallas: bool = False,
             mode=mode,
             app=app,
             with_patterns=with_patterns,
+            with_aggregates=with_aggregates,
+            agg_qcap=agg_qcap,
             with_local_verts=with_local_verts,
             use_pallas=use_pallas,
             fused=fused,
             compact_kernel=compact_kernel,
+            aggregate_kernel=aggregate_kernel,
             interpret=interpret,
         )
 

@@ -10,6 +10,16 @@ values in stacked window reads — at most TWO host syncs per superstep
 (``async_chunks=True``). The PR-2 chunk loop (one blocking ``int(count)``
 per chunk) is preserved bit-for-bit as ``async_chunks=False``, the
 benchmark baseline of ``benchmarks/bench_superstep.py``.
+
+Pattern aggregation is device-resident by default (DESIGN.md §10,
+``device_aggregate=True``): chunk programs emit pre-binned level-1
+*partials* that fold across the stacked-drain window
+(:class:`repro.core.aggregation.DeviceLevel1`), or — when the store cannot
+carry (ODAG resurrection) or FSM needs the local-vertex table — the waves
+are re-binned on device at aggregation time. Either way only O(Q) bytes
+(distinct codes, counts, canonical domain bitmaps, and an alpha row mask
+iff pruning fires) ever cross to the host; ``device_aggregate=False`` keeps
+the host reference path (``aggregation.aggregate_rows``).
 """
 from __future__ import annotations
 
@@ -19,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation, pattern as pattern_lib
+from repro.core.api import MiningApp
 from repro.core.runtime import programs
 from repro.core.runtime.backend import ExecutionBackend
 from repro.core.runtime.config import next_pow2
@@ -38,6 +49,7 @@ class SerialBackend(ExecutionBackend):
     def _make_store(self) -> FrontierStore:
         config, app = self.config, self.app
         self._use_pallas = config.resolve_use_pallas()
+        self._agg_kernel = config.resolve_aggregate_kernel()
         store = make_store(
             config.store, self.g,
             mode=app.mode,
@@ -46,12 +58,31 @@ class SerialBackend(ExecutionBackend):
             interpret=config.pallas_interpret,
             device_budget_bytes=config.device_budget_bytes,
         )
-        # child codes computed in the chunk program are only reusable when
-        # the next superstep re-materialises exactly the appended rows in
-        # order — true for the raw store (also under a spill budget), not
-        # for ODAG extraction (which may resurrect pattern-pruned rows).
-        self.with_patterns = (
+        # device-resident aggregation needs alpha at pattern granularity:
+        # apps overriding the per-row aggregation_filter keep the host path
+        self._device_agg = (
+            config.device_aggregate
+            and app.wants_patterns
+            and type(app).aggregation_filter is MiningApp.aggregation_filter
+        )
+        #: cross-batch level-1 merge capacity, grown pow2 on observed
+        #: overflow (the unclamped distinct count rides the one drain)
+        self._agg_qcap = max(config.agg_qcap, 1)
+        self._run_qcap = next_pow2(self._agg_qcap)
+        # child codes / level-1 partials computed in the chunk program are
+        # only reusable when the next superstep re-materialises exactly the
+        # appended rows in order — true for the raw store (also under a
+        # spill budget), not for ODAG extraction (which may resurrect
+        # pattern-pruned rows).
+        order_preserving = (
             config.async_chunks and app.wants_patterns and store.kind == "raw"
+        )
+        self.with_patterns = order_preserving and not self._device_agg
+        # FSM (wants_domains) re-bins at wave time instead: the domain
+        # scatter needs the per-row local-vertex table, which partials
+        # deliberately drop
+        self.with_aggregates = (
+            order_preserving and self._device_agg and not app.wants_domains
         )
         self._expand_fn = programs.make_expand_fn(
             app, app.mode,
@@ -60,10 +91,15 @@ class SerialBackend(ExecutionBackend):
             interpret=config.pallas_interpret,
             compact_kernel=config.resolve_compact_kernel(),
             with_patterns=self.with_patterns,
+            with_aggregates=self.with_aggregates,
+            agg_qcap=self._agg_qcap,
+            aggregate_kernel=self._agg_kernel,
             with_local_verts=app.wants_domains,
         )
         self._cache_before = programs.jit_cache_size(self._expand_fn)
         self._signatures = set()
+        self._lvl1 = None
+        self._table = None
         return store
 
     # -- superstep hooks ----------------------------------------------------
@@ -107,6 +143,167 @@ class SerialBackend(ExecutionBackend):
         st.n_iso_checks = agg.n_iso_checks
         return agg, canon_slot
 
+    # -- device-resident aggregation (DESIGN.md §10) ------------------------
+    def aggregate_step(self, blocks, size, carried, st):
+        if not self._device_agg:
+            return super().aggregate_step(blocks, size, carried, st)
+        app = self.app
+        n_frontier = sum(len(blk) for blk in blocks)
+        lvl1 = (
+            carried
+            if isinstance(carried, aggregation.DeviceLevel1)
+            and carried.rows == n_frontier
+            else None
+        )
+        if lvl1 is None:
+            lvl1 = self._fold_waves(blocks, size)
+        res = lvl1.finish()
+        if res is None:
+            # a chunk partial or eager compaction overflowed: the carried
+            # state is unrecoverable on device, so re-fold from the waves
+            # (whose pristine partials re-merge at the exact capacity).
+            # The step's distinct count is clearly beyond agg_qcap, so
+            # stop paying for per-chunk partials for the rest of the run —
+            # the wave re-bin IS the cheaper path for pattern-rich graphs.
+            self._run_qcap = max(
+                self._run_qcap, next_pow2(max(lvl1.observed_n, 1))
+            )
+            self._disable_carried_partials()
+            lvl1 = self._fold_waves(blocks, size)
+            res = lvl1.finish()
+        uniq, counts_q, nbytes = res
+        self._run_qcap = max(self._run_qcap, next_pow2(max(lvl1.observed_n, 1)))
+        st.bytes_to_host += nbytes
+        table, counts = aggregation.finish_quick_level2(
+            uniq, counts_q, app.wants_domains
+        )
+        pc = len(table.canon_codes)
+        if app.wants_domains and pc:
+            bm = self._scatter_domains(lvl1, table, st)
+            supports = aggregation.min_image_support(
+                bm, table.canon_n_verts, table.canon_orbits
+            )
+        else:
+            supports = counts.copy()
+        agg = aggregation.build_step_aggregates(
+            table, counts, supports, len(uniq), st
+        )
+        self._lvl1, self._table = lvl1, table
+        self._agg_blocks, self._agg_size = blocks, size
+        return agg, None
+
+    def _disable_carried_partials(self) -> None:
+        """Swap the chunk program for the partial-free variant (process-
+        wide cache makes this cheap when seen before), keeping the compile
+        accounting consistent across the swap."""
+        if not self.with_aggregates:
+            return
+        old = programs.jit_cache_size(self._expand_fn)
+        done = (
+            old - self._cache_before
+            if old is not None and self._cache_before is not None
+            else None
+        )
+        self.with_aggregates = False
+        self._expand_fn = programs.make_expand_fn(
+            self.app, self.app.mode,
+            use_pallas=self._use_pallas,
+            fused=self.config.fused_expand,
+            interpret=self.config.pallas_interpret,
+            compact_kernel=self.config.resolve_compact_kernel(),
+            with_patterns=False,
+            with_aggregates=False,
+            aggregate_kernel=self._agg_kernel,
+            with_local_verts=self.app.wants_domains,
+        )
+        new = programs.jit_cache_size(self._expand_fn)
+        self._cache_before = (
+            new - done if new is not None and done is not None else None
+        )
+
+    def _fold_waves(self, blocks, size) -> aggregation.DeviceLevel1:
+        """Device re-bin of the materialised frontier: quick patterns per
+        wave (on the upload the expansion reuses) folded into one
+        :class:`DeviceLevel1`; per-wave slot ids and local-vertex tables
+        stay device-resident for the FSM domain scatter / alpha masks."""
+        config = self.config
+        lvl1 = aggregation.DeviceLevel1(
+            merge_cap=self._run_qcap,
+            use_kernel=self._agg_kernel,
+            interpret=config.pallas_interpret,
+        )
+        wave_dev = (
+            self._wave_dev
+            if blocks is self._waves
+            else [None] * len(blocks)
+        )
+        for wi, w in enumerate(blocks):
+            if not len(w):
+                continue
+            if wave_dev[wi] is None:
+                wave_dev[wi] = jnp.asarray(np.ascontiguousarray(w))
+            qp = programs.quick_patterns(
+                self.g, self.app.mode, wave_dev[wi],
+                jnp.full((len(w),), size, dtype=jnp.int32),
+            )
+            lvl1.fold_rows(
+                qp.codes,
+                qp.local_verts if self.app.wants_domains else None,
+            )
+            if config.device_budget_bytes is not None:
+                programs.retire(wave_dev[wi])
+                wave_dev[wi] = None
+        return lvl1
+
+    def _scatter_domains(self, lvl1, table, st) -> np.ndarray:
+        """FSM phase 2: scatter every batch's vertices into the canonical
+        domain bitmap on device; only the (Pc, 8, N) result crosses."""
+        pc = len(table.canon_codes)
+        pc_cap = next_pow2(max(pc, 1))
+        n = self.g.n
+        q2c, si = aggregation.level2_device_tables(table, lvl1.final_cap)
+        kmax = pattern_lib.MAX_PATTERN_VERTICES
+        flat = jnp.zeros((pc_cap * kmax * n + 1,), dtype=bool)
+        for i in range(len(lvl1.batches)):
+            flat = aggregation.scatter_canon_bitmaps(
+                flat, lvl1.batch_slots(i), lvl1.batches[i][1],
+                q2c, si, pc_cap, n,
+            )
+        bm = np.asarray(flat[:-1].reshape(pc_cap, kmax, n)[:pc])
+        st.bytes_to_host += bm.nbytes
+        return bm
+
+    def alpha_rows(self, pk, st):
+        """Per-row alpha from the per-pattern verdict: gather the (padded)
+        per-quick-slot keep table through the device-resident slot ids —
+        the O(B) bool mask is the only per-row state that crosses, and only
+        because pruning actually fired."""
+        lvl1, table = self._lvl1, self._table
+        if not lvl1.batches:
+            # carried partials hold no per-row slots: re-bin the waves (the
+            # distinct table is sorted, so slot order matches `table`)
+            lvl1 = self._fold_waves(self._agg_blocks, self._agg_size)
+            res = lvl1.finish()
+            st.bytes_to_host += res[2]
+            self._lvl1 = lvl1
+        q = len(table.quick_codes)
+        pk_q = np.zeros(lvl1.final_cap, dtype=bool)
+        pk_q[:q] = np.asarray(pk, dtype=bool)[table.quick_to_canon]
+        pk_dev = jnp.asarray(pk_q)
+        parts = [
+            pk_dev[lvl1.batch_slots(i)] for i in range(len(lvl1.batches))
+        ]
+        if not parts:
+            return np.zeros((0,), dtype=bool)
+        # gather per wave, concatenate on device, drain ONCE — per-wave
+        # host round trips would creep back in exactly the spill case
+        # (many waves) this pipeline keeps at O(1) drains
+        mask = np.asarray(
+            parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        )
+        st.bytes_to_host += mask.nbytes
+        return mask
+
     def prune(self, blocks, alpha):
         # pruned rows invalidate the device-resident waves
         programs.retire(*[wd for wd in self._wave_dev if wd is not None])
@@ -128,6 +325,17 @@ class SerialBackend(ExecutionBackend):
         )
         carried = None
         if config.async_chunks:
+            #: the NEXT superstep's level-1 state, folded from the chunk
+            #: partials as the drain windows complete (DESIGN.md §10)
+            lvl1 = (
+                aggregation.DeviceLevel1(
+                    merge_cap=self._run_qcap,
+                    use_kernel=self._agg_kernel,
+                    interpret=config.pallas_interpret,
+                )
+                if self.with_aggregates
+                else None
+            )
             if config.device_budget_bytes is not None and len(waves) > 1:
                 # SpillStore contract (DESIGN.md §7): at most one budget
                 # wave device-resident at a time — pipeline and drain one
@@ -138,29 +346,42 @@ class SerialBackend(ExecutionBackend):
                 for wi in range(len(waves)):
                     sub_dev = [wave_dev[wi]]
                     c, self.capacity = self._expand_fused(
-                        store, [waves[wi]], sub_dev, size, self.capacity, st
+                        store, [waves[wi]], sub_dev, size, self.capacity,
+                        st, lvl1,
                     )
                     programs.retire(sub_dev[0])
                     wave_dev[wi] = None
                     if c is not None:
                         parts.append(c)
-                carried = (
-                    (
-                        np.concatenate([p[0] for p in parts]),
-                        np.concatenate([p[1] for p in parts]),
+                if self.with_patterns:
+                    carried = (
+                        (
+                            np.concatenate([p[0] for p in parts]),
+                            np.concatenate([p[1] for p in parts]),
+                        )
+                        if parts
+                        else None
                     )
-                    if parts
-                    else None
-                )
+                else:
+                    carried = lvl1
             else:
-                carried, self.capacity = self._expand_fused(
-                    store, waves, wave_dev, size, self.capacity, st
+                c, self.capacity = self._expand_fused(
+                    store, waves, wave_dev, size, self.capacity, st, lvl1
                 )
+                carried = lvl1 if self.with_aggregates else c
         else:
             self._expand_legacy(store, waves, size, st)
         # every chunk has been drained — the step's device waves are dead
         programs.retire(*[wd for wd in wave_dev if wd is not None])
         return carried
+
+    def end_step(self, store, st) -> None:
+        # release last step's retained level-1 batch state (slot ids,
+        # FSM local-vertex tables) and the materialised block list kept
+        # for the alpha re-fold, before the checkpoint hook
+        self._lvl1 = None
+        self._table = None
+        self._agg_blocks = None
 
     def finalize(self, stats) -> None:
         stats.chunk_signatures = sorted(self._signatures)
@@ -172,7 +393,27 @@ class SerialBackend(ExecutionBackend):
         )
 
     # -- the fused pipeline (DESIGN.md §8) ----------------------------------
-    def _expand_fused(self, store, waves, wave_dev, size, cap, st):
+    def _rec(self, out, used_cap):
+        """Name one chunk program's outputs (layout differs between the
+        carried-codes and carried-partials modes)."""
+        if self.with_aggregates:
+            children, count, u, c, n, ngen, ncanon = out
+            return {"children": children, "count": count,
+                    "agg": (u, c, n), "ngen": ngen, "ncanon": ncanon,
+                    "used_cap": used_cap}
+        children, count, codes, lv, ngen, ncanon = out
+        return {"children": children, "count": count, "codes": codes,
+                "lv": lv, "ngen": ngen, "ncanon": ncanon,
+                "used_cap": used_cap}
+
+    def _retire_outputs(self, p) -> None:
+        programs.retire(p["children"])
+        if "codes" in p:
+            programs.retire(p["codes"], p["lv"])
+        if "agg" in p:
+            programs.retire(*p["agg"][:2])
+
+    def _expand_fused(self, store, waves, wave_dev, size, cap, st, lvl1):
         """One *pilot* chunk calibrates the step's output-capacity bucket
         (sync 1 — the PR-2 loop instead discovers capacity growth once per
         chunk); the remaining chunks dispatch back-to-back with counts left
@@ -182,11 +423,13 @@ class SerialBackend(ExecutionBackend):
         overshot chunks are re-dispatched at their exact pow2 bucket
         without any further sync. As a window drains, its children fold
         into the store via device-side prefix slices (only valid rows cross
-        to the host), its pattern codes are collected for the next step's
-        aggregation, and every buffer of the window is retired."""
+        to the host), and the next step's pattern state folds device-side:
+        carried child quick codes (``with_patterns``) or pre-binned level-1
+        partials into ``lvl1`` (``with_aggregates``, DESIGN.md §10); every
+        buffer of the window is retired."""
         g, expand_fn = self.g, self._expand_fn
         config, signatures = self.config, self._signatures
-        with_patterns = self.with_patterns
+        with_patterns, with_aggregates = self.with_patterns, self.with_aggregates
         chunks = list(
             programs.iter_chunks(waves, wave_dev, config.chunk_size, size)
         )
@@ -197,14 +440,16 @@ class SerialBackend(ExecutionBackend):
         # ---- pilot: sync 1 calibrates the capacity bucket for the step --
         _, _, cb0, bucket0, chunk0, n_valid0 = chunks[0]
         signatures.add((size, bucket0, cap))
-        out = expand_fn(g, chunk0, n_valid0, out_cap=cap)
-        c0 = int(out[1])
+        out = self._rec(expand_fn(g, chunk0, n_valid0, out_cap=cap), cap)
+        c0 = int(out["count"])
         st.n_host_syncs += 1
         if c0 > cap:
-            programs.retire(out[0], out[2], out[3])
+            self._retire_outputs(out)
             cap = next_pow2(c0)
             signatures.add((size, bucket0, cap))
-            out = expand_fn(g, chunk0, n_valid0, out_cap=cap)  # count known exact
+            out = self._rec(                       # count known exact
+                expand_fn(g, chunk0, n_valid0, out_cap=cap), cap
+            )
         # scale the pilot count to a full bucket for the remaining chunks; a
         # chunk that still overshoots is re-dispatched individually below
         est = -((-c0 * bucket0) // max(cb0, 1))        # ceil(c0 * bucket0 / cb0)
@@ -216,47 +461,55 @@ class SerialBackend(ExecutionBackend):
             """One stacked control sync for a window of dispatched chunks,
             exact-cap overflow retries, then fold + retire."""
             meta = np.asarray(
-                jnp.stack([s for p in pending for s in (p[9], p[10], p[11])])
+                jnp.stack([
+                    s for p, _ in pending
+                    for s in (p["count"], p["ngen"], p["ncanon"])
+                ])
             ).reshape(-1, 3)
             st.n_host_syncs += 1
             counts = meta[:, 0]
             st.n_generated += int(meta[:, 1].sum())
             st.n_canonical += int(meta[:, 2].sum())
-            for i, p in enumerate(pending):
-                if counts[i] <= p[12]:
+            for i, (p, ch) in enumerate(pending):
+                if counts[i] <= p["used_cap"]:
                     continue
-                programs.retire(p[6], p[7], p[8])   # oversubscribed outputs
+                self._retire_outputs(p)             # oversubscribed outputs
                 retry_cap = next_pow2(int(counts[i]))
-                signatures.add((size, p[3], retry_cap))
-                children, _, codes, lv, _, _ = expand_fn(
-                    g, p[4], p[5], out_cap=retry_cap
+                signatures.add((size, ch[3], retry_cap))
+                p2 = self._rec(
+                    expand_fn(g, ch[4], ch[5], out_cap=retry_cap), retry_cap
                 )
-                p[6], p[7], p[8] = children, codes, lv
-            for i, p in enumerate(pending):
+                pending[i] = (p2, ch)
+            for i, (p, ch) in enumerate(pending):
                 cnt = int(counts[i])
-                programs.retire(p[4], p[5])         # chunk inputs are dead now
+                programs.retire(ch[4], ch[5])       # chunk inputs are dead now
                 if cnt:
                     # device-side prefix slices: the padding never crosses
                     # to the host (same contract as store.resolve_rows)
-                    store.append(np.asarray(p[6][:cnt], dtype=np.int32))
+                    store.append(np.asarray(p["children"][:cnt], dtype=np.int32))
                     if with_patterns:
-                        codes_parts.append(np.asarray(p[7][:cnt]))
-                        lv_parts.append(np.asarray(p[8][:cnt]))
-                programs.retire(p[6], p[7], p[8])
+                        codes_parts.append(np.asarray(p["codes"][:cnt]))
+                        lv_parts.append(np.asarray(p["lv"][:cnt]))
+                    if with_aggregates and lvl1 is not None:
+                        # fold the chunk's pre-binned partial; the buffers
+                        # are consumed by the merge (refs dropped there)
+                        u, c, n = p["agg"]
+                        acap = min(p["used_cap"], self._agg_qcap)
+                        lvl1.fold_partial(
+                            u, c, n, acap, cnt,
+                            may_overflow=p["used_cap"] > acap,
+                        )
+                        p.pop("agg")
+                self._retire_outputs(p)
 
-        # [wi, lo, cb, bucket, chunk, n_valid, children, codes, lv,
-        #  count, ngen, ncanon, used_cap]
-        pending = [list(chunks[0]) + [out[0], out[2], out[3],
-                                      out[1], out[4], out[5], cap]]
+        pending = [(out, chunks[0])]
         for ch in chunks[1:]:
             _, _, _, bucket_i, chunk_i, n_valid_i = ch
             signatures.add((size, bucket_i, step_cap))
-            children, count, codes, lv, ngen, ncanon = expand_fn(
-                g, chunk_i, n_valid_i, out_cap=step_cap
+            p = self._rec(
+                expand_fn(g, chunk_i, n_valid_i, out_cap=step_cap), step_cap
             )
-            pending.append(
-                list(ch) + [children, codes, lv, count, ngen, ncanon, step_cap]
-            )
+            pending.append((p, ch))
             if len(pending) >= _DRAIN_WINDOW:
                 drain(pending)
                 pending = []
@@ -298,9 +551,9 @@ class SerialBackend(ExecutionBackend):
                 st.n_chunks += 1
                 while True:
                     self._signatures.add((size, bucket, cap))
-                    children, count, _, _, ngen, ncanon = expand_fn(
-                        g, chunk, n_valid, out_cap=cap
-                    )
+                    out = expand_fn(g, chunk, n_valid, out_cap=cap)
+                    children, count = out[0], out[1]
+                    ngen, ncanon = out[-2], out[-1]
                     count = int(count)
                     st.n_host_syncs += 1
                     if count <= cap:

@@ -27,7 +27,7 @@ serial pipeline:
 from __future__ import annotations
 
 import functools
-from typing import List
+from typing import List, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +40,7 @@ from repro.core.runtime import programs
 from repro.core.runtime.backend import ExecutionBackend
 from repro.core.runtime.config import next_pow2
 from repro.core.store import FrontierStore, make_store
+from repro.kernels import aggregate as agg_kernel_lib
 
 try:  # jax >= 0.6 exports shard_map at top level
     shard_map = jax.shard_map
@@ -143,6 +144,128 @@ def make_sharded_expand(app: MiningApp, mesh: Mesh, axes=("data",),
     return step
 
 
+class ShardCarried(NamedTuple):
+    """Device-resident child pattern state carried between supersteps by
+    the shard-map backend under ``device_aggregate`` (DESIGN.md §10): the
+    per-worker quick codes / local-vertex tables stay in their padded
+    (W, cap, ·) shard layout on device — replacing the post-hoc host
+    concatenation the host path pays — plus the host-known valid counts."""
+
+    codes: jnp.ndarray     # (W, cap, 3) int64
+    lv: jnp.ndarray        # (W, cap, 8) int32
+    counts: np.ndarray     # (W,) valid rows per worker
+
+
+def _linear_rank(axes):
+    """Worker rank linearised over the mesh axes (row-major in axis order,
+    matching ``all_gather``'s concatenation order)."""
+    r = jnp.int32(0)
+    for a in axes:
+        r = r * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return r
+
+
+def make_sharded_quick_bin(mesh: Mesh, axes=("data",), use_kernel=False,
+                           interpret=None):
+    """Device-resident level-1 aggregation over the mesh (DESIGN.md §10).
+
+    Each worker bins its shard's quick codes locally
+    (``kernels/aggregate.bin_rows``), all-gathers the O(Q)-sized distinct
+    tables, deterministically re-bins the union into ONE global table
+    (identical on every worker — the input is the gathered tables), and
+    then **psums the per-slot counts** — the paper's Table-4 promise as a
+    collective whose bytes scale with #patterns, never #embeddings. Also
+    returns each row's global slot id (sharded, device-resident) for the
+    FSM domain scatter and alpha row masks.
+
+    Each worker bins at ``local_cap`` — a *pattern*-sized capacity, NOT the
+    shard's row count — so the gathered tables are O(Q) on the wire. A
+    worker whose distinct count overflows ``local_cap`` raises the
+    all-reduced ``corrupt`` flag (riding the same drain as the distinct
+    total, no extra sync) and the backend falls back to the host path for
+    the step, growing the capacity for the next one.
+    """
+    spec = P(axes)
+
+    @functools.partial(jax.jit, static_argnames=("local_cap", "global_cap"))
+    def agg(codes_sh, valid_sh, local_cap: int, global_cap: int):
+        def worker(codes, valid):
+            codes, valid = codes[0], valid[0]
+            u, c, inv, n, uv = agg_kernel_lib.bin_rows(
+                codes, valid, local_cap,
+                use_kernel=use_kernel, interpret=interpret,
+            )
+            gath_u = jax.lax.all_gather(u, axes)        # (W, cap, 3)
+            gath_c = jax.lax.all_gather(c, axes)
+            gath_v = jax.lax.all_gather(uv, axes)
+            w = gath_u.shape[0]
+            gu, _, ginv, gn, _ = agg_kernel_lib.bin_rows(
+                gath_u.reshape(w * local_cap, 3),
+                gath_v.reshape(w * local_cap),
+                global_cap,
+                use_kernel=use_kernel, interpret=interpret,
+            )
+            rank = _linear_rank(axes)
+            my_map = jax.lax.dynamic_slice_in_dim(
+                ginv, rank * local_cap, local_cap
+            )
+            # THE collective: per-slot counts psum'd over the mesh axes —
+            # bytes ∝ #patterns, not #embeddings (Table 4)
+            seg = jnp.where(uv & (my_map >= 0), my_map, global_cap)
+            local_counts = jnp.zeros(
+                (global_cap + 1,), jnp.int64
+            ).at[seg].add(c)
+            counts = jax.lax.psum(local_counts[:global_cap], axes)
+            corrupt = jax.lax.pmax((n > local_cap).astype(jnp.int32), axes)
+            row_slot = jnp.where(
+                inv >= 0, my_map[jnp.maximum(inv, 0)], -1
+            ).astype(jnp.int32)
+            return (gu[None], counts[None], gn[None], corrupt[None],
+                    row_slot[None])
+
+        mapper = shard_map_pallas_ok if use_kernel else shard_map
+        return mapper(
+            worker,
+            mesh=mesh,
+            in_specs=(spec, spec),
+            out_specs=(spec,) * 5,
+        )(codes_sh, valid_sh)
+
+    return agg
+
+
+def make_sharded_domain_scatter(mesh: Mesh, axes=("data",)):
+    """FSM phase 2 under ``device_aggregate``: every worker scatters its
+    rows' vertices into the canonical domain bitmap at its global slots,
+    then ONE OR(max)-allreduce merges the (pc_cap, 8, N) bitmaps — the
+    paper's domain merge as a collective, with per-quick-slot level-2
+    tables (q2c, sigma_inv) uploaded replicated."""
+    spec = P(axes)
+    rep = P()
+
+    @functools.partial(jax.jit, static_argnames=("pc_cap", "n_vertices"))
+    def scat(row_slot_sh, lv_sh, q2c, si, pc_cap: int, n_vertices: int):
+        kmax = pattern_lib.MAX_PATTERN_VERTICES
+
+        def worker(q2c, si, row_slot, lv):
+            flat = jnp.zeros((pc_cap * kmax * n_vertices + 1,), dtype=bool)
+            flat = aggregation.scatter_canon_bitmaps(
+                flat, row_slot[0], lv[0], q2c, si, pc_cap, n_vertices
+            )
+            bm = flat[:-1].reshape(pc_cap, kmax, n_vertices)
+            bm = jax.lax.pmax(bm.astype(jnp.int32), axes) > 0
+            return bm[None]
+
+        return shard_map(
+            worker,
+            mesh=mesh,
+            in_specs=(rep, rep, spec, spec),
+            out_specs=spec,
+        )(q2c, si, row_slot_sh, lv_sh)
+
+    return scat
+
+
 def make_sharded_aggregate(mesh: Mesh, axes=("data",)):
     """Two-level aggregation's global reduce as ONE collective: counts psum +
     domain-bitmap OR(max)-allreduce over the mesh axes."""
@@ -210,6 +333,18 @@ class ShardMapBackend(ExecutionBackend):
             and store.kind == "raw"
             and not config.naive_aggregation
         )
+        # device-resident level 1 (DESIGN.md §10): local bin + all-gathered
+        # global table + per-slot psum/pmax; alpha must be pattern-granular
+        self._device_agg = (
+            config.device_aggregate
+            and app.wants_patterns
+            and not config.naive_aggregation
+            and type(app).aggregation_filter is MiningApp.aggregation_filter
+        )
+        self._agg_kernel = config.resolve_aggregate_kernel()
+        #: per-worker distinct-table capacity (pattern-sized, so gathered
+        #: bytes stay O(Q)); grows pow2 after a host-fallback step
+        self._shard_qcap = next_pow2(max(config.agg_qcap, 1))
         self._expand = make_sharded_expand(
             app, self.mesh, self.axes,
             use_pallas=resolved_pallas,
@@ -218,10 +353,19 @@ class ShardMapBackend(ExecutionBackend):
             with_patterns=self.with_patterns,
         )
         self._aggregate = make_sharded_aggregate(self.mesh, self.axes)
+        self._quick_bin = make_sharded_quick_bin(
+            self.mesh, self.axes,
+            use_kernel=self._agg_kernel,
+            interpret=config.pallas_interpret,
+        )
+        self._domain_scatter = make_sharded_domain_scatter(
+            self.mesh, self.axes
+        )
         return store
 
     # -- superstep hooks ----------------------------------------------------
     def begin_step(self, store, st) -> List[np.ndarray]:
+        self._row_slot = None
         # raw: deterministic block split (broadcast-then-partition); odag:
         # §5.3 cost-annotated partitions, one extraction per worker.
         return store.worker_parts(self.n_shards)
@@ -293,6 +437,120 @@ class ShardMapBackend(ExecutionBackend):
         )
         return agg_out, canon_slot
 
+    # -- device-resident aggregation (DESIGN.md §10) ------------------------
+    def aggregate_step(self, blocks, size, carried, st):
+        if not self._device_agg:
+            return super().aggregate_step(blocks, size, carried, st)
+        g, app = self.g, self.app
+        n_shards = self.n_shards
+        n_frontier = sum(len(blk) for blk in blocks)
+        if (
+            isinstance(carried, ShardCarried)
+            and int(carried.counts.sum()) == n_frontier
+        ):
+            # the children's codes never left the device (nor their padded
+            # shard layout): aggregation is upload-free AND concat-free
+            codes_sh, lv_sh, cnts = carried
+            per = int(codes_sh.shape[1])
+        else:
+            padded, cnts = pad_parts(blocks, size)
+            per = next_pow2(max(padded.shape[1], 1))
+            if per > padded.shape[1]:
+                padded = np.concatenate(
+                    [padded,
+                     np.full((n_shards, per - padded.shape[1], size),
+                             -1, np.int32)],
+                    axis=1,
+                )
+            nv = (
+                (np.arange(per)[None, :] < cnts[:, None]) * size
+            ).reshape(-1).astype(np.int32)
+            qp = programs.quick_patterns(
+                g, app.mode,
+                jnp.asarray(padded.reshape(n_shards * per, size)),
+                jnp.asarray(nv),
+            )
+            codes_sh = qp.codes.reshape(n_shards, per, 3)
+            lv_sh = qp.local_verts.reshape(n_shards, per, -1)
+        valid_sh = jnp.asarray(np.arange(per)[None, :] < cnts[:, None])
+        local_cap = min(next_pow2(max(per, 1)), self._shard_qcap)
+        global_cap = next_pow2(max(n_shards * local_cap, 1))
+        gu, gcounts, gn, gcorrupt, row_slot = self._quick_bin(
+            codes_sh, valid_sh, local_cap=local_cap, global_cap=global_cap
+        )
+        flags = np.asarray(jnp.stack([gn[0], gcorrupt[0].astype(gn.dtype)]))
+        st.bytes_to_host += flags.nbytes
+        if int(flags[1]):
+            # a worker's distinct table overflowed the pattern-sized cap:
+            # host reference path for this step, bigger cap for the next
+            codes, lv = self.quick_codes(blocks, size)
+            st.bytes_to_host += codes.nbytes + lv.nbytes
+            agg_out, canon_slot = self.aggregate(codes, lv, st)
+            self._shard_qcap = max(
+                self._shard_qcap, next_pow2(max(agg_out.n_quick, 1))
+            )
+            return agg_out, canon_slot
+        # the collective itself: gathered O(Q) tables + per-slot psum
+        st.collective_bytes += (
+            n_shards * local_cap * (24 + 8 + 1) + global_cap * 8
+        )
+        n = int(flags[0])
+        # second tiny scalar read sizes the packed transfer (same packed
+        # O(Q) drain as the serial backend's DeviceLevel1.finish)
+        pflags = np.asarray(jnp.stack([
+            jnp.any(gu[0][:n, 1] != 0),
+            jnp.any(gu[0][:n, 2] != 0),
+            jnp.max(gcounts[0][:n], initial=0) < jnp.int64(2) ** 31,
+        ]))
+        uniq, counts_q, tbytes = aggregation.drain_distinct(
+            gu[0], gcounts[0], n,
+            w1_used=bool(pflags[0]), w2_used=bool(pflags[1]),
+            fit32=bool(pflags[2]),
+        )
+        st.bytes_to_host += pflags.nbytes + tbytes
+        table, counts = aggregation.finish_quick_level2(
+            uniq, counts_q, app.wants_domains
+        )
+        pc = len(table.canon_codes)
+        if app.wants_domains and pc:
+            pc_cap = next_pow2(pc)
+            q2c, si = aggregation.level2_device_tables(table, global_cap)
+            bm_sh = self._domain_scatter(
+                row_slot, lv_sh, q2c, si, pc_cap=pc_cap, n_vertices=g.n
+            )
+            st.collective_bytes += (pc_cap * 8 * g.n) // 8
+            bm = np.asarray(bm_sh[0][:pc])
+            st.bytes_to_host += bm.nbytes
+            supports = aggregation.min_image_support(
+                bm, table.canon_n_verts, table.canon_orbits
+            )
+        else:
+            supports = counts.copy()
+        agg_out = aggregation.build_step_aggregates(
+            table, counts, supports, n, st
+        )
+        self._row_slot, self._row_cnts = row_slot, cnts
+        self._agg_table, self._agg_global_cap = table, global_cap
+        return agg_out, None
+
+    def alpha_rows(self, pk, st):
+        """Per-row alpha from the per-pattern verdict: one device gather
+        through the sharded per-row global slot ids; only the bool mask
+        crosses, re-assembled to sealed-frontier order via the per-worker
+        valid counts."""
+        table = self._agg_table
+        q = len(table.quick_codes)
+        pk_q = np.zeros(self._agg_global_cap, dtype=bool)
+        pk_q[:q] = np.asarray(pk, dtype=bool)[table.quick_to_canon]
+        slot = self._row_slot
+        mask_sh = np.asarray(
+            jnp.asarray(pk_q)[jnp.maximum(slot, 0)] & (slot >= 0)
+        )
+        st.bytes_to_host += mask_sh.nbytes
+        return np.concatenate(
+            [mask_sh[s, : self._row_cnts[s]] for s in range(self.n_shards)]
+        )
+
     def expand(self, store, blocks, size, st):
         # coordination-free sharded expansion over the (§5.3 cost-balanced)
         # per-worker slices
@@ -326,6 +584,12 @@ class ShardMapBackend(ExecutionBackend):
             store.append(children[s], worker=s, count=int(ccount[s]))
         if not self.with_patterns:
             return None
+        if self._device_agg:
+            # DESIGN.md §10: the child pattern state stays on device in its
+            # shard layout — no post-hoc host concat, no host bytes
+            return ShardCarried(
+                codes=outs[4], lv=outs[5], counts=np.asarray(ccount)
+            )
         codes_all = np.asarray(outs[4])
         lv_all = np.asarray(outs[5])
         return (

@@ -26,6 +26,13 @@ class StepStats:
     frontier_bytes: int = 0          # raw embedding-list bytes (Fig 9 baseline)
     odag_bytes: int = 0              # ODAG-compressed bytes (Fig 9)
     collective_bytes: int = 0        # bytes exchanged in the distributed step
+    #: device→host bytes drained by PATTERN AGGREGATION this superstep:
+    #: distinct codes + counts + domain bitmaps + alpha row masks under the
+    #: device-resident path (O(#patterns), DESIGN.md §10), or the full
+    #: frontier's quick codes / local-vertex tables under the host
+    #: reference path (O(frontier)). ``bench_aggregate.py`` gates the
+    #: device path at >=10x below the per-row code payload.
+    bytes_to_host: int = 0
     t_expand: float = 0.0            # G+C phases of Fig 12
     t_aggregate: float = 0.0         # P phase
     t_storage: float = 0.0           # W+R phases (ODAG build/extract)
@@ -66,6 +73,10 @@ class RunStats:
     @property
     def total_host_syncs(self) -> int:
         return sum(s.n_host_syncs for s in self.steps)
+
+    @property
+    def total_bytes_to_host(self) -> int:
+        return sum(s.bytes_to_host for s in self.steps)
 
     def summary(self) -> Dict:
         return {

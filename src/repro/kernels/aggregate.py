@@ -1,0 +1,258 @@
+"""Device-resident level-1 pattern binning (sort + segment-unique/reduce).
+
+The two-level aggregation of paper §5.4 promises that only per-*pattern*
+state ever leaves the exploration engine, yet until DESIGN.md §10 the
+level-1 fold ran on the host: every superstep drained the full frontier's
+(B, 3) quick codes (and the (B, 8) local-vertex table for FSM) to the host
+and lexsort-uniqued them there — an O(B) host transfer in the hottest
+phase. This module is the device replacement: given a batch of quick codes
+it produces, **on device**,
+
+  * ``uniq``   — the distinct codes, lexicographically sorted, padded to a
+    static capacity ``cap``;
+  * ``counts`` — embeddings per distinct code (optionally weighted, for
+    folding pre-binned partial aggregates);
+  * ``inv``    — the per-row slot id into ``uniq`` (-1 for invalid rows);
+  * ``n``      — the UNCLAMPED distinct total. Like the stream-compaction
+    kernel's count contract (``kernels/compact.py``), overflow past ``cap``
+    is a pure host decision on an already-drained value: slots ≥ ``cap``
+    land in a dump slot that is sliced off, and the caller re-bins at the
+    exact pow2 capacity.
+
+The row sort itself stays on ``jax.lax.sort`` — XLA's tuned variadic sort
+network, which a hand-rolled Pallas sort would not beat. What the Pallas
+kernel (``seg_unique_pallas``) fuses is everything *after* the sort, the
+four passes XLA otherwise materialises separately in HBM: segment-boundary
+detection carry, exclusive prefix-sum of the boundary flags, the
+first-occurrence scatter into the unique window, and the per-slot count
+accumulation — one VMEM pass with the running unique total carried across
+the sequential grid (the same revisited-window dataflow as
+``kernels/compact.py``).
+
+Dispatch follows :mod:`repro.kernels.dispatch`: ``interpret=None``
+compiles on TPU/GPU and interprets on CPU; the engine's
+``aggregate_kernel=None`` auto-knob only routes here where Pallas lowers
+natively (TPU). The jnp route (``seg_unique_ref``) honours the identical
+contract, so the two are interchangeable inside one jitted program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.dispatch import resolve_interpret
+
+#: bytes of VMEM-resident unique windows (src + counts, int32 each) we
+#: allow; larger capacities route to the jnp segment path.
+VMEM_SLOT_LIMIT = 4 * 2**20
+
+
+def fits_vmem(cap: int) -> bool:
+    """True when the two (cap + 1) int32 slot windows are VMEM-sized."""
+    return (int(cap) + 1) * 4 * 2 <= VMEM_SLOT_LIMIT
+
+
+def _seg_unique_kernel(new_ref, valid_ref, src_ref, counts_ref, slot_ref,
+                       n_ref):
+    """One grid step over a block of sorted rows: boundary prefix-sum +
+    first-occurrence scatter + count accumulate, with ``n_ref`` doubling as
+    the cross-block carry of the running distinct total (the compact.py
+    revisited-window idiom)."""
+    i = pl.program_id(0)
+    block = new_ref.shape[0]
+    slots = src_ref.shape[0]              # cap + 1 (last slot = dump)
+
+    @pl.when(i == 0)
+    def _init():
+        src_ref[...] = jnp.zeros((slots,), jnp.int32)
+        counts_ref[...] = jnp.zeros((slots,), jnp.int32)
+        n_ref[...] = jnp.zeros((1,), jnp.int32)
+
+    new = new_ref[...]
+    valid = valid_ref[...]
+    newv = new & valid
+    base = n_ref[0]
+    # inclusive prefix sum of boundary flags, offset by the carried base:
+    # slot of a row = (#boundaries at or before it) - 1 (dtypes pinned —
+    # the repo enables x64, which would promote the sums)
+    incl = jnp.cumsum(newv.astype(jnp.int32), dtype=jnp.int32)
+    slot = jnp.where(valid, base + incl - 1, -1)
+    # global source index of every row in this block (2-D iota: TPU has no
+    # 1-D iota — see the canonical-check kernels)
+    src = i * block + jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0)[:, 0]
+    # first occurrences scatter their source index; overflowed and
+    # non-boundary rows land in the dump slot (sliced off by the wrapper)
+    pos_src = jnp.where(newv & (slot < slots - 1), slot, slots - 1)
+    src_ref[...] = src_ref[...].at[pos_src].set(jnp.where(newv, src, 0))
+    # per-slot count accumulate (duplicates within the block fold via .add)
+    pos_cnt = jnp.where(valid & (slot >= 0) & (slot < slots - 1),
+                        slot, slots - 1)
+    counts_ref[...] = counts_ref[...].at[pos_cnt].add(valid.astype(jnp.int32))
+    slot_ref[...] = slot
+    n_ref[...] = (base + newv.sum(dtype=jnp.int32)).reshape(1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cap", "block", "interpret")
+)
+def seg_unique_pallas(new, valid, cap: int, block: int = 8192,
+                      interpret=None):
+    """(new (B,) bool boundary flags, valid (B,) bool) over SORTED rows ->
+    (src (cap,) int32, counts (cap,) int32, slot (B,) int32, n () int32).
+
+    ``src[:min(n, cap)]`` are the first-occurrence indices of each distinct
+    segment in ascending order (pad slots 0); ``counts`` the per-segment
+    row totals; ``slot`` the per-row segment id (-1 invalid, unclamped past
+    ``cap``); ``n`` the unclamped distinct total. Valid rows must form a
+    prefix of the sort order (the code sort pushes invalid rows last).
+    """
+    b = new.shape[0]
+    if b == 0:
+        return (jnp.zeros((cap,), jnp.int32), jnp.zeros((cap,), jnp.int32),
+                jnp.zeros((0,), jnp.int32), jnp.zeros((), jnp.int32))
+    block = max(1, min(block, b))
+    pad = (-b) % block
+    if pad:
+        new = jnp.concatenate([new, jnp.zeros((pad,), new.dtype)])
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), valid.dtype)])
+
+    src, counts, slot, n = pl.pallas_call(
+        _seg_unique_kernel,
+        grid=((b + pad) // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((cap + 1,), lambda i: (0,)),   # revisited window
+            pl.BlockSpec((cap + 1,), lambda i: (0,)),   # revisited window
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),         # carry + result
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cap + 1,), jnp.int32),
+            jax.ShapeDtypeStruct((cap + 1,), jnp.int32),
+            jax.ShapeDtypeStruct((b + pad,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(new, valid)
+    return src[:cap], counts[:cap], slot[:b], n[0]
+
+
+def seg_unique_ref(new, valid, cap: int):
+    """The jnp route (cumsum + scatter + segment_sum) with the kernel's
+    exact contract — what ``bin_rows`` uses when the kernel is off."""
+    b = new.shape[0]
+    if b == 0:
+        return (jnp.zeros((cap,), jnp.int32), jnp.zeros((cap,), jnp.int32),
+                jnp.zeros((0,), jnp.int32), jnp.zeros((), jnp.int32))
+    newv = new & valid
+    incl = jnp.cumsum(newv.astype(jnp.int32), dtype=jnp.int32)
+    slot = jnp.where(valid, incl - 1, -1)
+    n = incl[-1]
+    iota = jnp.arange(b, dtype=jnp.int32)
+    pos_src = jnp.where(newv & (slot < cap), slot, cap)
+    src = jnp.zeros((cap + 1,), jnp.int32).at[pos_src].set(
+        jnp.where(newv, iota, 0)
+    )[:cap]
+    pos_cnt = jnp.where(valid & (slot >= 0) & (slot < cap), slot, cap)
+    counts = jax.ops.segment_sum(
+        valid.astype(jnp.int32), pos_cnt, num_segments=cap + 1
+    )[:cap].astype(jnp.int32)
+    return src, counts, slot, n
+
+
+def sort_codes(codes, valid):
+    """Sort (B, 3) code rows lexicographically with invalid rows pushed
+    last. Returns (sorted codes, sorted valid, order).
+
+    Exploits the quick-code encoding (every word < 2^32 by construction:
+    4 + 28 structure bits, four 8-bit labels per label word) to pack the
+    four sort keys (invalid, w0, w1, w2) into TWO uint64 keys — XLA's
+    variadic sort scales with operand count, and the 2-key unstable sort
+    is ~2x the 5-operand stable one. Tie order among equal codes is
+    irrelevant: every :func:`bin_rows` output is value-determined.
+    """
+    b = codes.shape[0]
+    k1 = (
+        jnp.where(valid, 0, 1).astype(jnp.uint64) << 32
+    ) | codes[:, 0].astype(jnp.uint64)
+    k2 = (
+        codes[:, 1].astype(jnp.uint64) << 32
+    ) | codes[:, 2].astype(jnp.uint64)
+    iota = jnp.arange(b, dtype=jnp.int32)
+    _, _, order = jax.lax.sort((k1, k2, iota), num_keys=2, is_stable=False)
+    return codes[order], valid[order], order
+
+
+def bin_rows(codes, valid, cap: int, weights=None, *, use_kernel: bool = False,
+             block: int = 8192, interpret=None):
+    """Level-1 device binning of one batch of quick codes.
+
+    ``codes`` (B, 3) int64, ``valid`` (B,) bool ->
+    ``(uniq (cap, 3) int64, counts (cap,) int64, inv (B,) int32,
+    n () int32, uvalid (cap,) bool)``.
+
+    ``uniq`` holds the distinct valid codes in ascending lexicographic
+    order (deterministic across every caller — the host path's lexsort
+    unique produces the same order, which is what makes the two paths
+    bit-identical); ``counts[q]`` sums ``weights`` (default 1) over the
+    rows of slot ``q``; ``inv`` maps each input row to its slot (-1
+    invalid, *unclamped* on overflow); ``n`` is the unclamped distinct
+    total — ``n > cap`` means the dump slot swallowed patterns and the
+    caller must re-bin at ``next_pow2(n)``. Plain traced function: call it
+    inside a jitted program (the chunk programs, the fold programs) or
+    wrap it yourself.
+
+    Precondition (from the quick-code encoding, see :func:`sort_codes`):
+    every code word is non-negative and < 2^32.
+    """
+    b = codes.shape[0]
+    if b == 0:
+        return (jnp.zeros((cap, 3), jnp.int64), jnp.zeros((cap,), jnp.int64),
+                jnp.zeros((0,), jnp.int32), jnp.zeros((), jnp.int32),
+                jnp.zeros((cap,), bool))
+    sc, sv, order = sort_codes(codes, valid)
+    prev_diff = jnp.concatenate(
+        [jnp.ones((1,), bool), (sc[1:] != sc[:-1]).any(axis=1)]
+    )
+    new = sv & prev_diff
+    if use_kernel and fits_vmem(cap):
+        src, counts32, slot, n = seg_unique_pallas(
+            new, sv, cap, block=block, interpret=interpret
+        )
+    else:
+        src, counts32, slot, n = seg_unique_ref(new, sv, cap)
+    uvalid = jnp.arange(cap, dtype=jnp.int32) < jnp.minimum(n, cap)
+    uniq = jnp.where(uvalid[:, None], sc[jnp.minimum(src, b - 1)], 0)
+    if weights is None:
+        counts = counts32.astype(jnp.int64)
+    else:
+        w_sorted = jnp.where(sv, weights[order], 0).astype(jnp.int64)
+        seg = jnp.where(sv & (slot >= 0) & (slot < cap), slot, cap)
+        counts = jax.ops.segment_sum(
+            w_sorted, seg, num_segments=cap + 1
+        )[:cap]
+    inv = jnp.zeros((b,), jnp.int32).at[order].set(slot)
+    return uniq, counts, inv, n, uvalid
+
+
+def pack_codes_u32(uniq):
+    """Lossless device-side packing of (Q, 3) int64 quick codes to uint32.
+
+    By construction (``repro.core.pattern``): ``w0 = nv | bits << 4`` with
+    ``nv <= 8`` and at most C(8,2) = 28 adjacency bits (32 bits total);
+    ``w1``/``w2`` hold four 8-bit labels each. All three words fit uint32
+    exactly, halving the aggregation bytes that cross to the host."""
+    return uniq.astype(jnp.uint32)
+
+
+def unpack_codes_u32(packed) -> "np.ndarray":  # noqa: F821 - host side
+    """Host-side inverse of :func:`pack_codes_u32` (numpy)."""
+    import numpy as np
+
+    return np.asarray(packed, dtype=np.uint32).astype(np.int64)

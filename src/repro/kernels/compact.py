@@ -17,7 +17,7 @@ inside one jitted chunk program):
   * ``count`` is the TOTAL number of kept slots, *not* clamped to
     ``out_cap`` — overflow detection stays a pure host decision on the
     already-drained count, which is what keeps the fused engine's retry
-    path sync-free (``repro.core.engine``).
+    path sync-free (``repro.core.runtime.serial``).
 
 Dispatch follows the shared rules in :mod:`repro.kernels.dispatch`:
 ``interpret=None`` compiles on TPU/GPU and interprets on CPU; the engine's

@@ -1,0 +1,428 @@
+"""Device-resident level-1 aggregation tests (DESIGN.md §10).
+
+Covers the segment-unique/reduce kernel against its jnp contract, the
+``bin_rows`` device binning against a numpy oracle (weighted folds,
+invalid rows, unclamped overflow counts, empty and single-slot edge
+cases), and the acceptance-criterion equivalence: ``device_aggregate=True``
+(the default) produces bit-identical patterns / counts / supports to the
+host reference path (``aggregation.aggregate_rows``) for motifs, cliques,
+and FSM across all three frontier stores and both execution backends —
+including the merge-overflow fallback, pattern-granular alpha pruning
+(``MiningApp.pattern_filter``), and the automatic host fallback for apps
+overriding the per-row ``aggregation_filter``.
+
+Kernel invocations pin ``interpret=True`` so CPU CI runs the exact kernel
+dataflow deterministically. Graphs stay ~40 vertices (engine runs are
+seconds each; equivalence matrices multiply fast).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, graph as G, run
+from repro.core import aggregation
+from repro.core.api import MiningApp
+from repro.core.apps import CliquesApp, FSMApp, MotifsApp
+from repro.kernels.aggregate import (
+    bin_rows,
+    seg_unique_pallas,
+    seg_unique_ref,
+    sort_codes,
+)
+
+
+def _fake_codes(rng, b, nv=3, n_labels=4):
+    """Synthetic quick codes honouring the encoding (words < 2^32)."""
+    bits = rng.integers(0, 1 << min(3, 28), b).astype(np.int64)
+    w0 = nv | (bits << 4)
+    w1 = np.zeros(b, np.int64)
+    labels = rng.integers(0, n_labels, (b, min(nv, 4)))
+    for i in range(min(nv, 4)):
+        w1 |= labels[:, i].astype(np.int64) << (8 * i)
+    return np.stack([w0, w1, np.zeros(b, np.int64)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# segment-unique kernel vs the jnp contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b", [1, 5, 127, 256, 1000])
+@pytest.mark.parametrize("block", [7, 64, 8192])
+def test_seg_unique_kernel_matches_ref(b, block):
+    rng = np.random.default_rng(b + block)
+    codes = _fake_codes(rng, b)
+    valid = rng.random(b) < 0.8
+    sc, sv, _ = sort_codes(jnp.asarray(codes), jnp.asarray(valid))
+    new = sv & jnp.concatenate(
+        [jnp.ones((1,), bool), (sc[1:] != sc[:-1]).any(axis=1)]
+    )
+    cap = 64
+    out_k = seg_unique_pallas(new, sv, cap, block=block, interpret=True)
+    out_r = seg_unique_ref(new, sv, cap)
+    for a, r, name in zip(out_k, out_r, ("src", "counts", "slot", "n")):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(r), err_msg=name
+        )
+
+
+def test_seg_unique_empty():
+    for fn in (seg_unique_pallas, seg_unique_ref):
+        src, counts, slot, n = fn(
+            jnp.zeros((0,), bool), jnp.zeros((0,), bool), 8
+        )
+        assert int(n) == 0 and slot.shape == (0,)
+        assert (np.asarray(counts) == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# bin_rows vs a numpy oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_bin_rows_matches_numpy(use_kernel):
+    rng = np.random.default_rng(0)
+    codes = _fake_codes(rng, 1000)
+    valid = rng.random(1000) < 0.9
+    u, c, inv, n, uv = bin_rows(
+        jnp.asarray(codes), jnp.asarray(valid), 1024,
+        use_kernel=use_kernel, interpret=True,
+    )
+    ref_u, ref_inv = np.unique(codes[valid], axis=0, return_inverse=True)
+    q = len(ref_u)
+    assert int(n) == q
+    np.testing.assert_array_equal(np.asarray(u)[:q], ref_u)
+    np.testing.assert_array_equal(
+        np.asarray(c)[:q], np.bincount(ref_inv, minlength=q)
+    )
+    full = np.full(1000, -1, np.int32)
+    full[valid] = ref_inv
+    np.testing.assert_array_equal(np.asarray(inv), full)
+    np.testing.assert_array_equal(
+        np.asarray(uv), np.arange(1024) < q
+    )
+
+
+def test_bin_rows_overflow_count_unclamped():
+    """n past the capacity is exact — the re-bin decision is host-side on
+    an already-drained value, the compact.py contract."""
+    rng = np.random.default_rng(1)
+    codes = _fake_codes(rng, 500)
+    ref_u = np.unique(codes, axis=0)
+    assert len(ref_u) > 8
+    u, c, inv, n, uv = bin_rows(
+        jnp.asarray(codes), jnp.ones((500,), bool), 8
+    )
+    assert int(n) == len(ref_u)
+    # the first 8 distinct codes (ascending) and their counts are intact
+    np.testing.assert_array_equal(np.asarray(u), ref_u[:8])
+
+
+def test_bin_rows_weighted_fold():
+    """Weighted re-binning (the cross-batch merge): counts sum weights."""
+    rng = np.random.default_rng(2)
+    codes = _fake_codes(rng, 300)
+    w = rng.integers(1, 9, 300)
+    u, c, inv, n, uv = bin_rows(
+        jnp.asarray(codes), jnp.ones((300,), bool), 512,
+        weights=jnp.asarray(w),
+    )
+    ref_u, ref_inv = np.unique(codes, axis=0, return_inverse=True)
+    exp = np.zeros(len(ref_u), np.int64)
+    np.add.at(exp, ref_inv, w)
+    np.testing.assert_array_equal(np.asarray(c)[: len(ref_u)], exp)
+
+
+def test_bin_rows_single_slot_and_empty():
+    one = np.tile(np.array([[3 | (5 << 4), 7, 0]], np.int64), (40, 1))
+    u, c, inv, n, uv = bin_rows(jnp.asarray(one), jnp.ones((40,), bool), 16)
+    assert int(n) == 1 and int(np.asarray(c)[0]) == 40
+    assert (np.asarray(inv) == 0).all()
+    u, c, inv, n, uv = bin_rows(
+        jnp.zeros((0, 3), jnp.int64), jnp.zeros((0,), bool), 16
+    )
+    assert int(n) == 0 and inv.shape == (0,)
+
+
+def test_device_level1_matches_aggregate_rows():
+    """DeviceLevel1 over three batches == one host aggregate_rows pass,
+    including per-row slot composition through the final merge."""
+    rng = np.random.default_rng(3)
+    codes = _fake_codes(rng, 900)
+    lvl = aggregation.DeviceLevel1(merge_cap=64)
+    for lo in range(0, 900, 300):
+        lvl.fold_rows(jnp.asarray(codes[lo:lo + 300]))
+    uniq, counts, nbytes = lvl.finish()
+    ref_u, ref_inv = np.unique(codes, axis=0, return_inverse=True)
+    np.testing.assert_array_equal(uniq, ref_u)
+    np.testing.assert_array_equal(counts, np.bincount(ref_inv))
+    assert nbytes < codes.nbytes / 4        # O(Q), packed
+    for i in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(lvl.batch_slots(i)), ref_inv[i * 300:(i + 1) * 300]
+        )
+
+
+# ---------------------------------------------------------------------------
+# acceptance criterion: device aggregation == host path, all apps x stores
+# ---------------------------------------------------------------------------
+
+APPS = [
+    ("motifs", lambda: MotifsApp(max_size=3)),
+    ("cliques", lambda: CliquesApp(max_size=4)),
+    ("fsm", lambda: FSMApp(support=3, max_size=3)),
+]
+STORES = [
+    ("raw", dict(store="raw")),
+    ("odag", dict(store="odag")),
+    ("spill", dict(store="raw", device_budget_bytes=2048)),
+]
+SMALL = dict(chunk_size=64, initial_capacity=64)
+
+
+def _assert_same(host, dev):
+    assert host.patterns == dev.patterns
+    assert len(host.aggregates) == len(dev.aggregates)
+    for a, b in zip(host.aggregates, dev.aggregates):
+        np.testing.assert_array_equal(a.canon_codes, b.canon_codes)
+        np.testing.assert_array_equal(a.counts, b.counts)
+        np.testing.assert_array_equal(a.supports, b.supports)
+        assert a.n_quick == b.n_quick
+        assert a.n_canonical == b.n_canonical
+        assert a.n_iso_checks == b.n_iso_checks
+
+
+@pytest.mark.parametrize("sname,skw", STORES, ids=[s[0] for s in STORES])
+@pytest.mark.parametrize("aname,mk", APPS, ids=[a[0] for a in APPS])
+def test_device_aggregate_matches_host(aname, mk, sname, skw):
+    g = G.random_labeled(40, 90, n_labels=3, seed=3)
+    host = run(g, mk(), EngineConfig(device_aggregate=False, **SMALL, **skw))
+    dev = run(g, mk(), EngineConfig(device_aggregate=True, **SMALL, **skw))
+    _assert_same(host, dev)
+
+
+@pytest.mark.parametrize("store", ["raw", "odag"])
+@pytest.mark.parametrize("aname,mk", APPS[:1] + APPS[2:],
+                         ids=["motifs", "fsm"])
+def test_device_aggregate_shard_backend(aname, mk, store):
+    from repro.core.distributed import DistConfig, run_distributed
+
+    mesh = jax.make_mesh((1,), ("data",))
+    g = G.random_labeled(40, 90, n_labels=3, seed=7)
+    host = run(g, mk(), EngineConfig(device_aggregate=False, store=store))
+    dev = run_distributed(
+        g, mk(), mesh, DistConfig(device_aggregate=True, store=store)
+    )
+    _assert_same(host, dev)
+    # the device path must keep the sync contract
+    for st in dev.stats.steps:
+        assert st.n_host_syncs <= 2
+
+
+@pytest.mark.slow
+def test_device_aggregate_shard_multiworker_raw():
+    """The W>1 collective paths on the RAW store (ShardCarried device
+    codes, all-gather/psum rank slicing, alpha mask reassembly from the
+    per-worker counts) in a subprocess with 4 forced host devices — the
+    odag 8-dev test never takes the carried branch."""
+    import json
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent(
+        """
+        import json
+        import numpy as np
+        import jax
+        from repro.core import graph as G, run, EngineConfig
+        from repro.core.apps import MotifsApp, FSMApp
+        from repro.core.distributed import run_distributed, DistConfig
+
+        mesh = jax.make_mesh((4,), ("data",))
+        assert len(jax.devices()) == 4
+        g = G.random_labeled(40, 90, n_labels=3, seed=3)
+        out = {}
+        for name, mk in [
+            ("motifs", lambda: MotifsApp(max_size=3)),
+            ("fsm", lambda: FSMApp(support=3, max_size=3)),
+        ]:
+            host = run(g, mk(), EngineConfig(device_aggregate=False))
+            dist = run_distributed(g, mk(), mesh, DistConfig(store="raw"))
+            same_aggs = all(
+                np.array_equal(a.counts, b.counts)
+                and np.array_equal(a.supports, b.supports)
+                and np.array_equal(a.canon_codes, b.canon_codes)
+                for a, b in zip(host.aggregates, dist.aggregates)
+            )
+            out[name] = {
+                "match": host.patterns == dist.patterns and same_aggs,
+                "syncs_ok": all(
+                    s.n_host_syncs <= 2 for s in dist.stats.steps
+                ),
+            }
+        print("RESULT" + json.dumps(out))
+        """
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-W", "ignore", "-c", script],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    for name in ("motifs", "fsm"):
+        assert out[name]["match"], name
+        assert out[name]["syncs_ok"], name
+
+
+def test_device_aggregate_is_default_and_knob_respected():
+    """device_aggregate defaults on; False is the host regression path
+    (O(frontier) aggregation bytes instead of O(Q))."""
+    assert EngineConfig().device_aggregate is True
+    g = G.random_labeled(40, 120, n_labels=2, seed=11)
+    dev = run(g, MotifsApp(max_size=3), EngineConfig(**SMALL))
+    host = run(
+        g, MotifsApp(max_size=3),
+        EngineConfig(device_aggregate=False, **SMALL),
+    )
+    _assert_same(host, dev)
+    assert dev.stats.total_bytes_to_host < host.stats.total_bytes_to_host
+    big = [s for s in host.stats.steps if s.n_frontier > 100]
+    assert big, "graph too small to compare transfer volumes"
+    for st in big:
+        # host path drains the (B, 3) int64 codes (+ (B, 8) int32 lv)
+        assert st.bytes_to_host >= st.n_frontier * 24
+
+
+def test_merge_overflow_falls_back_bit_identically():
+    """agg_qcap far below Q: compaction overflow -> wave re-fold, merge
+    overflow -> exact re-merge; results stay bit-identical either way."""
+    g = G.random_labeled(40, 90, n_labels=3, seed=13)
+    host = run(
+        g, MotifsApp(max_size=3),
+        EngineConfig(device_aggregate=False, **SMALL),
+    )
+    for qcap in (1, 2, 7):
+        dev = run(
+            g, MotifsApp(max_size=3), EngineConfig(agg_qcap=qcap, **SMALL)
+        )
+        _assert_same(host, dev)
+
+
+def test_fsm_alpha_prunes_identically_on_device():
+    """FSM's support pruning through pattern_filter + device row masks ==
+    the old per-row aggregation_filter, embeddings included."""
+    g = G.random_labeled(40, 90, n_labels=3, seed=17)
+    mk = lambda: FSMApp(support=4, max_size=3, collect_embeddings=True)  # noqa: E731
+    host = run(g, mk(), EngineConfig(device_aggregate=False, **SMALL))
+    dev = run(g, mk(), EngineConfig(device_aggregate=True, **SMALL))
+    _assert_same(host, dev)
+    emb = lambda r: {k: set(map(tuple, v.tolist()))  # noqa: E731
+                     for k, v in r.embeddings.items()}
+    assert emb(host) == emb(dev)
+
+
+@dataclasses.dataclass
+class _PatternPruneApp(MiningApp):
+    """Pattern-granular alpha on a domain-free app: exercises the carried
+    partial path's alpha fallback (re-bin waves for per-row slots)."""
+
+    mode: str = "vertex"
+    max_size: int = 3
+    min_count: int = 4
+
+    def pattern_filter(self, agg):
+        return np.asarray(agg.counts) >= self.min_count
+
+
+@dataclasses.dataclass
+class _RowAlphaApp(MiningApp):
+    """Per-ROW alpha override: the engine must auto-fall back to the host
+    aggregation path (device level 1 cannot honour row-granular alpha)."""
+
+    mode: str = "vertex"
+    max_size: int = 3
+
+    def aggregation_filter(self, canon_slot, agg):
+        keep = np.asarray(agg.counts) >= 4
+        return np.where(
+            canon_slot >= 0, keep[np.maximum(canon_slot, 0)], False
+        )
+
+
+def test_custom_pattern_filter_app_prunes_on_device():
+    g = G.random_labeled(40, 120, n_labels=2, seed=19)
+    host = run(
+        g, _PatternPruneApp(), EngineConfig(device_aggregate=False, **SMALL)
+    )
+    dev = run(g, _PatternPruneApp(), EngineConfig(**SMALL))
+    _assert_same(host, dev)
+    assert host.patterns, "pruning pruned everything — test graph too small"
+
+
+def test_row_alpha_app_falls_back_to_host_path():
+    g = G.random_labeled(40, 120, n_labels=2, seed=19)
+    res_row = run(g, _RowAlphaApp(), EngineConfig(**SMALL))
+    res_pat = run(g, _PatternPruneApp(), EngineConfig(**SMALL))
+    # the two apps encode the same alpha; the row-granular one must take
+    # the host path (per-row canon slots) and still agree
+    assert res_row.patterns == res_pat.patterns
+
+
+def test_empty_step_and_single_pattern_edges():
+    # support above every pattern's frequency: step-1 aggregation prunes
+    # the whole frontier, the run ends with no output
+    g = G.random_labeled(40, 90, n_labels=3, seed=23)
+    host = run(
+        g, FSMApp(support=10**6, max_size=3),
+        EngineConfig(device_aggregate=False, **SMALL),
+    )
+    dev = run(g, FSMApp(support=10**6, max_size=3), EngineConfig(**SMALL))
+    _assert_same(host, dev)
+    assert dev.patterns == {}
+    # a single-edge graph: exactly one pattern per step
+    g1 = G.Graph(
+        n=2,
+        labels=np.array([1, 1], np.int32),
+        edges=np.array([[0, 1]], np.int32),
+    )
+    host = run(
+        g1, MotifsApp(max_size=2),
+        EngineConfig(device_aggregate=False, **SMALL),
+    )
+    dev = run(g1, MotifsApp(max_size=2), EngineConfig(**SMALL))
+    _assert_same(host, dev)
+    assert all(a.n_quick == 1 for a in dev.aggregates)
+
+
+def test_engine_with_aggregate_kernel_matches_host():
+    """The full device path with the Pallas segment kernel (interpreted on
+    CPU) inside both the chunk programs and the wave folds."""
+    g = G.random_labeled(40, 90, n_labels=3, seed=29)
+    host = run(
+        g, MotifsApp(max_size=3), EngineConfig(device_aggregate=False)
+    )
+    for mk in (lambda: MotifsApp(max_size=3),):
+        dev = run(
+            g, mk(),
+            EngineConfig(
+                aggregate_kernel=True, pallas_interpret=True, **SMALL
+            ),
+        )
+        assert host.patterns == dev.patterns
+    hostf = run(
+        g, FSMApp(support=3, max_size=3),
+        EngineConfig(device_aggregate=False),
+    )
+    devf = run(
+        g, FSMApp(support=3, max_size=3),
+        EngineConfig(aggregate_kernel=True, pallas_interpret=True, **SMALL),
+    )
+    assert hostf.patterns == devf.patterns
