@@ -13,14 +13,16 @@ test-fast:
 	$(PY) -m pytest -q -m "not slow"
 
 # full benchmark sweep (one bench per paper table/figure), with the
-# machine-readable trajectory written to BENCH_5.json (BENCH_4.json and
+# machine-readable trajectory written to BENCH_6.json (BENCH_5.json and
 # earlier are committed history — never overwritten)
 bench:
 	PYTHONPATH=src:. python -m benchmarks.run --json
 
 # quick smoke: the mining-perf ladder (jnp vs pallas variants) plus the
 # fused-superstep gate (syncs-per-step + speedup vs the PR-2 chunk loop),
-# the checkpoint-overhead gate (<=5% of superstep wall time), and the
-# aggregation-bytes gate (device level 1 >=10x below B*24 per superstep)
+# the checkpoint-overhead gate (<=5% of superstep wall time), the
+# aggregation-bytes gate (device level 1 >=10x below B*24 per superstep),
+# and the graph-shard gate (per-device adjacency bytes <= 1/W at W=8,
+# partitioned mining bit-identical to replicated)
 bench-smoke:
 	PYTHONPATH=src:. python -m benchmarks.run --smoke --json

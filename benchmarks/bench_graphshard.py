@@ -1,0 +1,94 @@
+"""§11 gate for partitioned graph storage: per-device adjacency bytes.
+
+The replicated ``DeviceGraph`` pins the full CSR + packed adjacency bitmap
+on every device; the partitioned layout (``PartitionedGraph``, DESIGN.md
+§11) gives each of W workers one vertex-range shard plus a halo tile
+fetched per superstep. This bench measures what PR 6 promises:
+
+  * **memory**: with W=8 shards, the per-device share of the adjacency
+    structures (CSR rows + edge-id rows + degrees + bitmap tile) is
+    <= 1/W of the replicated bytes plus the halo slack — one chunk's
+    worth of gathered neighbour rows (the halo capacity is a static
+    function of the chunk shape, ``explore.halo_cap``);
+  * **exactness**: mining over the partitioned layout is bit-identical to
+    the replicated reference — same pattern dictionary, same counts —
+    for depth-3 motifs on the gate graph (vertex-mode halo) and FSM on a
+    labeled graph (edge-mode halo; a smaller graph, since depth-3 FSM on
+    mico is a multi-minute run and exactness is scale-independent).
+
+Rows: replicated vs partitioned bytes (vertex balancing, the layout the
+gate holds for), a degree-balanced row for the load-balance trade-off
+(padded tile rows may inflate its bytes on skewed graphs — informational),
+and the partitioned mining wall time next to the replicated baseline.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import RunConfig, SuperstepRuntime, graph as G
+from repro.core.apps import FSMApp, MotifsApp
+from repro.core.explore import halo_cap
+
+W = 8
+SCALE = 0.005
+CHUNK = 512
+
+
+def _halo_slack_bytes(g: G.DeviceGraph, chunk: int, size: int, mode: str) -> int:
+    """One chunk's halo tile: the only adjacency bytes a worker holds
+    beyond its own shard (gathered rows + bitmap tile / edge-id rows)."""
+    cap = halo_cap((chunk, size), mode, int(g.labels.shape[0]))
+    d = int(g.nbr.shape[1])
+    words = int(g.adj_bits.shape[1])
+    row = 2 * d * 4 if mode == "edge" else (d + words) * 4
+    return cap * (row + 4)  # + the halo vertex ids themselves
+
+
+def main():
+    g = G.mico_like(scale=SCALE)
+    dg = G.to_device(g)
+    repl = G.replicated_adjacency_bytes(dg)
+
+    pg = G.to_partitioned(g, W, balance="vertex")
+    per_dev = pg.per_device_adjacency_bytes
+    slack = _halo_slack_bytes(dg, CHUNK, 3, "vertex")
+    assert per_dev <= repl / W + slack, (
+        f"partitioned layout holds {per_dev} adjacency bytes per device — "
+        f"more than 1/{W} of the replicated {repl} (+{slack} halo slack)"
+    )
+
+    pg_deg = G.to_partitioned(g, W, balance="degree")
+
+    cfg = dict(chunk_size=CHUNK, initial_capacity=CHUNK)
+    runs = [
+        ("motifs", g, lambda: MotifsApp(max_size=3)),
+        ("fsm", G.random_labeled(120, 600, 4, seed=9),
+         lambda: FSMApp(support=3, max_size=3)),
+    ]
+    for name, gr, mk in runs:
+        mode = "edge" if name == "fsm" else "vertex"
+        ref = SuperstepRuntime(gr, mk(), RunConfig(**cfg)).run()
+        part = SuperstepRuntime(
+            gr, mk(), RunConfig(graph_partition=W, **cfg)
+        ).run()
+        assert part.patterns == ref.patterns, (
+            f"{name}: partitioned mining diverged from replicated "
+            f"({len(part.patterns)} vs {len(ref.patterns)} patterns)"
+        )
+        emit(
+            f"graphshard.{name}", part.stats.wall_time * 1e6,
+            f"replicated_us={ref.stats.wall_time * 1e6:.0f};"
+            f"patterns={len(ref.patterns)};"
+            f"halo_slack={_halo_slack_bytes(dg, CHUNK, 3, mode)}",
+        )
+
+    emit(
+        "graphshard.bytes", 0.0,
+        f"replicated={repl};per_device_w{W}={per_dev};"
+        f"share={per_dev * W / repl:.2f}x_of_replicated_total;"
+        f"halo_slack={slack};"
+        f"per_device_degree_balanced={pg_deg.per_device_adjacency_bytes}",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -5,11 +5,11 @@ Prints ``name,us_per_call,derived`` CSV rows. The dry-run/roofline tables
 ``python -m repro.launch.dryrun``; ``bench_roofline`` summarises them here.
 
 ``--smoke`` runs the mining-perf ladder plus the fused-superstep,
-checkpoint-overhead, and aggregation-bytes gates — the quick sanity sweep
+checkpoint-overhead, aggregation-bytes, and graph-shard gates — the quick sanity sweep
 behind
 ``make bench-smoke``. ``--json [PATH]`` additionally writes every emitted
 row (us_per_call + parsed derived stats) as machine-readable JSON
-(default ``BENCH_5.json``), the perf trajectory future PRs gate against
+(default ``BENCH_6.json``), the perf trajectory future PRs gate against
 instead of an empty history.
 """
 from __future__ import annotations
@@ -28,15 +28,16 @@ def main(argv=None) -> None:
         help="run only the fast mining-perf ladder + superstep gate",
     )
     args.add_argument(
-        "--json", nargs="?", const="BENCH_5.json", default=None,
+        "--json", nargs="?", const="BENCH_6.json", default=None,
         metavar="PATH",
-        help="write emitted rows as JSON (default path: BENCH_5.json)",
+        help="write emitted rows as JSON (default path: BENCH_6.json)",
     )
     opts = args.parse_args(argv)
     from benchmarks import (
         bench_aggregate,
         bench_breakdown,
         bench_checkpoint,
+        bench_graphshard,
         bench_large,
         bench_mining_perf,
         bench_odag,
@@ -60,6 +61,7 @@ def main(argv=None) -> None:
         ("superstep(§8)", bench_superstep.main),
         ("checkpoint(§9)", bench_checkpoint.main),
         ("aggregate(§10)", bench_aggregate.main),
+        ("graphshard(§11)", bench_graphshard.main),
         ("roofline(dry-run)", bench_roofline.main),
     ]
     if opts.smoke:
@@ -68,6 +70,7 @@ def main(argv=None) -> None:
             ("superstep(§8)", bench_superstep.main),
             ("checkpoint(§9)", bench_checkpoint.main),
             ("aggregate(§10)", bench_aggregate.main),
+            ("graphshard(§11)", bench_graphshard.main),
         ]
     failures = 0
     for name, fn in benches:

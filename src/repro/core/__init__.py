@@ -7,7 +7,9 @@ jax.config.update("jax_enable_x64", True)
 
 from repro.core.api import MiningApp
 from repro.core.engine import EngineConfig, MiningResult, run
-from repro.core.graph import DeviceGraph, Graph, to_device
+from repro.core.graph import (
+    DeviceGraph, Graph, PartitionedGraph, to_device, to_partitioned,
+)
 from repro.core.runtime import RunConfig, SuperstepRuntime, resume
 
 __all__ = [
@@ -20,5 +22,7 @@ __all__ = [
     "run",
     "DeviceGraph",
     "Graph",
+    "PartitionedGraph",
     "to_device",
+    "to_partitioned",
 ]

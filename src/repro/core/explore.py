@@ -24,11 +24,143 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import canonical, pattern as pattern_lib
-from repro.core.graph import DeviceGraph
+from repro.core import bitset, canonical, pattern as pattern_lib
+from repro.core.graph import DeviceGraph, PartitionedGraph
 from repro.kernels import aggregate as aggregate_kernel_lib
 from repro.kernels import compact as compact_kernel_lib
+from repro.kernels import gather as gather_kernel_lib
 from repro.kernels.canonical_check import ops as cc_ops
+
+
+class TileView(NamedTuple):
+    """One chunk's gathered halo of a :class:`PartitionedGraph`
+    (DESIGN.md §11): the ascending unique *member* vertices (vertex mode)
+    or member-edge endpoints (edge mode) with their neighbour / incident-
+    edge / packed-adjacency rows gathered into dense tiles, plus the
+    replicated id/label payload. Everything downstream of expansion
+    (canonicality, app filters, the children's quick patterns) consumes
+    this view instead of a whole-graph table.
+
+    Rows are *tile-local*; columns of ``adj_t`` stay global, so one
+    resident endpoint resolves any pairwise adjacency query —
+    :meth:`is_edge` tries both sides, and every pair the fused pipeline
+    asks about (member↔candidate, child-embedding pairs) has at most one
+    non-member vertex."""
+
+    uniq: jnp.ndarray         # (U,) int32 ascending halo ids, pad sentinel n
+    labels: jnp.ndarray       # (n,) int32 — replicated
+    edge_uv: jnp.ndarray      # (m, 2) int32 — replicated
+    edge_labels: jnp.ndarray  # (m,) int32 — replicated
+    nbr_t: jnp.ndarray        # (U, D) int32 gathered neighbour rows, pad -1
+    nbr_eid_t: jnp.ndarray    # (U, D) int32 incident-edge rows ((U, 0) unused)
+    adj_t: jnp.ndarray        # (U, W) uint32 gathered adjacency rows
+
+    @property
+    def n(self) -> int:
+        return self.labels.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.edge_uv.shape[0]
+
+    @property
+    def max_degree(self) -> int:
+        return self.nbr_t.shape[1]
+
+    def rank(self, v):
+        """(tile row of each global id, hit mask). ``uniq`` is ascending
+        with sentinel-``n`` padding, so translation is one searchsorted;
+        misses return a clipped-safe row with ``hit=False``."""
+        v = jnp.asarray(v)
+        r = jnp.searchsorted(self.uniq, jnp.clip(v, 0, self.n)).astype(jnp.int32)
+        r = jnp.minimum(r, self.uniq.shape[0] - 1)
+        return r, (self.uniq[r] == v) & (v >= 0)
+
+    def is_edge(self, u, v):
+        """Symmetric O(1) edge query resolved from whichever endpoint is
+        tile-resident (False when neither is, or for out-of-range ids) —
+        the total-graph contract every generic caller (quick patterns,
+        app phi filters) relies on."""
+        ru, hu = self.rank(u)
+        rv, hv = self.rank(v)
+        return (
+            bitset.test_bit(self.adj_t, jnp.where(hu, ru, -1), v)
+            | bitset.test_bit(self.adj_t, jnp.where(hv, rv, -1), u)
+        )
+
+
+def halo_cap(members_shape, mode: str, n: int) -> int:
+    """Static tile capacity for a chunk: the distinct halo can never exceed
+    min(member-vertex slots, n), so the pow2 of that bound makes tile
+    overflow impossible by construction — no new host syncs, no retry."""
+    c, k = members_shape
+    slots = c * k * (2 if mode == "edge" else 1)
+    # pow2 bucket (config.next_pow2 inlined: runtime.config imports would
+    # cycle through the runtime package __init__)
+    return 1 << max(0, (max(min(slots, int(n)), 1) - 1).bit_length())
+
+
+def halo_vertices(g, members, n_valid, mode: str):
+    """Flat (possibly duplicated) halo vertex ids of a chunk: the members
+    themselves (vertex mode) or the member edges' endpoints (edge mode);
+    invalid slots -1."""
+    c, k = members.shape
+    valid = jnp.arange(k)[None, :] < n_valid[:, None]
+    if mode == "vertex":
+        return jnp.where(valid, members, -1).reshape(-1)
+    verts = g.edge_uv[jnp.maximum(members, 0)].reshape(c, 2 * k)
+    return jnp.where(jnp.repeat(valid, 2, axis=1), verts, -1).reshape(-1)
+
+
+def build_tile_view(
+    g: PartitionedGraph,
+    members: jnp.ndarray,
+    n_valid: jnp.ndarray,
+    mode: str,
+    *,
+    use_pallas: bool = False,
+    compact_kernel: bool = False,
+    interpret=None,
+) -> TileView:
+    """The tile-gather stage of the fused pipeline on one process: halo
+    unique (presence bitmap + stream compaction, ``kernels/gather.py``)
+    followed by row gathers from the shard-stacked tables through the
+    global->flat translation of ``PartitionedGraph.flat_index``. The
+    shard-map backend builds the same view per worker with collectives in
+    place of the flat gather (``runtime/shard.py``)."""
+    cap = halo_cap(members.shape, mode, g.n)
+    verts = halo_vertices(g, members, n_valid, mode)
+    uniq, _ = gather_kernel_lib.halo_unique(
+        verts, g.n, cap, use_kernel=compact_kernel, interpret=interpret
+    )
+    fi, ok = g.flat_index(uniq)
+    fi = jnp.where(ok, fi, -1)
+    d, w = g.max_degree, g.adj_sh.shape[2]
+    nbr_t = gather_kernel_lib.gather_rows(
+        g.nbr_sh.reshape(-1, d), fi, -1,
+        use_kernel=use_pallas, interpret=interpret,
+    )
+    if mode == "edge":
+        nbr_eid_t = gather_kernel_lib.gather_rows(
+            g.nbr_eid_sh.reshape(-1, d), fi, -1,
+            use_kernel=use_pallas, interpret=interpret,
+        )
+        adj_t = jnp.zeros((cap, 1), jnp.uint32)   # edge mode never reads adj
+    else:
+        nbr_eid_t = jnp.zeros((cap, 0), jnp.int32)
+        adj_t = gather_kernel_lib.gather_rows(
+            g.adj_sh.reshape(-1, w), fi, 0,
+            use_kernel=use_pallas, interpret=interpret,
+        )
+    return TileView(
+        uniq=uniq,
+        labels=g.labels,
+        edge_uv=g.edge_uv,
+        edge_labels=g.edge_labels,
+        nbr_t=nbr_t,
+        nbr_eid_t=nbr_eid_t,
+        adj_t=adj_t,
+    )
 
 
 class Expansion(NamedTuple):
@@ -68,18 +200,34 @@ def expand_vertex(
         return _expand_vertex_fused(g, members, n_valid, interpret)
     c, k = members.shape
     d = g.max_degree
-    safe = jnp.maximum(members, 0)
     pos = jnp.arange(k)[None, :]
     member_ok = pos < n_valid[:, None]                      # (C, k)
 
-    cand = jnp.where(member_ok[:, :, None], g.nbr[safe], -1)  # (C, k, D)
+    tiled = isinstance(g, TileView)
+    if tiled:
+        # partitioned path: members are halo-resident by construction, so
+        # every member-rooted lookup goes through tile ranks while ids stay
+        # global (columns of adj_t are global; see TileView)
+        ranks, in_tile = g.rank(members)
+        mrow = jnp.where(member_ok & in_tile, ranks, -1)     # (C, k)
+        cand = jnp.where(
+            (member_ok & in_tile)[:, :, None], g.nbr_t[ranks], -1
+        )                                                    # (C, k, D)
+    else:
+        safe = jnp.maximum(members, 0)
+        cand = jnp.where(member_ok[:, :, None], g.nbr[safe], -1)  # (C, k, D)
     slot_ok = cand >= 0
 
     # not already a member of the embedding
     is_member = (cand[:, :, :, None] == members[:, None, None, :]).any(-1)
 
     # first-occurrence dedup: drop if an *earlier* member is adjacent to cand.
-    adj_em = g.is_edge(members[:, :, None, None], cand[:, None, :, :])
+    if tiled:
+        adj_em = bitset.test_bit(
+            g.adj_t, mrow[:, :, None, None], cand[:, None, :, :]
+        )
+    else:
+        adj_em = g.is_edge(members[:, :, None, None], cand[:, None, :, :])
     adj_em = adj_em & member_ok[:, :, None, None]           # (C, k_m, k_i, D)
     earlier = (
         jnp.arange(k)[None, :, None, None] < jnp.arange(k)[None, None, :, None]
@@ -92,7 +240,13 @@ def expand_vertex(
     flat_rows = jnp.repeat(jnp.arange(c, dtype=jnp.int32), k * d)
     flat_valid = valid.reshape(c * k * d)
 
-    if use_pallas:
+    if tiled:
+        canon = cc_ops.canonical_check_tiles(
+            members[flat_rows], mrow[flat_rows], n_valid[flat_rows],
+            flat_cand, g.adj_t,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+    elif use_pallas:
         canon = cc_ops.canonical_check(
             g, members[flat_rows], n_valid[flat_rows], flat_cand,
             mode="vertex", interpret=interpret,
@@ -156,9 +310,17 @@ def expand_edge(
     vert_ok = jnp.repeat(member_ok, 2, axis=1)               # (C, 2k)
     verts = jnp.where(vert_ok, verts, -1)
 
-    safe_v = jnp.maximum(verts, 0)
-    cand = jnp.where(vert_ok[:, :, None], g.nbr_eid[safe_v], -1)   # (C, 2k, D)
-    other = jnp.where(vert_ok[:, :, None], g.nbr[safe_v], -1)      # (C, 2k, D)
+    if isinstance(g, TileView):
+        # partitioned path: member-edge endpoints are the halo, so their
+        # incident-edge / neighbour rows come from the gathered tiles
+        ranks, in_tile = g.rank(verts)
+        ok3 = (vert_ok & in_tile)[:, :, None]
+        cand = jnp.where(ok3, g.nbr_eid_t[ranks], -1)        # (C, 2k, D)
+        other = jnp.where(ok3, g.nbr_t[ranks], -1)           # (C, 2k, D)
+    else:
+        safe_v = jnp.maximum(verts, 0)
+        cand = jnp.where(vert_ok[:, :, None], g.nbr_eid[safe_v], -1)
+        other = jnp.where(vert_ok[:, :, None], g.nbr[safe_v], -1)
     slot_ok = cand >= 0
 
     is_member = (cand[:, :, :, None] == members[:, None, None, :]).any(-1)
@@ -250,6 +412,12 @@ def expand_and_compact(
     """Fused expand + canonicality + compaction (no app filter) — used by
     benchmarks and the distributed runtime where the app filter is fused in
     separately."""
+    if isinstance(g, PartitionedGraph):
+        g = build_tile_view(
+            g, members, n_valid, mode,
+            use_pallas=use_pallas, compact_kernel=compact_kernel,
+            interpret=interpret,
+        )
     if mode == "vertex":
         exp = expand_vertex(
             g, members, n_valid,
@@ -309,7 +477,21 @@ def fused_chunk_step(
 
     Shared by the serial engine's jitted chunk program and the distributed
     worker body under ``shard_map`` — the same program in both runtimes.
-    """
+
+    With a :class:`PartitionedGraph` the pass opens with the tile-gather
+    stage (DESIGN.md §11): the chunk's halo tiles are gathered once
+    (``build_tile_view``) and every downstream consumer — expansion,
+    canonicality, the app filter, the children's quick patterns — runs on
+    the :class:`TileView`. The tile capacity is a static function of the
+    chunk shape, so the output contract (and the engines' drain protocol)
+    is unchanged. A pre-built ``TileView`` is also accepted (the shard-map
+    worker builds its own view with collectives)."""
+    if isinstance(g, PartitionedGraph):
+        g = build_tile_view(
+            g, members, n_valid, mode,
+            use_pallas=use_pallas, compact_kernel=compact_kernel,
+            interpret=interpret,
+        )
     if mode == "vertex":
         exp = expand_vertex(
             g, members, n_valid,

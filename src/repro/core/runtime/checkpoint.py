@@ -45,14 +45,37 @@ _FILE_RE = re.compile(r"^ckpt-step(\d+)\.npz$")
 # fingerprints: a checkpoint only resumes against the run that wrote it
 # ---------------------------------------------------------------------------
 
-def graph_fingerprint(g: DeviceGraph) -> str:
-    """Content hash of the mined graph (labels + edges + edge labels)."""
+def graph_fingerprint(g) -> str:
+    """Content hash of the mined graph (labels + edges + edge labels).
+
+    Deliberately *layout-independent*: ``DeviceGraph`` and any
+    ``PartitionedGraph`` of the same graph hash identically (the replicated
+    content arrays are the identity; shard tables are derived data), so a
+    checkpoint resumes across layouts — elastic restore re-partitions the
+    graph alongside the frontier. The layout that *wrote* a checkpoint is
+    recorded separately (:func:`graph_layout`, in the meta)."""
     h = hashlib.sha1()
     for arr in (g.labels, g.edge_uv, g.edge_labels):
         a = np.ascontiguousarray(np.asarray(arr))
         h.update(str(a.shape).encode())
         h.update(a.tobytes())
     return h.hexdigest()
+
+
+def graph_layout(g) -> str:
+    """The partition layout a run mines under, recorded in every
+    checkpoint's fingerprint block: ``"replicated"`` for a ``DeviceGraph``,
+    else ``partitioned:w=<parts>:rows=<padded rows>:off=<boundary hash>``.
+    Purely informational for restore (the content fingerprint gates
+    validity); a resume under a different layout re-partitions."""
+    off = getattr(g, "part_offsets", None)
+    if off is None:
+        return "replicated"
+    off = np.ascontiguousarray(np.asarray(off))
+    return (
+        f"partitioned:w={len(off) - 1}:rows={int(g.tile_rows)}"
+        f":off={hashlib.sha1(off.tobytes()).hexdigest()[:12]}"
+    )
 
 
 def app_fingerprint(app) -> str:
@@ -90,6 +113,9 @@ class CheckpointState:
     store_state: dict              # FrontierStore.state_dict() payload
     graph_fp: str
     app_fp: str
+    #: partition layout of the writing run (informational; resume under a
+    #: different layout re-partitions — content fp is what gates validity)
+    graph_layout: str = "replicated"
 
 
 def checkpoint_path(directory: str, step: int) -> str:
@@ -142,6 +168,7 @@ def save(path: str, state: CheckpointState) -> None:
         "wall_time": float(state.wall_time),
         "graph_fp": state.graph_fp,
         "app_fp": state.app_fp,
+        "graph_layout": state.graph_layout,
         "emb_sizes": sorted(int(s) for s in state.embeddings),
         "n_aggregates": len(state.aggregates),
         "agg_meta": agg_meta,
@@ -213,6 +240,7 @@ def load(path: str) -> CheckpointState:
         store_state=store_state,
         graph_fp=meta["graph_fp"],
         app_fp=meta["app_fp"],
+        graph_layout=meta.get("graph_layout", "replicated"),
     )
 
 
@@ -249,9 +277,10 @@ def load_for(checkpoint: Optional[str], g: DeviceGraph, app) -> CheckpointState:
 class Checkpointer:
     """Writes one checkpoint per seal boundary the cadence selects."""
 
-    def __init__(self, config, g: DeviceGraph, app) -> None:
+    def __init__(self, config, g, app) -> None:
         self.directory = config.checkpoint_dir
         self.graph_fp = graph_fingerprint(g)
+        self.graph_layout = graph_layout(g)
         self.app_fp = app_fingerprint(app)
         os.makedirs(self.directory, exist_ok=True)
 
@@ -273,6 +302,7 @@ class Checkpointer:
             store_state=store.state_dict(),
             graph_fp=self.graph_fp,
             app_fp=self.app_fp,
+            graph_layout=self.graph_layout,
         )
         save(checkpoint_path(self.directory, step), state)
         return time.perf_counter() - t0

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.kernels.dispatch import default_use_pallas
+from repro.kernels.dispatch import default_use_pallas, resolve_halo
 
 
 def next_pow2(x: int) -> int:
@@ -90,6 +90,24 @@ class RunConfig:
     #: re-fold), never an extra sync. Labeled graphs with tens of
     #: thousands of quick patterns can set it higher up front.
     agg_qcap: int = 4096
+    #: number of graph shards of the partitioned layout (DESIGN.md §11):
+    #: the device graph becomes per-device CSR shards + packed adjacency
+    #: tiles (``core.graph.PartitionedGraph``) and the fused pipeline opens
+    #: with a halo-tile gather instead of whole-graph lookups. None keeps
+    #: the replicated ``DeviceGraph`` (the reference layout). The serial
+    #: backend mines any shard count as virtual shards; the shard-map
+    #: backend requires it to equal the mesh worker count (the shard axis
+    #: IS the mesh axis) and exchanges halos in-program.
+    graph_partition: Optional[int] = None
+    #: partition boundary placement: "degree" balances adjacency payload
+    #: across shards, "vertex" splits the id space evenly.
+    partition_balance: str = "degree"
+    #: halo-exchange strategy of the partitioned shard-map superstep:
+    #: "alltoall" (position-aligned request/response all-to-all, O(halo)
+    #: bytes per worker), "gather" (ragged all-gather of the shard tables,
+    #: O(n) fallback), or None/"auto" -> "alltoall"
+    #: (``kernels.dispatch.resolve_halo``).
+    halo: Optional[str] = None
     #: mesh axes the shard-map backend shards the frontier over.
     axes: tuple = ("data",)
     #: disable two-level aggregation (§Perf baseline, distributed backend):
@@ -122,3 +140,6 @@ class RunConfig:
             if self.aggregate_kernel is None
             else self.aggregate_kernel
         )
+
+    def resolve_halo(self) -> str:
+        return resolve_halo(self.halo)

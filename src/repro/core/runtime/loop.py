@@ -28,7 +28,9 @@ import numpy as np
 
 from repro.core import aggregation
 from repro.core.api import MiningApp
-from repro.core.graph import DeviceGraph, Graph, to_device
+from repro.core.graph import (
+    DeviceGraph, Graph, PartitionedGraph, to_device, to_partitioned,
+)
 from repro.core.runtime import checkpoint as checkpoint_lib
 from repro.core.runtime import programs
 from repro.core.runtime.backend import ExecutionBackend
@@ -59,9 +61,21 @@ class SuperstepRuntime:
     ) -> None:
         from repro.core.runtime.serial import SerialBackend
 
-        self.g = to_device(graph) if isinstance(graph, Graph) else graph
-        self.app = app
         self.config = config if config is not None else RunConfig()
+        if isinstance(graph, PartitionedGraph):
+            self.g = graph
+        elif self.config.graph_partition:
+            # partitioned layout (DESIGN.md §11): CSR shards + adjacency
+            # tiles replace the replicated DeviceGraph; a DeviceGraph input
+            # is re-partitioned (elastic restore across layouts)
+            self.g = to_partitioned(
+                graph,
+                self.config.graph_partition,
+                self.config.partition_balance,
+            )
+        else:
+            self.g = to_device(graph) if isinstance(graph, Graph) else graph
+        self.app = app
         self.backend = backend if backend is not None else SerialBackend()
         self.store = self.backend.bind(self.g, self.app, self.config)
 

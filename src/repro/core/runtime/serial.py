@@ -162,13 +162,17 @@ class SerialBackend(ExecutionBackend):
             # a chunk partial or eager compaction overflowed: the carried
             # state is unrecoverable on device, so re-fold from the waves
             # (whose pristine partials re-merge at the exact capacity).
-            # The step's distinct count is clearly beyond agg_qcap, so
-            # stop paying for per-chunk partials for the rest of the run —
-            # the wave re-bin IS the cheaper path for pattern-rich graphs.
+            # The unclamped distinct count rode the same corruption-flag
+            # drain, so grow ``agg_qcap`` pow2-style and rebuild the chunk
+            # program at the larger partial capacity — later supersteps
+            # keep carrying partials instead of silently falling back to
+            # wave re-bins for the rest of the run (labeled graphs like
+            # mico cross the default cap with ~37k size-3 quick codes;
+            # BENCH_5's carried-partial regression).
             self._run_qcap = max(
                 self._run_qcap, next_pow2(max(lvl1.observed_n, 1))
             )
-            self._disable_carried_partials()
+            self._grow_carried_partials(self._run_qcap)
             lvl1 = self._fold_waves(blocks, size)
             res = lvl1.finish()
         uniq, counts_q, nbytes = res
@@ -192,11 +196,15 @@ class SerialBackend(ExecutionBackend):
         self._agg_blocks, self._agg_size = blocks, size
         return agg, None
 
-    def _disable_carried_partials(self) -> None:
-        """Swap the chunk program for the partial-free variant (process-
-        wide cache makes this cheap when seen before), keeping the compile
-        accounting consistent across the swap."""
-        if not self.with_aggregates:
+    def _grow_carried_partials(self, qcap: int) -> None:
+        """Swap the chunk program for one whose per-chunk level-1 partial
+        is bound at the grown pow2 ``qcap`` (process-wide cache makes this
+        cheap when seen before), keeping the compile accounting consistent
+        across the swap. Carried partials stay ON — the old behaviour
+        (dropping to wave re-bins for the rest of the run) silently
+        forfeited the O(Q) aggregation path on every labeled graph whose
+        distinct quick-code count crossed the default cap once."""
+        if not self.with_aggregates or qcap <= self._agg_qcap:
             return
         old = programs.jit_cache_size(self._expand_fn)
         done = (
@@ -204,15 +212,16 @@ class SerialBackend(ExecutionBackend):
             if old is not None and self._cache_before is not None
             else None
         )
-        self.with_aggregates = False
+        self._agg_qcap = qcap
         self._expand_fn = programs.make_expand_fn(
             self.app, self.app.mode,
             use_pallas=self._use_pallas,
             fused=self.config.fused_expand,
             interpret=self.config.pallas_interpret,
             compact_kernel=self.config.resolve_compact_kernel(),
-            with_patterns=False,
-            with_aggregates=False,
+            with_patterns=self.with_patterns,
+            with_aggregates=True,
+            agg_qcap=self._agg_qcap,
             aggregate_kernel=self._agg_kernel,
             with_local_verts=self.app.wants_domains,
         )

@@ -36,11 +36,13 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import aggregation, explore, pattern as pattern_lib
 from repro.core.api import MiningApp
+from repro.core.graph import PartitionedGraph
 from repro.core.runtime import programs
 from repro.core.runtime.backend import ExecutionBackend
 from repro.core.runtime.config import next_pow2
 from repro.core.store import FrontierStore, make_store
 from repro.kernels import aggregate as agg_kernel_lib
+from repro.kernels import gather as gather_kernel_lib
 
 try:  # jax >= 0.6 exports shard_map at top level
     shard_map = jax.shard_map
@@ -140,6 +142,141 @@ def make_sharded_expand(app: MiningApp, mesh: Mesh, axes=("data",),
             in_specs=(spec_in, spec_in),
             out_specs=(spec_in,) * n_out,
         )(members, n_valid)
+
+    return step
+
+
+def make_sharded_expand_partitioned(app: MiningApp, mesh: Mesh,
+                                    axes=("data",), halo: str = "alltoall",
+                                    use_pallas: bool = False, interpret=None,
+                                    compact_kernel: bool = False,
+                                    with_patterns: bool = False):
+    """The partitioned superstep (DESIGN.md §11): halo exchange + fused step.
+
+    Each worker holds ONE CSR shard + adjacency tile of the graph
+    (``PartitionedGraph``, in_specs split the shard-stacked tables over the
+    mesh; vertex content stays replicated). Before expanding, the worker
+    derives its halo — the unique vertices its frontier slice touches —
+    and fetches their neighbour rows from the owning shards *inside the
+    jitted program*:
+
+      * ``halo="alltoall"``: a position-aligned request matrix (W, H) of
+        vertex ids goes through ONE ``all_to_all``; owners gather the
+        requested rows from their local shard and a second ``all_to_all``
+        returns them. Wire bytes scale with the halo, never the graph.
+      * ``halo="gather"``: ragged fallback — ``all_gather`` the full shard
+        tables and index locally (bytes scale with the graph; always lowers).
+
+    The fetched rows form an ``explore.TileView`` and the worker runs the
+    SAME fused chunk program as every other backend. Both collectives live
+    inside the one program, so the superstep keeps its single unclamped-
+    count host sync — no new syncs appear.
+    """
+
+    mode = app.mode
+    spec_in = P(axes)
+    rep = P()
+
+    @functools.partial(jax.jit, static_argnames=("out_cap",))
+    def step(pg, members, n_valid, out_cap: int):
+        w = pg.n_parts
+        n = pg.n
+        rows = pg.tile_rows
+
+        def worker(pg_l, members, n_valid):
+            m, nv = members[0], n_valid[0]
+            # static halo capacity (a function of the chunk shape alone):
+            # overflow is impossible by construction, so the output contract
+            # of the fused step — and the drain protocol — are untouched
+            cap = explore.halo_cap(m.shape, mode, n)
+            verts = explore.halo_vertices(pg_l, m, nv, mode)
+            uniq, _ = gather_kernel_lib.halo_unique(
+                verts, n, cap,
+                use_kernel=compact_kernel, interpret=interpret,
+            )
+            ok = uniq < n
+            safe = jnp.clip(uniq, 0, n - 1)
+            own = jnp.clip(
+                jnp.searchsorted(pg_l.part_offsets, safe, side="right") - 1,
+                0, w - 1,
+            ).astype(jnp.int32)
+
+            if halo == "gather":
+                # ragged all-gather fallback: full shard tables on the wire
+                fi = jnp.clip(
+                    own * rows + (safe - pg_l.part_offsets[own]),
+                    0, w * rows - 1,
+                ).astype(jnp.int32)
+
+                def fetch(tbl, fill):
+                    full = jax.lax.all_gather(tbl, axes)      # (W, rows, ·)
+                    t = full.reshape(w * rows, tbl.shape[-1])[fi]
+                    return jnp.where(ok[:, None], t, fill)
+            else:
+                # all-to-all halo: req[s, i] = uniq[i] iff shard s owns it
+                rank = _linear_rank(axes)
+                my_lo = pg_l.part_offsets[rank]
+                req = jnp.where(
+                    (own[None, :] == jnp.arange(w, dtype=jnp.int32)[:, None])
+                    & ok[None, :],
+                    uniq[None, :], -1,
+                ).astype(jnp.int32)                           # (W, cap)
+                got = jax.lax.all_to_all(req, axes, 0, 0)
+                loc = got - my_lo
+                inr = (got >= 0) & (loc >= 0) & (loc < rows)
+                sl = jnp.clip(loc, 0, rows - 1)
+
+                def fetch(tbl, fill):
+                    resp = jnp.where(inr[:, :, None], tbl[sl], fill)
+                    back = jax.lax.all_to_all(resp, axes, 0, 0)
+                    t = back[own, jnp.arange(cap)]
+                    return jnp.where(ok[:, None], t, fill)
+
+            nbr_t = fetch(pg_l.nbr_sh[0], jnp.int32(-1))
+            if mode == "edge":
+                ned_t = fetch(pg_l.nbr_eid_sh[0], jnp.int32(-1))
+                adj_t = jnp.zeros((cap, 1), jnp.uint32)
+            else:
+                adj_t = fetch(pg_l.adj_sh[0], jnp.uint32(0))
+                ned_t = jnp.zeros((cap, 0), jnp.int32)
+            view = explore.TileView(
+                uniq=uniq,
+                labels=pg_l.labels,
+                edge_uv=pg_l.edge_uv,
+                edge_labels=pg_l.edge_labels,
+                nbr_t=nbr_t,
+                nbr_eid_t=ned_t,
+                adj_t=adj_t,
+            )
+            children, count, codes, lv, ngen, ncanon = explore.fused_chunk_step(
+                view, m, nv, out_cap,
+                mode=mode,
+                app=app,
+                with_patterns=with_patterns,
+                use_pallas=use_pallas,
+                compact_kernel=compact_kernel,
+                interpret=interpret,
+            )
+            outs = (children[None], count[None], ngen[None], ncanon[None])
+            if with_patterns:
+                outs += (codes[None], lv[None])
+            return outs
+
+        pg_specs = PartitionedGraph(
+            part_offsets=rep, labels=rep, edge_uv=rep, edge_labels=rep,
+            nbr_sh=spec_in, nbr_eid_sh=spec_in, deg_sh=spec_in,
+            adj_sh=spec_in,
+        )
+        mapper = (
+            shard_map_pallas_ok if (use_pallas or compact_kernel) else shard_map
+        )
+        n_out = 6 if with_patterns else 4
+        return mapper(
+            worker,
+            mesh=mesh,
+            in_specs=(pg_specs, spec_in, spec_in),
+            out_specs=(spec_in,) * n_out,
+        )(pg, members, n_valid)
 
     return step
 
@@ -345,13 +482,31 @@ class ShardMapBackend(ExecutionBackend):
         #: per-worker distinct-table capacity (pattern-sized, so gathered
         #: bytes stay O(Q)); grows pow2 after a host-fallback step
         self._shard_qcap = next_pow2(max(config.agg_qcap, 1))
-        self._expand = make_sharded_expand(
-            app, self.mesh, self.axes,
-            use_pallas=resolved_pallas,
-            interpret=config.pallas_interpret,
-            compact_kernel=config.resolve_compact_kernel(),
-            with_patterns=self.with_patterns,
-        )
+        self._partitioned = isinstance(self.g, PartitionedGraph)
+        if self._partitioned:
+            if self.g.n_parts != self.n_shards:
+                raise ValueError(
+                    f"graph_partition={self.g.n_parts} must equal the "
+                    f"shard-map worker count ({self.n_shards}): the "
+                    f"in-program halo exchange maps one CSR shard per worker"
+                )
+            self._halo = config.resolve_halo()
+            self._expand = make_sharded_expand_partitioned(
+                app, self.mesh, self.axes,
+                halo=self._halo,
+                use_pallas=resolved_pallas,
+                interpret=config.pallas_interpret,
+                compact_kernel=config.resolve_compact_kernel(),
+                with_patterns=self.with_patterns,
+            )
+        else:
+            self._expand = make_sharded_expand(
+                app, self.mesh, self.axes,
+                use_pallas=resolved_pallas,
+                interpret=config.pallas_interpret,
+                compact_kernel=config.resolve_compact_kernel(),
+                with_patterns=self.with_patterns,
+            )
         self._aggregate = make_sharded_aggregate(self.mesh, self.axes)
         self._quick_bin = make_sharded_quick_bin(
             self.mesh, self.axes,
@@ -560,6 +715,9 @@ class ShardMapBackend(ExecutionBackend):
         n_valid = (np.arange(per)[None, :] < counts_sh[:, None]) * size
         members_dev = jnp.asarray(shards)
         n_valid_dev = jnp.asarray(n_valid.astype(np.int32))
+        halo_bytes = (
+            self._halo_bytes(per, size) if self._partitioned else 0
+        )
         while True:
             outs = self._expand(g, members_dev, n_valid_dev,
                                 out_cap=self.capacity)
@@ -567,6 +725,7 @@ class ShardMapBackend(ExecutionBackend):
             ccount = np.asarray(ccount)     # THE per-step control sync
             st.n_host_syncs += 1
             st.n_chunks += 1
+            st.collective_bytes += halo_bytes
             if int(ccount.max()) <= self.capacity:
                 break
             # counts are exact (unclamped compaction), so exactly one
@@ -600,6 +759,23 @@ class ShardMapBackend(ExecutionBackend):
                 [lv_all[s, : ccount[s]] for s in range(n_shards)]
             ),
         )
+
+    def _halo_bytes(self, per: int, size: int) -> int:
+        """Per-dispatch halo-exchange wire bytes, computed host-side: the
+        halo capacity is a static function of the chunk shape
+        (``explore.halo_cap``) and row widths come from the shard tables,
+        so the accounting needs no extra device output or sync."""
+        g, mode, w = self.g, self.app.mode, self.n_shards
+        cap = explore.halo_cap((per, size), mode, g.n)
+        if mode == "edge":
+            row = 2 * g.max_degree * 4          # nbr + edge-id rows, int32
+        else:
+            row = (g.max_degree + g.adj_sh.shape[2]) * 4
+        if self._halo == "gather":
+            # every worker all-gathers the full shard tables
+            return w * w * g.tile_rows * row
+        # request all-to-all (vertex ids) + response all-to-all (rows)
+        return w * w * cap * (4 + row)
 
     def end_step(self, store, st) -> None:
         # frontier exchange: what a worker ships (raw rows, or the merged

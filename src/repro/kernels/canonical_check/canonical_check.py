@@ -116,6 +116,77 @@ def canonical_check_pallas(members, n_valid, cand, adj_bits, block_b=1024,
     return out[:b]
 
 
+def _tiles_kernel(members_ref, ranks_ref, nvalid_ref, cand_ref, adj_ref,
+                  out_ref):
+    """Alg. 2 over a gathered halo tile (DESIGN.md §11): ``adj`` holds only
+    the chunk's halo rows, so adjacency is indexed by the members' tile
+    *ranks* while the order tests still compare global member ids — the
+    replicated kernel above uses ``members`` for both, which is exactly
+    what a partitioned bitmap cannot do."""
+    members = members_ref[...]              # (TB, k) int32 global ids
+    ranks = ranks_ref[...]                  # (TB, k) int32 rows into adj
+    nvalid = nvalid_ref[...]                # (TB,)
+    cand = cand_ref[...]                    # (TB,) global ids
+    adj = adj_ref[...]                      # (U, W) uint32 — VMEM resident
+
+    tb, k = members.shape
+    pos = jax.lax.broadcasted_iota(jnp.int32, (tb, k), 1)
+    valid = pos < nvalid[:, None]
+
+    safe_r = jnp.clip(ranks, 0, adj.shape[0] - 1)
+    safe_c = jnp.maximum(cand, 0)
+    word = adj[safe_r, safe_c[:, None] // WORD_BITS]
+    bit = (word >> (safe_c[:, None] % WORD_BITS).astype(jnp.uint32)) & jnp.uint32(1)
+    neigh = (
+        (bit == 1) & valid & (members >= 0) & (ranks >= 0)
+        & (cand[:, None] >= 0)
+    )
+
+    first_ok = jnp.where(nvalid > 0, members[:, 0] < cand, True)
+    found_after = jnp.cumsum(neigh.astype(jnp.int32), axis=1) > 0
+    found_before = jnp.concatenate(
+        [jnp.zeros((tb, 1), dtype=bool), found_after[:, :-1]], axis=1
+    )
+    violation = valid & found_before & (members > cand[:, None])
+    out_ref[...] = first_ok & ~violation.any(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def canonical_check_tiles_pallas(members, ranks, n_valid, cand, adj_tile,
+                                 block_b=1024, interpret=None):
+    """Tile-indexed Alg.-2 check: members/ranks (B, k) int32, n_valid (B,),
+    cand (B,) global ids, adj_tile (U, W) uint32 gathered halo rows
+    (``ranks`` index ``adj_tile``; out-of-tile ranks < 0 read as
+    non-adjacent). Returns (B,) bool; any ``B`` accepted."""
+    b, k = members.shape
+    u, w = adj_tile.shape
+    if b == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    bp, block_b, members, n_valid, cand = _pad_batch(
+        block_b, members, n_valid, cand
+    )
+    if bp > b:
+        ranks = jnp.concatenate(
+            [ranks, jnp.full((bp - b, k), -1, ranks.dtype)]
+        )
+
+    out = pl.pallas_call(
+        _tiles_kernel,
+        grid=(bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((u, w), lambda i: (0, 0)),   # halo tile VMEM-resident
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bp,), jnp.bool_),
+        interpret=resolve_interpret(interpret),
+    )(members, ranks, n_valid, cand, adj_tile)
+    return out[:b]
+
+
 # ---------------------------------------------------------------------------
 # Fused expansion + canonicality kernel
 # ---------------------------------------------------------------------------

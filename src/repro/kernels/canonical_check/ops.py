@@ -22,10 +22,13 @@ inside the kernel wrappers themselves — callers never pad.
 """
 from __future__ import annotations
 
-from repro.core import canonical
+import jax.numpy as jnp
+
+from repro.core import bitset, canonical
 from repro.core.graph import DeviceGraph
 from repro.kernels.canonical_check.canonical_check import (
     canonical_check_pallas,
+    canonical_check_tiles_pallas,
     expand_canonical_pallas,
 )
 
@@ -38,15 +41,22 @@ FUSED_TEMP_BUDGET = 4 * 2**20   # per-block (block_c, k, k, D) temporaries
 FUSED_TEMP_ARRAYS = 6           # ~concurrent 4-byte k*k*D-shaped temps
 
 
-def fits_vmem(g: DeviceGraph) -> bool:
-    """True when the packed adjacency bitmap is VMEM-resident-sized."""
-    return g.adj_bits.size * 4 <= VMEM_BITMAP_LIMIT
+def fits_vmem(g) -> bool:
+    """True when the packed adjacency bitmap is VMEM-resident-sized.
+    Graphs without a replicated bitmap (``PartitionedGraph``) never fit —
+    their kernel path is the tile-indexed check below."""
+    adj = getattr(g, "adj_bits", None)
+    return adj is not None and adj.size * 4 <= VMEM_BITMAP_LIMIT
 
 
-def fits_vmem_fused(g: DeviceGraph) -> bool:
+def fits_vmem_fused(g) -> bool:
     """True when bitmap + neighbour table both fit for the fused kernel
     (per-block temporaries are bounded separately by _fused_block_c)."""
-    return (g.adj_bits.size + g.nbr.size) * 4 <= VMEM_FUSED_LIMIT
+    adj = getattr(g, "adj_bits", None)
+    return (
+        adj is not None
+        and (adj.size + g.nbr.size) * 4 <= VMEM_FUSED_LIMIT
+    )
 
 
 def _fused_block_c(k: int, d: int) -> int:
@@ -68,6 +78,43 @@ def canonical_check(g: DeviceGraph, members, n_valid, cand, *,
         return canonical.vertex_check(g, members, n_valid, cand)
     return canonical_check_pallas(
         members, n_valid, cand, g.adj_bits, block_b=block_b, interpret=interpret
+    )
+
+
+def canonical_check_tiles_ref(members, ranks, n_valid, cand, adj_tile):
+    """jnp route of the tile-indexed Alg.-2 check, exact kernel contract:
+    adjacency read at the members' halo-tile ``ranks`` (< 0 = not in tile =
+    not adjacent), order tests on the global ids."""
+    b, k = members.shape
+    pos = jnp.arange(k)[None, :]
+    valid = pos < n_valid[:, None]
+    first_ok = jnp.where(n_valid > 0, members[:, 0] < cand, True)
+    neigh = (
+        bitset.test_bit(adj_tile, ranks, cand[:, None])
+        & valid & (members >= 0)
+    )
+    found_after = jnp.cumsum(neigh.astype(jnp.int32), axis=1) > 0
+    found_before = jnp.concatenate(
+        [jnp.zeros((b, 1), dtype=bool), found_after[:, :-1]], axis=1
+    )
+    violation = valid & found_before & (members > cand[:, None])
+    return first_ok & ~violation.any(axis=1)
+
+
+def canonical_check_tiles(members, ranks, n_valid, cand, adj_tile, *,
+                          use_pallas: bool = False, block_b=1024,
+                          interpret=None):
+    """Tile-indexed Alg.-2 dispatch (vertex mode, partitioned layout):
+    kernel path when the gathered halo tile is VMEM-resident-sized, jnp
+    route otherwise — the halo is frontier-sized, not graph-sized, so the
+    kernel stays live on graphs whose full bitmap long overflowed
+    :data:`VMEM_BITMAP_LIMIT`."""
+    if not use_pallas or adj_tile.size * 4 > VMEM_BITMAP_LIMIT:
+        return canonical_check_tiles_ref(members, ranks, n_valid, cand,
+                                         adj_tile)
+    return canonical_check_tiles_pallas(
+        members, ranks, n_valid, cand, adj_tile,
+        block_b=block_b, interpret=interpret,
     )
 
 

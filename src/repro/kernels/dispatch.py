@@ -28,6 +28,29 @@ def resolve_interpret(interpret: Optional[bool] = None) -> bool:
     return bool(interpret)
 
 
+#: halo-exchange strategies of the partitioned layout (DESIGN.md §11).
+HALO_STRATEGIES = ("alltoall", "gather")
+
+
+def resolve_halo(halo: Optional[str] = None) -> str:
+    """Map the halo knob (``RunConfig.halo``) to a concrete strategy.
+
+    ``None``/``"auto"`` -> ``"alltoall"``: the position-aligned
+    request/response all-to-all ships only the rows each worker actually
+    asked for (O(halo) per worker). ``"gather"`` is the ragged fallback —
+    every worker all-gathers the full shard tables (O(n) per worker), kept
+    for meshes whose all-to-all lowering is unavailable and as the
+    equivalence oracle."""
+    if halo is None or halo == "auto":
+        return "alltoall"
+    if halo not in HALO_STRATEGIES:
+        raise ValueError(
+            f"unknown halo strategy {halo!r} (expected one of "
+            f"{HALO_STRATEGIES} or 'auto')"
+        )
+    return halo
+
+
 def default_use_pallas() -> bool:
     """Engine-level auto knob (``EngineConfig.use_pallas=None``): route hot
     paths through the Pallas kernels only where they compile to native code;
