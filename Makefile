@@ -13,8 +13,9 @@ test-fast:
 	$(PY) -m pytest -q -m "not slow"
 
 # full benchmark sweep (one bench per paper table/figure), with the
-# machine-readable trajectory written to BENCH_6.json (BENCH_5.json and
-# earlier are committed history — never overwritten)
+# machine-readable trajectory written to BENCH_<version>.json — the
+# version lives in benchmarks/common.py (BENCH_VERSION); earlier
+# BENCH_*.json files are committed history, never overwritten
 bench:
 	PYTHONPATH=src:. python -m benchmarks.run --json
 
@@ -22,7 +23,8 @@ bench:
 # fused-superstep gate (syncs-per-step + speedup vs the PR-2 chunk loop),
 # the checkpoint-overhead gate (<=5% of superstep wall time), the
 # aggregation-bytes gate (device level 1 >=10x below B*24 per superstep),
-# and the graph-shard gate (per-device adjacency bytes <= 1/W at W=8,
-# partitioned mining bit-identical to replicated)
+# the graph-shard gate (per-device adjacency bytes <= 1/W at W=8,
+# partitioned mining bit-identical to replicated), and the observability
+# gate (traced run ≤1% overhead + zero extra syncs, ≥95% phase coverage)
 bench-smoke:
 	PYTHONPATH=src:. python -m benchmarks.run --smoke --json

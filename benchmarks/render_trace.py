@@ -1,0 +1,111 @@
+"""Render / validate an exported superstep trace (DESIGN.md §12).
+
+    PYTHONPATH=src python benchmarks/render_trace.py run.trace.json
+    PYTHONPATH=src python benchmarks/render_trace.py --check run.trace.json
+
+Default mode prints a per-phase summary of the run: span counts, total
+wall per phase, the share of superstep wall the named phases cover, and
+the counter tracks' final values. ``--check`` validates the Chrome
+trace-event schema (every "X" event carries name/ph/ts/dur/pid/tid —
+the subset Perfetto's importer needs) plus the §12 coverage gate
+(phase spans account for >= 95% of superstep wall) and exits non-zero
+on any problem — CI runs exactly this against the traced-run artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+from repro.core import obs
+
+#: the acceptance gate: named phase spans must account for this share of
+#: the superstep wall (ISSUE 7 / DESIGN.md §12).
+COVERAGE_GATE = 0.95
+
+
+def summarize(doc) -> str:
+    """Human-readable per-phase roll-up of one trace document."""
+    by_name = defaultdict(lambda: [0, 0.0])   # name -> [count, total_us]
+    supersteps = 0
+    for e in doc.get("traceEvents", []):
+        if e.get("ph") != "X":
+            continue
+        rec = by_name[e["name"]]
+        rec[0] += 1
+        rec[1] += float(e["dur"])
+        if e["name"] == "superstep":
+            supersteps += 1
+    other = doc.get("otherData", {})
+    cov = obs.phase_coverage(doc)
+    lines = [
+        f"backend={other.get('backend', '?')}"
+        f" wall={other.get('wall_time_s', '?')}s"
+        f" supersteps={supersteps}"
+        f" coverage={cov['coverage']:.4f}"
+    ]
+    for name, (count, total_us) in sorted(
+        by_name.items(), key=lambda kv: -kv[1][1]
+    ):
+        lines.append(
+            f"  {name:<16} n={count:<5} total={total_us / 1e6:.4f}s"
+        )
+    metrics = other.get("metrics", {})
+    for kind in ("counters", "gauges"):
+        for k, v in sorted(metrics.get(kind, {}).items()):
+            lines.append(f"  [{kind[:-1]}] {k} = {v}")
+    return "\n".join(lines)
+
+
+def check(doc) -> list:
+    """Schema + coverage problems of one trace document (empty == pass)."""
+    problems = obs.validate_chrome_trace(doc)
+    cov = obs.phase_coverage(doc)
+    if cov["coverage"] < COVERAGE_GATE:
+        problems.append(
+            f"phase coverage {cov['coverage']:.4f} below the "
+            f"{COVERAGE_GATE:.0%} gate "
+            f"(covered {cov['covered_us']:.0f}us of {cov['total_us']:.0f}us)"
+        )
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="+", metavar="TRACE_JSON",
+                    help="exported .trace.json file(s)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate schema + coverage gate; exit 1 on problems")
+    opts = ap.parse_args(argv)
+    failures = 0
+    for path in opts.paths:
+        with open(path) as f:
+            doc = json.load(f)
+        problems = check(doc)
+        if opts.check:
+            if problems:
+                failures += 1
+                print(f"{path}: FAIL")
+                for p in problems:
+                    print(f"  - {p}")
+            else:
+                cov = obs.phase_coverage(doc)
+                n = sum(
+                    1 for e in doc["traceEvents"] if e.get("ph") == "X"
+                )
+                print(
+                    f"{path}: OK ({n} spans, "
+                    f"coverage={cov['coverage']:.4f})"
+                )
+        else:
+            print(f"== {path}")
+            print(summarize(doc))
+            for p in problems:
+                print(f"  !! {p}")
+            failures += bool(problems)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,12 +5,13 @@ Prints ``name,us_per_call,derived`` CSV rows. The dry-run/roofline tables
 ``python -m repro.launch.dryrun``; ``bench_roofline`` summarises them here.
 
 ``--smoke`` runs the mining-perf ladder plus the fused-superstep,
-checkpoint-overhead, aggregation-bytes, and graph-shard gates — the quick sanity sweep
-behind
-``make bench-smoke``. ``--json [PATH]`` additionally writes every emitted
-row (us_per_call + parsed derived stats) as machine-readable JSON
-(default ``BENCH_6.json``), the perf trajectory future PRs gate against
-instead of an empty history.
+checkpoint-overhead, aggregation-bytes, graph-shard, and observability
+gates — the quick sanity sweep behind ``make bench-smoke``.
+``--json [PATH]`` additionally writes every emitted row (us_per_call +
+parsed derived stats) as machine-readable JSON — the default path is
+``benchmarks.common.DEFAULT_BENCH_JSON`` (``BENCH_<version>.json``, one
+constant shared with the Makefile and CI) — the perf trajectory future
+PRs gate against instead of an empty history.
 """
 from __future__ import annotations
 
@@ -20,6 +21,8 @@ import platform
 import sys
 import traceback
 
+from benchmarks.common import DEFAULT_BENCH_JSON
+
 
 def main(argv=None) -> None:
     args = argparse.ArgumentParser(description=__doc__)
@@ -28,9 +31,9 @@ def main(argv=None) -> None:
         help="run only the fast mining-perf ladder + superstep gate",
     )
     args.add_argument(
-        "--json", nargs="?", const="BENCH_6.json", default=None,
+        "--json", nargs="?", const=DEFAULT_BENCH_JSON, default=None,
         metavar="PATH",
-        help="write emitted rows as JSON (default path: BENCH_6.json)",
+        help=f"write emitted rows as JSON (default: {DEFAULT_BENCH_JSON})",
     )
     opts = args.parse_args(argv)
     from benchmarks import (
@@ -40,6 +43,7 @@ def main(argv=None) -> None:
         bench_graphshard,
         bench_large,
         bench_mining_perf,
+        bench_obs,
         bench_odag,
         bench_paradigms,
         bench_roofline,
@@ -62,6 +66,7 @@ def main(argv=None) -> None:
         ("checkpoint(§9)", bench_checkpoint.main),
         ("aggregate(§10)", bench_aggregate.main),
         ("graphshard(§11)", bench_graphshard.main),
+        ("obs(§12)", bench_obs.main),
         ("roofline(dry-run)", bench_roofline.main),
     ]
     if opts.smoke:
@@ -71,6 +76,7 @@ def main(argv=None) -> None:
             ("checkpoint(§9)", bench_checkpoint.main),
             ("aggregate(§10)", bench_aggregate.main),
             ("graphshard(§11)", bench_graphshard.main),
+            ("obs(§12)", bench_obs.main),
         ]
     failures = 0
     for name, fn in benches:

@@ -13,7 +13,9 @@ per chunk), and ``compact_kernel`` routes compaction through the Pallas
 stream-compaction kernel (auto-on where Pallas compiles natively).
 ``checkpoint_dir=...`` persists every sealed superstep so an interrupted
 run resumes with identical output (DESIGN.md §9,
-``examples/resume_after_crash.py``).
+``examples/resume_after_crash.py``). ``trace=True, trace_dir="traces"``
+exports a Perfetto-loadable trace of the run's phase spans — zero
+overhead when off (DESIGN.md §12, ``examples/traced_run.py``).
 """
 from repro.core import EngineConfig, graph, run
 from repro.core.apps import MotifsApp

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import obs
 from repro.core import pattern as pattern_lib
 from repro.kernels import aggregate as agg_kernel
 
@@ -489,9 +490,9 @@ def build_step_aggregates(table: pattern_lib.PatternTable,
         n_canonical=len(table.canon_codes),
         n_iso_checks=table.n_iso_checks,
     )
-    st.n_quick_patterns = agg.n_quick
-    st.n_canonical_patterns = agg.n_canonical
-    st.n_iso_checks = agg.n_iso_checks
+    obs.set_stat(st, "n_quick_patterns", agg.n_quick)
+    obs.set_stat(st, "n_canonical_patterns", agg.n_canonical)
+    obs.set_stat(st, "n_iso_checks", agg.n_iso_checks)
     return agg
 
 

@@ -26,6 +26,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import obs
 from repro.core.aggregation import StepAggregates
 from repro.core.api import MiningApp
 from repro.core.graph import DeviceGraph
@@ -100,7 +101,7 @@ class ExecutionBackend(abc.ABC):
             codes, lv = carried
         else:
             codes, lv = self.quick_codes(blocks, size)
-        st.bytes_to_host += codes.nbytes + lv.nbytes
+        obs.count(st, "bytes_to_host", codes.nbytes + lv.nbytes)
         return self.aggregate(codes, lv, st)
 
     def alpha_rows(self, pk: np.ndarray, st: StepStats) -> np.ndarray:

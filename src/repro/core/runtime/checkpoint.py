@@ -33,6 +33,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import obs
 from repro.core.aggregation import StepAggregates
 from repro.core.graph import DeviceGraph
 from repro.core.stats import StepStats
@@ -304,5 +305,9 @@ class Checkpointer:
             app_fp=self.app_fp,
             graph_layout=self.graph_layout,
         )
-        save(checkpoint_path(self.directory, step), state)
+        path = checkpoint_path(self.directory, step)
+        save(path, state)
+        # checkpoint size as a metrics gauge (DESIGN.md §12) — the traced
+        # run's counter track shows the persisted cut growing per cadence
+        obs.gauge("checkpoint_bytes", os.path.getsize(path), step=step)
         return time.perf_counter() - t0

@@ -123,6 +123,25 @@ class RunConfig:
     checkpoint_dir: Optional[str] = None
     #: write a checkpoint every this-many supersteps (1 = every seal).
     checkpoint_every: int = 1
+    #: collect host phase spans + metrics for this run (DESIGN.md §12).
+    #: The default False path adds ZERO device syncs and no span
+    #: allocation — the observability layer's hard contract, guarded by
+    #: ``benchmarks/bench_obs.py`` and ``tests/test_obs.py``.
+    trace: bool = False
+    #: directory the traced run exports to: a Perfetto-loadable Chrome
+    #: trace (``run-<pid>-<seq>.trace.json``) plus a live-tailable JSONL
+    #: event stream (``.events.jsonl``). ``trace=True`` with no directory
+    #: keeps the spans in memory only (``SuperstepRuntime.observer``).
+    trace_dir: Optional[str] = None
+    #: blocking ``block_until_ready`` phase boundaries: host phase laps
+    #: measure device COMPLETION instead of dispatch, and the in-program
+    #: tile-gather / halo-exchange stages get probe-measured into
+    #: ``StepStats.t_gather``/``t_exchange``. Diagnostic mode — it
+    #: serialises the pipeline; never implied by ``trace`` alone.
+    trace_sync: bool = False
+    #: print one structured progress line every this-many supersteps
+    #: (0 = silent). Works with or without ``trace``.
+    log_every: int = 0
 
     def resolve_use_pallas(self) -> bool:
         return default_use_pallas() if self.use_pallas is None else self.use_pallas

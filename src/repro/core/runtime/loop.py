@@ -26,7 +26,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import aggregation
+from repro.core import aggregation, obs
 from repro.core.api import MiningApp
 from repro.core.graph import (
     DeviceGraph, Graph, PartitionedGraph, to_device, to_partitioned,
@@ -44,6 +44,9 @@ class MiningResult:
     aggregates: List[aggregation.StepAggregates]
     stats: RunStats
     embeddings: Dict[int, np.ndarray]             # size -> (B, size) arrays
+    #: Chrome trace exported by this run (``trace=True`` + ``trace_dir``;
+    #: DESIGN.md §12), None otherwise.
+    trace_path: Optional[str] = None
 
     def pattern_count(self, code) -> int:
         return self.patterns.get(tuple(int(x) for x in code), 0)
@@ -109,6 +112,13 @@ class SuperstepRuntime:
             if config.checkpoint_dir is not None
             else None
         )
+        #: the run's observability bundle (DESIGN.md §12): tracer + metrics
+        #: registry + exporters, all no-ops unless ``config.trace`` /
+        #: ``log_every`` asked for them. Kept on the runtime so tests and
+        #: tools can read the spans of an in-memory traced run.
+        observer = obs.RunObserver(config, backend.name)
+        self.observer = observer
+        observer.start()
         t_start = time.perf_counter()
 
         if state is None:
@@ -135,121 +145,165 @@ class SuperstepRuntime:
         #: Dropped across a resume (recomputed from the store, same result).
         carried: Optional[tuple] = None
 
-        for step in range(first_step, config.max_steps + 1):
-            b = store.n_rows
-            if b == 0:
-                break
-            st = StepStats(step=step, size=size, n_frontier=b)
-            st.frontier_bytes = store.raw_bytes
-            if store.kind == "odag":
-                st.odag_bytes = store.stored_bytes
-            timer = Timer()
+        try:
+            for step in range(first_step, config.max_steps + 1):
+                b = store.n_rows
+                if b == 0:
+                    break
+                st = StepStats(step=step, size=size, n_frontier=b)
+                st.frontier_bytes = store.raw_bytes
+                if store.kind == "odag":
+                    st.odag_bytes = store.stored_bytes
+                timer = Timer()
+                done = False
+                with obs.span("superstep", step=step, size=size, frontier=b):
+                    # ---- re-materialise the frontier (waves / slices) ----
+                    with obs.span("materialize", step=step):
+                        blocks = backend.begin_step(store, st)
+                        # extraction may resurrect pattern-pruned rows (a
+                        # superset of the appended rows; see ODAGStore) —
+                        # stats count what is actually mined
+                        st.n_frontier = sum(len(blk) for blk in blocks)
+                    obs.set_stat(st, "t_storage", timer.lap())
 
-            # ---- re-materialise the frontier (waves / worker slices) -----
-            blocks = backend.begin_step(store, st)
-            # extraction may resurrect pattern-pruned rows (a superset of
-            # the appended rows; see ODAGStore) — stats count what is
-            # actually mined
-            st.n_frontier = sum(len(blk) for blk in blocks)
-            st.t_storage = timer.lap()
+                    # ---- pattern aggregation of this step's embeddings
+                    # (end of the step that generated them, per Algorithm
+                    # 1): level-1 state either carried from the chunk
+                    # programs that produced the rows (fused, raw store) or
+                    # recomputed by the backend; a None canon_slot means
+                    # level 1 stayed on device (DESIGN.md §10) ------------
+                    canon_slot = None
+                    agg = None
+                    if app.wants_patterns:
+                        with obs.span(
+                            "aggregate", step=step, frontier=st.n_frontier
+                        ), obs.annotate("aggregate"):
+                            agg, canon_slot = backend.aggregate_step(
+                                blocks, size, carried, st
+                            )
+                            result.aggregates.append(agg)
+                    carried = None
+                    obs.set_stat(st, "t_aggregate", timer.lap())
 
-            # ---- pattern aggregation of this step's embeddings (end of
-            # the step that generated them, per Algorithm 1): level-1 state
-            # either carried from the chunk programs that produced the rows
-            # (fused, raw store) or recomputed by the backend; a None
-            # canon_slot means level 1 stayed on device (DESIGN.md §10) ----
-            canon_slot = None
-            agg = None
-            if app.wants_patterns:
-                agg, canon_slot = backend.aggregate_step(
-                    blocks, size, carried, st
-                )
-                result.aggregates.append(agg)
-            carried = None
-            st.t_aggregate = timer.lap()
+                    # ---- alpha: aggregation filter on the frontier -------
+                    with obs.span("alpha", step=step):
+                        if agg is not None:
+                            if canon_slot is not None:
+                                # host path: per-row alpha over per-row
+                                # canonical slots
+                                alpha = app.aggregation_filter(canon_slot, agg)
+                                surviving = (
+                                    np.unique(canon_slot[alpha])
+                                    if alpha.any()
+                                    else []
+                                )
+                            else:
+                                # device path: alpha at pattern granularity;
+                                # the O(B) row mask only materialises when
+                                # pruning fires
+                                pk = app.pattern_filter(agg)
+                                live = agg.counts > 0
+                                if pk is None:
+                                    surviving = np.flatnonzero(live)
+                                    alpha = None
+                                else:
+                                    pk = np.asarray(pk, dtype=bool)
+                                    surviving = np.flatnonzero(live & pk)
+                                    alpha = (
+                                        backend.alpha_rows(pk, st)
+                                        if not pk.all()
+                                        else None
+                                    )
+                            # beta / outputs: record aggregates of
+                            # surviving patterns
+                            for pc in surviving:
+                                code = tuple(
+                                    int(x) for x in agg.canon_codes[pc]
+                                )
+                                value = int(
+                                    agg.supports[pc]
+                                    if app.wants_domains
+                                    else agg.counts[pc]
+                                )
+                                result.patterns[code] = (
+                                    result.patterns.get(code, 0) + value
+                                )
+                            if alpha is not None and not alpha.all():
+                                blocks = backend.prune(blocks, alpha)
+                        b_live = sum(len(blk) for blk in blocks)
+                        if app.collect_embeddings and b_live:
+                            live = [blk for blk in blocks if len(blk)]
+                            result.embeddings[size] = (
+                                np.asarray(live[0])
+                                if len(live) == 1
+                                else np.concatenate(live, axis=0)
+                            )
 
-            # ---- alpha: aggregation filter on the frontier ---------------
-            if agg is not None:
-                if canon_slot is not None:
-                    # host path: per-row alpha over per-row canonical slots
-                    alpha = app.aggregation_filter(canon_slot, agg)
-                    surviving = (
-                        np.unique(canon_slot[alpha]) if alpha.any() else []
-                    )
-                else:
-                    # device path: alpha at pattern granularity; the O(B)
-                    # row mask only materialises when pruning fires
-                    pk = app.pattern_filter(agg)
-                    live = agg.counts > 0
-                    if pk is None:
-                        surviving = np.flatnonzero(live)
-                        alpha = None
+                    # ---- termination -------------------------------------
+                    if (
+                        app.termination_filter(size)
+                        or b_live == 0
+                        or step == config.max_steps
+                    ):
+                        result.stats.steps.append(st)
+                        done = True
                     else:
-                        pk = np.asarray(pk, dtype=bool)
-                        surviving = np.flatnonzero(live & pk)
-                        alpha = (
-                            backend.alpha_rows(pk, st)
-                            if not pk.all()
-                            else None
-                        )
-                # beta / outputs: record aggregates of surviving patterns
-                for pc in surviving:
-                    code = tuple(int(x) for x in agg.canon_codes[pc])
-                    value = int(
-                        agg.supports[pc] if app.wants_domains else agg.counts[pc]
-                    )
-                    result.patterns[code] = result.patterns.get(code, 0) + value
-                if alpha is not None and not alpha.all():
-                    blocks = backend.prune(blocks, alpha)
-            b_live = sum(len(blk) for blk in blocks)
-            if app.collect_embeddings and b_live:
-                live = [blk for blk in blocks if len(blk)]
-                result.embeddings[size] = (
-                    np.asarray(live[0])
-                    if len(live) == 1
-                    else np.concatenate(live, axis=0)
-                )
+                        # ---- expansion: children appended to the store as
+                        # produced ---------------------------------------
+                        with obs.span(
+                            "expand", step=step, frontier=b_live
+                        ), obs.annotate("expand"):
+                            carried = backend.expand(store, blocks, size, st)
+                            obs.fence(carried)
+                        obs.set_stat(st, "t_expand", timer.lap())
+                        with obs.span("seal", step=step):
+                            store.seal(size + 1)
+                            st.n_children = store.n_rows
+                        obs.count(st, "t_storage", timer.lap())
+                        backend.end_step(store, st)
+                        result.stats.steps.append(st)
 
-            # ---- termination ---------------------------------------------
-            if (
-                app.termination_filter(size)
-                or b_live == 0
-                or step == config.max_steps
-            ):
-                result.stats.steps.append(st)
-                break
+                        # ---- checkpoint at the seal boundary (§9) --------
+                        if (
+                            ckpt is not None
+                            and store.n_rows
+                            and step % max(config.checkpoint_every, 1) == 0
+                        ):
+                            with obs.span(
+                                "checkpoint", step=step
+                            ), obs.annotate("checkpoint"):
+                                obs.set_stat(
+                                    st, "t_checkpoint",
+                                    ckpt.save(
+                                        step=step + 1,
+                                        size=size + 1,
+                                        capacity=backend.capacity,
+                                        store=store,
+                                        result=result,
+                                        wall_time=prior_wall
+                                        + (time.perf_counter() - t_start),
+                                    ),
+                                )
+                observer.step_done(st)
+                if done or store.n_rows == 0:
+                    break
+                size += 1
 
-            # ---- expansion: children appended to the store as produced ---
-            carried = backend.expand(store, blocks, size, st)
-            st.t_expand = timer.lap()
-            store.seal(size + 1)
-            st.n_children = store.n_rows
-            st.t_storage += timer.lap()
-            backend.end_step(store, st)
-            result.stats.steps.append(st)
-
-            # ---- checkpoint at the seal boundary (DESIGN.md §9) ----------
-            if (
-                ckpt is not None
-                and store.n_rows
-                and step % max(config.checkpoint_every, 1) == 0
-            ):
-                st.t_checkpoint = ckpt.save(
-                    step=step + 1,
-                    size=size + 1,
-                    capacity=backend.capacity,
-                    store=store,
-                    result=result,
-                    wall_time=prior_wall + (time.perf_counter() - t_start),
-                )
-
-            if store.n_rows == 0:
-                break
-            size += 1
-
-        result.stats.wall_time = prior_wall + (time.perf_counter() - t_start)
-        backend.finalize(result.stats)
-        return result
+            result.stats.wall_time = prior_wall + (
+                time.perf_counter() - t_start
+            )
+            backend.finalize(result.stats)
+            result.trace_path = observer.finish(
+                wall_time=result.stats.wall_time
+            )
+            return result
+        finally:
+            # exception path: uninstall the tracer/registry so a failed
+            # traced run can't leak observation into later runs; exports
+            # the partial trace (idempotent after a normal finish)
+            observer.finish(
+                wall_time=prior_wall + (time.perf_counter() - t_start)
+            )
 
 
 def resume(

@@ -25,11 +25,13 @@ from __future__ import annotations
 
 from typing import List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, pattern as pattern_lib
+from repro.core import aggregation, explore, obs, pattern as pattern_lib
 from repro.core.api import MiningApp
+from repro.core.graph import PartitionedGraph
 from repro.core.runtime import programs
 from repro.core.runtime.backend import ExecutionBackend
 from repro.core.runtime.config import next_pow2
@@ -100,7 +102,35 @@ class SerialBackend(ExecutionBackend):
         self._signatures = set()
         self._lvl1 = None
         self._table = None
+        self._gather_probe = (
+            self._make_gather_probe()
+            if isinstance(self.g, PartitionedGraph)
+            else None
+        )
         return store
+
+    def _make_gather_probe(self):
+        """Jitted tile-gather probe for ``StepStats.t_gather`` (DESIGN.md
+        §12): ``build_tile_view`` runs INSIDE the fused chunk program, so
+        its share of ``t_expand`` is only separable by re-running the
+        gather stage standalone — a probe dispatch paid exclusively under
+        ``trace_sync=True`` (the diagnostic mode)."""
+        config, mode = self.config, self.app.mode
+        use_pallas = self._use_pallas
+        compact = config.resolve_compact_kernel()
+        interpret = config.pallas_interpret
+
+        @jax.jit
+        def probe(g, members, n_valid):
+            view = explore.build_tile_view(
+                g, members, n_valid, mode,
+                use_pallas=use_pallas,
+                compact_kernel=compact,
+                interpret=interpret,
+            )
+            return view.nbr_t
+
+        return probe
 
     # -- superstep hooks ----------------------------------------------------
     def begin_step(self, store, st) -> List[np.ndarray]:
@@ -138,9 +168,9 @@ class SerialBackend(ExecutionBackend):
         agg, canon_slot = aggregation.aggregate_rows(
             self.g.n, codes, lv, self.app.wants_domains
         )
-        st.n_quick_patterns = agg.n_quick
-        st.n_canonical_patterns = agg.n_canonical
-        st.n_iso_checks = agg.n_iso_checks
+        obs.set_stat(st, "n_quick_patterns", agg.n_quick)
+        obs.set_stat(st, "n_canonical_patterns", agg.n_canonical)
+        obs.set_stat(st, "n_iso_checks", agg.n_iso_checks)
         return agg, canon_slot
 
     # -- device-resident aggregation (DESIGN.md §10) ------------------------
@@ -177,7 +207,7 @@ class SerialBackend(ExecutionBackend):
             res = lvl1.finish()
         uniq, counts_q, nbytes = res
         self._run_qcap = max(self._run_qcap, next_pow2(max(lvl1.observed_n, 1)))
-        st.bytes_to_host += nbytes
+        obs.count(st, "bytes_to_host", nbytes)
         table, counts = aggregation.finish_quick_level2(
             uniq, counts_q, app.wants_domains
         )
@@ -279,7 +309,7 @@ class SerialBackend(ExecutionBackend):
                 q2c, si, pc_cap, n,
             )
         bm = np.asarray(flat[:-1].reshape(pc_cap, kmax, n)[:pc])
-        st.bytes_to_host += bm.nbytes
+        obs.count(st, "bytes_to_host", bm.nbytes)
         return bm
 
     def alpha_rows(self, pk, st):
@@ -293,7 +323,7 @@ class SerialBackend(ExecutionBackend):
             # distinct table is sorted, so slot order matches `table`)
             lvl1 = self._fold_waves(self._agg_blocks, self._agg_size)
             res = lvl1.finish()
-            st.bytes_to_host += res[2]
+            obs.count(st, "bytes_to_host", res[2])
             self._lvl1 = lvl1
         q = len(table.quick_codes)
         pk_q = np.zeros(lvl1.final_cap, dtype=bool)
@@ -310,7 +340,7 @@ class SerialBackend(ExecutionBackend):
         mask = np.asarray(
             parts[0] if len(parts) == 1 else jnp.concatenate(parts)
         )
-        st.bytes_to_host += mask.nbytes
+        obs.count(st, "bytes_to_host", mask.nbytes)
         return mask
 
     def prune(self, blocks, alpha):
@@ -442,16 +472,27 @@ class SerialBackend(ExecutionBackend):
         chunks = list(
             programs.iter_chunks(waves, wave_dev, config.chunk_size, size)
         )
-        st.n_chunks += len(chunks)
+        obs.count(st, "n_chunks", len(chunks))
         if not chunks:
             return None, cap
+        if self._gather_probe is not None and obs.sync_active():
+            # trace_sync probe (DESIGN.md §12): the tile gather runs INSIDE
+            # the fused chunk program; its share of t_expand is only
+            # separable by re-running the gather standalone per chunk —
+            # paid exclusively in the diagnostic sync mode
+            for ch in chunks:
+                obs.count(
+                    st, "t_gather",
+                    obs.probe_time(self._gather_probe, g, ch[4], ch[5]),
+                )
 
         # ---- pilot: sync 1 calibrates the capacity bucket for the step --
         _, _, cb0, bucket0, chunk0, n_valid0 = chunks[0]
         signatures.add((size, bucket0, cap))
-        out = self._rec(expand_fn(g, chunk0, n_valid0, out_cap=cap), cap)
+        with obs.annotate("fused_chunk.pilot"):
+            out = self._rec(expand_fn(g, chunk0, n_valid0, out_cap=cap), cap)
         c0 = int(out["count"])
-        st.n_host_syncs += 1
+        obs.count(st, "n_host_syncs", 1)
         if c0 > cap:
             self._retire_outputs(out)
             cap = next_pow2(c0)
@@ -475,10 +516,10 @@ class SerialBackend(ExecutionBackend):
                     for s in (p["count"], p["ngen"], p["ncanon"])
                 ])
             ).reshape(-1, 3)
-            st.n_host_syncs += 1
+            obs.count(st, "n_host_syncs", 1)
             counts = meta[:, 0]
-            st.n_generated += int(meta[:, 1].sum())
-            st.n_canonical += int(meta[:, 2].sum())
+            obs.count(st, "n_generated", int(meta[:, 1].sum()))
+            obs.count(st, "n_canonical", int(meta[:, 2].sum()))
             for i, (p, ch) in enumerate(pending):
                 if counts[i] <= p["used_cap"]:
                     continue
@@ -515,9 +556,11 @@ class SerialBackend(ExecutionBackend):
         for ch in chunks[1:]:
             _, _, _, bucket_i, chunk_i, n_valid_i = ch
             signatures.add((size, bucket_i, step_cap))
-            p = self._rec(
-                expand_fn(g, chunk_i, n_valid_i, out_cap=step_cap), step_cap
-            )
+            with obs.annotate("fused_chunk"):
+                p = self._rec(
+                    expand_fn(g, chunk_i, n_valid_i, out_cap=step_cap),
+                    step_cap,
+                )
             pending.append((p, ch))
             if len(pending) >= _DRAIN_WINDOW:
                 drain(pending)
@@ -557,19 +600,19 @@ class SerialBackend(ExecutionBackend):
                      jnp.zeros((pad,), jnp.int32)]
                 )
                 chunk = jnp.asarray(chunk)
-                st.n_chunks += 1
+                obs.count(st, "n_chunks", 1)
                 while True:
                     self._signatures.add((size, bucket, cap))
                     out = expand_fn(g, chunk, n_valid, out_cap=cap)
                     children, count = out[0], out[1]
                     ngen, ncanon = out[-2], out[-1]
                     count = int(count)
-                    st.n_host_syncs += 1
+                    obs.count(st, "n_host_syncs", 1)
                     if count <= cap:
                         break
                     programs.retire(children)
                     cap = next_pow2(count)
-                st.n_generated += int(ngen)
-                st.n_canonical += int(ncanon)
+                obs.count(st, "n_generated", int(ngen))
+                obs.count(st, "n_canonical", int(ncanon))
                 if count:
                     store.append(np.asarray(children[:count]))

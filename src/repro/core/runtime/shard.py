@@ -34,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import aggregation, explore, pattern as pattern_lib
+from repro.core import aggregation, explore, obs, pattern as pattern_lib
 from repro.core.api import MiningApp
 from repro.core.graph import PartitionedGraph
 from repro.core.runtime import programs
@@ -43,6 +43,7 @@ from repro.core.runtime.config import next_pow2
 from repro.core.store import FrontierStore, make_store
 from repro.kernels import aggregate as agg_kernel_lib
 from repro.kernels import gather as gather_kernel_lib
+from repro.kernels.dispatch import device_scope
 
 try:  # jax >= 0.6 exports shard_map at top level
     shard_map = jax.shard_map
@@ -118,15 +119,18 @@ def make_sharded_expand(app: MiningApp, mesh: Mesh, axes=("data",),
         def worker(g, members, n_valid):
             m = members[0]          # shard_map adds the leading shard dim
             nv = n_valid[0]
-            children, count, codes, lv, ngen, ncanon = explore.fused_chunk_step(
-                g, m, nv, out_cap,
-                mode=mode,
-                app=app,
-                with_patterns=with_patterns,
-                use_pallas=use_pallas,
-                compact_kernel=compact_kernel,
-                interpret=interpret,
-            )
+            with device_scope("fused_chunk"):
+                children, count, codes, lv, ngen, ncanon = (
+                    explore.fused_chunk_step(
+                        g, m, nv, out_cap,
+                        mode=mode,
+                        app=app,
+                        with_patterns=with_patterns,
+                        use_pallas=use_pallas,
+                        compact_kernel=compact_kernel,
+                        interpret=interpret,
+                    )
+                )
             outs = (children[None], count[None], ngen[None], ncanon[None])
             if with_patterns:
                 outs += (codes[None], lv[None])
@@ -146,6 +150,93 @@ def make_sharded_expand(app: MiningApp, mesh: Mesh, axes=("data",),
     return step
 
 
+def halo_fetch_tile(pg_l, m, nv, *, mode: str, halo: str, axes,
+                    w: int, rows: int, n: int,
+                    compact_kernel: bool = False, interpret=None):
+    """The halo-exchange stage of the partitioned worker body (DESIGN.md
+    §11), shared by the mining superstep and the ``trace_sync`` exchange
+    probe (``StepStats.t_exchange``): derive the worker's halo — the
+    unique vertices its frontier slice touches — and fetch their neighbour
+    rows from the owning shards via in-program collectives, returning the
+    ``explore.TileView`` the fused chunk program consumes.
+
+      * ``halo="alltoall"``: a position-aligned request matrix (W, H) of
+        vertex ids goes through ONE ``all_to_all``; owners gather the
+        requested rows from their local shard and a second ``all_to_all``
+        returns them. Wire bytes scale with the halo, never the graph.
+      * ``halo="gather"``: ragged fallback — ``all_gather`` the full shard
+        tables and index locally (bytes scale with the graph; always
+        lowers).
+
+    ``w``/``rows``/``n`` are the FULL graph's shard count / padded tile
+    rows / vertex count — inside ``shard_map`` the worker-local ``pg_l``
+    only sees its own shard's leading dim.
+    """
+    # static halo capacity (a function of the chunk shape alone):
+    # overflow is impossible by construction, so the output contract
+    # of the fused step — and the drain protocol — are untouched
+    cap = explore.halo_cap(m.shape, mode, n)
+    verts = explore.halo_vertices(pg_l, m, nv, mode)
+    uniq, _ = gather_kernel_lib.halo_unique(
+        verts, n, cap,
+        use_kernel=compact_kernel, interpret=interpret,
+    )
+    ok = uniq < n
+    safe = jnp.clip(uniq, 0, n - 1)
+    own = jnp.clip(
+        jnp.searchsorted(pg_l.part_offsets, safe, side="right") - 1,
+        0, w - 1,
+    ).astype(jnp.int32)
+
+    if halo == "gather":
+        # ragged all-gather fallback: full shard tables on the wire
+        fi = jnp.clip(
+            own * rows + (safe - pg_l.part_offsets[own]),
+            0, w * rows - 1,
+        ).astype(jnp.int32)
+
+        def fetch(tbl, fill):
+            full = jax.lax.all_gather(tbl, axes)      # (W, rows, ·)
+            t = full.reshape(w * rows, tbl.shape[-1])[fi]
+            return jnp.where(ok[:, None], t, fill)
+    else:
+        # all-to-all halo: req[s, i] = uniq[i] iff shard s owns it
+        rank = _linear_rank(axes)
+        my_lo = pg_l.part_offsets[rank]
+        req = jnp.where(
+            (own[None, :] == jnp.arange(w, dtype=jnp.int32)[:, None])
+            & ok[None, :],
+            uniq[None, :], -1,
+        ).astype(jnp.int32)                           # (W, cap)
+        got = jax.lax.all_to_all(req, axes, 0, 0)
+        loc = got - my_lo
+        inr = (got >= 0) & (loc >= 0) & (loc < rows)
+        sl = jnp.clip(loc, 0, rows - 1)
+
+        def fetch(tbl, fill):
+            resp = jnp.where(inr[:, :, None], tbl[sl], fill)
+            back = jax.lax.all_to_all(resp, axes, 0, 0)
+            t = back[own, jnp.arange(cap)]
+            return jnp.where(ok[:, None], t, fill)
+
+    nbr_t = fetch(pg_l.nbr_sh[0], jnp.int32(-1))
+    if mode == "edge":
+        ned_t = fetch(pg_l.nbr_eid_sh[0], jnp.int32(-1))
+        adj_t = jnp.zeros((cap, 1), jnp.uint32)
+    else:
+        adj_t = fetch(pg_l.adj_sh[0], jnp.uint32(0))
+        ned_t = jnp.zeros((cap, 0), jnp.int32)
+    return explore.TileView(
+        uniq=uniq,
+        labels=pg_l.labels,
+        edge_uv=pg_l.edge_uv,
+        edge_labels=pg_l.edge_labels,
+        nbr_t=nbr_t,
+        nbr_eid_t=ned_t,
+        adj_t=adj_t,
+    )
+
+
 def make_sharded_expand_partitioned(app: MiningApp, mesh: Mesh,
                                     axes=("data",), halo: str = "alltoall",
                                     use_pallas: bool = False, interpret=None,
@@ -156,19 +247,9 @@ def make_sharded_expand_partitioned(app: MiningApp, mesh: Mesh,
     Each worker holds ONE CSR shard + adjacency tile of the graph
     (``PartitionedGraph``, in_specs split the shard-stacked tables over the
     mesh; vertex content stays replicated). Before expanding, the worker
-    derives its halo — the unique vertices its frontier slice touches —
-    and fetches their neighbour rows from the owning shards *inside the
-    jitted program*:
-
-      * ``halo="alltoall"``: a position-aligned request matrix (W, H) of
-        vertex ids goes through ONE ``all_to_all``; owners gather the
-        requested rows from their local shard and a second ``all_to_all``
-        returns them. Wire bytes scale with the halo, never the graph.
-      * ``halo="gather"``: ragged fallback — ``all_gather`` the full shard
-        tables and index locally (bytes scale with the graph; always lowers).
-
-    The fetched rows form an ``explore.TileView`` and the worker runs the
-    SAME fused chunk program as every other backend. Both collectives live
+    fetches its halo tile (:func:`halo_fetch_tile` — request/response
+    ``all_to_all`` or the ragged all-gather fallback) and runs the SAME
+    fused chunk program as every other backend. Both collectives live
     inside the one program, so the superstep keeps its single unclamped-
     count host sync — no new syncs appear.
     """
@@ -185,78 +266,24 @@ def make_sharded_expand_partitioned(app: MiningApp, mesh: Mesh,
 
         def worker(pg_l, members, n_valid):
             m, nv = members[0], n_valid[0]
-            # static halo capacity (a function of the chunk shape alone):
-            # overflow is impossible by construction, so the output contract
-            # of the fused step — and the drain protocol — are untouched
-            cap = explore.halo_cap(m.shape, mode, n)
-            verts = explore.halo_vertices(pg_l, m, nv, mode)
-            uniq, _ = gather_kernel_lib.halo_unique(
-                verts, n, cap,
-                use_kernel=compact_kernel, interpret=interpret,
-            )
-            ok = uniq < n
-            safe = jnp.clip(uniq, 0, n - 1)
-            own = jnp.clip(
-                jnp.searchsorted(pg_l.part_offsets, safe, side="right") - 1,
-                0, w - 1,
-            ).astype(jnp.int32)
-
-            if halo == "gather":
-                # ragged all-gather fallback: full shard tables on the wire
-                fi = jnp.clip(
-                    own * rows + (safe - pg_l.part_offsets[own]),
-                    0, w * rows - 1,
-                ).astype(jnp.int32)
-
-                def fetch(tbl, fill):
-                    full = jax.lax.all_gather(tbl, axes)      # (W, rows, ·)
-                    t = full.reshape(w * rows, tbl.shape[-1])[fi]
-                    return jnp.where(ok[:, None], t, fill)
-            else:
-                # all-to-all halo: req[s, i] = uniq[i] iff shard s owns it
-                rank = _linear_rank(axes)
-                my_lo = pg_l.part_offsets[rank]
-                req = jnp.where(
-                    (own[None, :] == jnp.arange(w, dtype=jnp.int32)[:, None])
-                    & ok[None, :],
-                    uniq[None, :], -1,
-                ).astype(jnp.int32)                           # (W, cap)
-                got = jax.lax.all_to_all(req, axes, 0, 0)
-                loc = got - my_lo
-                inr = (got >= 0) & (loc >= 0) & (loc < rows)
-                sl = jnp.clip(loc, 0, rows - 1)
-
-                def fetch(tbl, fill):
-                    resp = jnp.where(inr[:, :, None], tbl[sl], fill)
-                    back = jax.lax.all_to_all(resp, axes, 0, 0)
-                    t = back[own, jnp.arange(cap)]
-                    return jnp.where(ok[:, None], t, fill)
-
-            nbr_t = fetch(pg_l.nbr_sh[0], jnp.int32(-1))
-            if mode == "edge":
-                ned_t = fetch(pg_l.nbr_eid_sh[0], jnp.int32(-1))
-                adj_t = jnp.zeros((cap, 1), jnp.uint32)
-            else:
-                adj_t = fetch(pg_l.adj_sh[0], jnp.uint32(0))
-                ned_t = jnp.zeros((cap, 0), jnp.int32)
-            view = explore.TileView(
-                uniq=uniq,
-                labels=pg_l.labels,
-                edge_uv=pg_l.edge_uv,
-                edge_labels=pg_l.edge_labels,
-                nbr_t=nbr_t,
-                nbr_eid_t=ned_t,
-                adj_t=adj_t,
-            )
-            children, count, codes, lv, ngen, ncanon = explore.fused_chunk_step(
-                view, m, nv, out_cap,
-                mode=mode,
-                app=app,
-                with_patterns=with_patterns,
-                use_pallas=use_pallas,
-                compact_kernel=compact_kernel,
-                interpret=interpret,
-            )
+            with device_scope("halo_exchange"):
+                view = halo_fetch_tile(
+                    pg_l, m, nv,
+                    mode=mode, halo=halo, axes=axes, w=w, rows=rows, n=n,
+                    compact_kernel=compact_kernel, interpret=interpret,
+                )
+            with device_scope("fused_chunk"):
+                children, count, codes, lv, ngen, ncanon = (
+                    explore.fused_chunk_step(
+                        view, m, nv, out_cap,
+                        mode=mode,
+                        app=app,
+                        with_patterns=with_patterns,
+                        use_pallas=use_pallas,
+                        compact_kernel=compact_kernel,
+                        interpret=interpret,
+                    )
+                )
             outs = (children[None], count[None], ngen[None], ncanon[None])
             if with_patterns:
                 outs += (codes[None], lv[None])
@@ -279,6 +306,46 @@ def make_sharded_expand_partitioned(app: MiningApp, mesh: Mesh,
         )(pg, members, n_valid)
 
     return step
+
+
+def make_sharded_halo_probe(mode: str, mesh: Mesh, axes=("data",),
+                            halo: str = "alltoall",
+                            compact_kernel: bool = False, interpret=None):
+    """Standalone halo-fetch program for the ``trace_sync`` exchange probe
+    (``StepStats.t_exchange``, DESIGN.md §12): the exact
+    :func:`halo_fetch_tile` stage of the partitioned superstep, minus the
+    fused chunk program, so its completion time is measurable without
+    breaking the mining program's single-sync contract. Only dispatched
+    while a ``sync=True`` tracer is installed."""
+    spec_in = P(axes)
+    rep = P()
+
+    @jax.jit
+    def probe(pg, members, n_valid):
+        w, n, rows = pg.n_parts, pg.n, pg.tile_rows
+
+        def worker(pg_l, members, n_valid):
+            view = halo_fetch_tile(
+                pg_l, members[0], n_valid[0],
+                mode=mode, halo=halo, axes=axes, w=w, rows=rows, n=n,
+                compact_kernel=compact_kernel, interpret=interpret,
+            )
+            return view.nbr_t[None]
+
+        pg_specs = PartitionedGraph(
+            part_offsets=rep, labels=rep, edge_uv=rep, edge_labels=rep,
+            nbr_sh=spec_in, nbr_eid_sh=spec_in, deg_sh=spec_in,
+            adj_sh=spec_in,
+        )
+        mapper = shard_map_pallas_ok if compact_kernel else shard_map
+        return mapper(
+            worker,
+            mesh=mesh,
+            in_specs=(pg_specs, spec_in, spec_in),
+            out_specs=spec_in,
+        )(pg, members, n_valid)
+
+    return probe
 
 
 class ShardCarried(NamedTuple):
@@ -328,35 +395,39 @@ def make_sharded_quick_bin(mesh: Mesh, axes=("data",), use_kernel=False,
     def agg(codes_sh, valid_sh, local_cap: int, global_cap: int):
         def worker(codes, valid):
             codes, valid = codes[0], valid[0]
-            u, c, inv, n, uv = agg_kernel_lib.bin_rows(
-                codes, valid, local_cap,
-                use_kernel=use_kernel, interpret=interpret,
-            )
-            gath_u = jax.lax.all_gather(u, axes)        # (W, cap, 3)
-            gath_c = jax.lax.all_gather(c, axes)
-            gath_v = jax.lax.all_gather(uv, axes)
-            w = gath_u.shape[0]
-            gu, _, ginv, gn, _ = agg_kernel_lib.bin_rows(
-                gath_u.reshape(w * local_cap, 3),
-                gath_v.reshape(w * local_cap),
-                global_cap,
-                use_kernel=use_kernel, interpret=interpret,
-            )
-            rank = _linear_rank(axes)
-            my_map = jax.lax.dynamic_slice_in_dim(
-                ginv, rank * local_cap, local_cap
-            )
-            # THE collective: per-slot counts psum'd over the mesh axes —
-            # bytes ∝ #patterns, not #embeddings (Table 4)
-            seg = jnp.where(uv & (my_map >= 0), my_map, global_cap)
-            local_counts = jnp.zeros(
-                (global_cap + 1,), jnp.int64
-            ).at[seg].add(c)
-            counts = jax.lax.psum(local_counts[:global_cap], axes)
-            corrupt = jax.lax.pmax((n > local_cap).astype(jnp.int32), axes)
-            row_slot = jnp.where(
-                inv >= 0, my_map[jnp.maximum(inv, 0)], -1
-            ).astype(jnp.int32)
+            # device-side §12 scope: the whole bin+gather+psum stage
+            with device_scope("aggregate_bin"):
+                u, c, inv, n, uv = agg_kernel_lib.bin_rows(
+                    codes, valid, local_cap,
+                    use_kernel=use_kernel, interpret=interpret,
+                )
+                gath_u = jax.lax.all_gather(u, axes)    # (W, cap, 3)
+                gath_c = jax.lax.all_gather(c, axes)
+                gath_v = jax.lax.all_gather(uv, axes)
+                w = gath_u.shape[0]
+                gu, _, ginv, gn, _ = agg_kernel_lib.bin_rows(
+                    gath_u.reshape(w * local_cap, 3),
+                    gath_v.reshape(w * local_cap),
+                    global_cap,
+                    use_kernel=use_kernel, interpret=interpret,
+                )
+                rank = _linear_rank(axes)
+                my_map = jax.lax.dynamic_slice_in_dim(
+                    ginv, rank * local_cap, local_cap
+                )
+                # THE collective: per-slot counts psum'd over the mesh
+                # axes — bytes ∝ #patterns, not #embeddings (Table 4)
+                seg = jnp.where(uv & (my_map >= 0), my_map, global_cap)
+                local_counts = jnp.zeros(
+                    (global_cap + 1,), jnp.int64
+                ).at[seg].add(c)
+                counts = jax.lax.psum(local_counts[:global_cap], axes)
+                corrupt = jax.lax.pmax(
+                    (n > local_cap).astype(jnp.int32), axes
+                )
+                row_slot = jnp.where(
+                    inv >= 0, my_map[jnp.maximum(inv, 0)], -1
+                ).astype(jnp.int32)
             return (gu[None], counts[None], gn[None], corrupt[None],
                     row_slot[None])
 
@@ -499,6 +570,12 @@ class ShardMapBackend(ExecutionBackend):
                 compact_kernel=config.resolve_compact_kernel(),
                 with_patterns=self.with_patterns,
             )
+            self._halo_probe = make_sharded_halo_probe(
+                app.mode, self.mesh, self.axes,
+                halo=self._halo,
+                compact_kernel=config.resolve_compact_kernel(),
+                interpret=config.pallas_interpret,
+            )
         else:
             self._expand = make_sharded_expand(
                 app, self.mesh, self.axes,
@@ -546,7 +623,7 @@ class ShardMapBackend(ExecutionBackend):
             # naive scheme: exchange per-EMBEDDING codes (an all-gather of
             # B x 24 bytes x workers) and run pattern canonicalisation once
             # per embedding instead of once per quick pattern.
-            st.collective_bytes += int(codes.size * 8) * n_shards
+            obs.count(st, "collective_bytes", int(codes.size * 8) * n_shards)
             for row in codes:
                 pattern_lib.canonicalize_one(row)           # B iso checks
         uniq, inv = aggregation.quick_slot_ids(codes, np.ones(b, bool))
@@ -584,11 +661,18 @@ class ShardMapBackend(ExecutionBackend):
             n_canonical=pc,
             n_iso_checks=table.n_iso_checks,
         )
-        st.n_quick_patterns = agg_out.n_quick
-        st.n_canonical_patterns = agg_out.n_canonical
-        st.n_iso_checks = b if config.naive_aggregation else agg_out.n_iso_checks
-        st.collective_bytes += counts.nbytes + (
-            int(np.asarray(bitmaps[:pc]).size) // 8 if app.wants_domains else 0
+        obs.set_stat(st, "n_quick_patterns", agg_out.n_quick)
+        obs.set_stat(st, "n_canonical_patterns", agg_out.n_canonical)
+        obs.set_stat(
+            st, "n_iso_checks",
+            b if config.naive_aggregation else agg_out.n_iso_checks,
+        )
+        obs.count(
+            st, "collective_bytes",
+            counts.nbytes + (
+                int(np.asarray(bitmaps[:pc]).size) // 8
+                if app.wants_domains else 0
+            ),
         )
         return agg_out, canon_slot
 
@@ -634,20 +718,21 @@ class ShardMapBackend(ExecutionBackend):
             codes_sh, valid_sh, local_cap=local_cap, global_cap=global_cap
         )
         flags = np.asarray(jnp.stack([gn[0], gcorrupt[0].astype(gn.dtype)]))
-        st.bytes_to_host += flags.nbytes
+        obs.count(st, "bytes_to_host", flags.nbytes)
         if int(flags[1]):
             # a worker's distinct table overflowed the pattern-sized cap:
             # host reference path for this step, bigger cap for the next
             codes, lv = self.quick_codes(blocks, size)
-            st.bytes_to_host += codes.nbytes + lv.nbytes
+            obs.count(st, "bytes_to_host", codes.nbytes + lv.nbytes)
             agg_out, canon_slot = self.aggregate(codes, lv, st)
             self._shard_qcap = max(
                 self._shard_qcap, next_pow2(max(agg_out.n_quick, 1))
             )
             return agg_out, canon_slot
         # the collective itself: gathered O(Q) tables + per-slot psum
-        st.collective_bytes += (
-            n_shards * local_cap * (24 + 8 + 1) + global_cap * 8
+        obs.count(
+            st, "collective_bytes",
+            n_shards * local_cap * (24 + 8 + 1) + global_cap * 8,
         )
         n = int(flags[0])
         # second tiny scalar read sizes the packed transfer (same packed
@@ -662,7 +747,7 @@ class ShardMapBackend(ExecutionBackend):
             w1_used=bool(pflags[0]), w2_used=bool(pflags[1]),
             fit32=bool(pflags[2]),
         )
-        st.bytes_to_host += pflags.nbytes + tbytes
+        obs.count(st, "bytes_to_host", pflags.nbytes + tbytes)
         table, counts = aggregation.finish_quick_level2(
             uniq, counts_q, app.wants_domains
         )
@@ -673,9 +758,9 @@ class ShardMapBackend(ExecutionBackend):
             bm_sh = self._domain_scatter(
                 row_slot, lv_sh, q2c, si, pc_cap=pc_cap, n_vertices=g.n
             )
-            st.collective_bytes += (pc_cap * 8 * g.n) // 8
+            obs.count(st, "collective_bytes", (pc_cap * 8 * g.n) // 8)
             bm = np.asarray(bm_sh[0][:pc])
-            st.bytes_to_host += bm.nbytes
+            obs.count(st, "bytes_to_host", bm.nbytes)
             supports = aggregation.min_image_support(
                 bm, table.canon_n_verts, table.canon_orbits
             )
@@ -701,7 +786,7 @@ class ShardMapBackend(ExecutionBackend):
         mask_sh = np.asarray(
             jnp.asarray(pk_q)[jnp.maximum(slot, 0)] & (slot >= 0)
         )
-        st.bytes_to_host += mask_sh.nbytes
+        obs.count(st, "bytes_to_host", mask_sh.nbytes)
         return np.concatenate(
             [mask_sh[s, : self._row_cnts[s]] for s in range(self.n_shards)]
         )
@@ -718,22 +803,31 @@ class ShardMapBackend(ExecutionBackend):
         halo_bytes = (
             self._halo_bytes(per, size) if self._partitioned else 0
         )
+        if self._partitioned and obs.sync_active():
+            # trace_sync probe (DESIGN.md §12): the halo exchange runs
+            # INSIDE the jitted superstep, so its share of t_expand is only
+            # separable by re-running the fetch stage standalone — paid
+            # exclusively in the diagnostic sync mode
+            obs.count(
+                st, "t_exchange",
+                obs.probe_time(self._halo_probe, g, members_dev, n_valid_dev),
+            )
         while True:
             outs = self._expand(g, members_dev, n_valid_dev,
                                 out_cap=self.capacity)
             children, ccount = outs[0], outs[1]
             ccount = np.asarray(ccount)     # THE per-step control sync
-            st.n_host_syncs += 1
-            st.n_chunks += 1
-            st.collective_bytes += halo_bytes
+            obs.count(st, "n_host_syncs", 1)
+            obs.count(st, "n_chunks", 1)
+            obs.count(st, "collective_bytes", halo_bytes)
             if int(ccount.max()) <= self.capacity:
                 break
             # counts are exact (unclamped compaction), so exactly one
             # re-dispatch at the next pow2 bucket suffices
             programs.retire(*outs)
             self.capacity = next_pow2(int(ccount.max()))
-        st.n_generated = int(np.asarray(outs[2]).sum())
-        st.n_canonical = int(np.asarray(outs[3]).sum())
+        obs.set_stat(st, "n_generated", int(np.asarray(outs[2]).sum()))
+        obs.set_stat(st, "n_canonical", int(np.asarray(outs[3]).sum()))
 
         # frontier exchange: worker-local children into the store as device
         # arrays (resolved at seal; odag: DenseODAG OR-allreduce, §5.2);
@@ -781,4 +875,4 @@ class ShardMapBackend(ExecutionBackend):
         # frontier exchange: what a worker ships (raw rows, or the merged
         # ODAG with store="odag") rides the same collective accounting as
         # the aggregation reduce
-        st.collective_bytes += store.exchange_bytes
+        obs.count(st, "collective_bytes", store.exchange_bytes)

@@ -36,6 +36,18 @@ class StepStats:
     t_expand: float = 0.0            # G+C phases of Fig 12
     t_aggregate: float = 0.0         # P phase
     t_storage: float = 0.0           # W+R phases (ODAG build/extract)
+    #: tile-gather seconds of the partitioned layout (DESIGN.md §11/§12):
+    #: ``build_tile_view`` runs INSIDE the fused chunk program, so the
+    #: split is measured by a dedicated probe dispatch ONLY under
+    #: ``trace_sync=True`` (serial backend, partitioned graphs); 0.0
+    #: otherwise — the cost then rides ``t_expand``, as before.
+    t_gather: float = 0.0
+    #: halo-exchange seconds of the partitioned shard-map superstep
+    #: (request/response ``all_to_all`` or ragged all-gather): probe-
+    #: measured under ``trace_sync=True`` only, else folded in
+    #: ``t_expand``. The exchange's WIRE bytes are always accounted
+    #: (``collective_bytes``), independent of this timing.
+    t_exchange: float = 0.0
     #: seconds writing this step's superstep checkpoint (DESIGN.md §9);
     #: 0.0 when checkpointing is off or the cadence skipped the step.
     #: ``bench_checkpoint.py`` gates the sum at ≤5% of superstep wall time.
@@ -78,6 +90,16 @@ class RunStats:
     def total_bytes_to_host(self) -> int:
         return sum(s.bytes_to_host for s in self.steps)
 
+    def phase_walls(self) -> Dict[str, float]:
+        """Per-phase wall totals over the run (Fig. 12's split, seconds)."""
+        out: Dict[str, float] = {}
+        for name in (
+            "t_expand", "t_aggregate", "t_storage", "t_gather",
+            "t_exchange", "t_checkpoint",
+        ):
+            out[name] = round(sum(getattr(s, name) for s in self.steps), 4)
+        return out
+
     def summary(self) -> Dict:
         return {
             "steps": len(self.steps),
@@ -88,6 +110,8 @@ class RunStats:
                 max((s.compression for s in self.steps), default=1.0), 1
             ),
             "host_syncs": self.total_host_syncs,
+            "total_bytes_to_host": self.total_bytes_to_host,
+            "phase_walls_s": self.phase_walls(),
             "chunk_programs": self.n_compiles,
         }
 

@@ -26,6 +26,8 @@ from typing import Iterator, List, Optional
 
 import numpy as np
 
+from repro.core import obs
+
 
 def _delete_buffer(buf) -> None:
     try:
@@ -179,14 +181,16 @@ class RawStore(FrontierStore):
             self._staged.append((rows, count))
 
     def seal(self, size: int) -> None:
-        blocks = [resolve_rows(r, c) for r, c in self._staged]
-        blocks = [b for b in blocks if len(b)]
-        self._frontier = (
-            np.concatenate(blocks, axis=0)
-            if blocks
-            else np.zeros((0, size), np.int32)
-        )
-        self._staged = []
+        with obs.span("store.seal", kind="raw", size=size,
+                      blocks=len(self._staged)):
+            blocks = [resolve_rows(r, c) for r, c in self._staged]
+            blocks = [b for b in blocks if len(b)]
+            self._frontier = (
+                np.concatenate(blocks, axis=0)
+                if blocks
+                else np.zeros((0, size), np.int32)
+            )
+            self._staged = []
 
     @property
     def n_rows(self) -> int:

@@ -38,6 +38,7 @@ from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
+from repro.core import obs
 from repro.core import odag as odag_lib
 from repro.core.store.base import FrontierStore, resolve_rows
 
@@ -73,6 +74,10 @@ class ODAGStore(FrontierStore):
             self._staged.setdefault(worker, []).append((rows, count))
 
     def seal(self, size: int) -> None:
+        with obs.span("store.seal", kind="odag", size=size):
+            self._seal(size)
+
+    def _seal(self, size: int) -> None:
         blocks = {}
         for w, parts in self._staged.items():
             resolved = [resolve_rows(r, c) for r, c in parts]
@@ -128,25 +133,27 @@ class ODAGStore(FrontierStore):
         return self._odag
 
     def _extract(self, o: odag_lib.ODAG) -> np.ndarray:
-        return odag_lib.extract(
-            self._g,
-            o,
-            app_filter=self._app_filter,
-            mode=self._mode,
-            use_pallas=self._use_pallas,
-            interpret=self._interpret,
-        )
+        with obs.span("odag.extract", rows=int(self._n_rows)):
+            return odag_lib.extract(
+                self._g,
+                o,
+                app_filter=self._app_filter,
+                mode=self._mode,
+                use_pallas=self._use_pallas,
+                interpret=self._interpret,
+            )
 
     def _extract_mask(self, mask: np.ndarray) -> np.ndarray:
-        return odag_lib.extract_partition(
-            self._g,
-            self._odag,
-            mask,
-            app_filter=self._app_filter,
-            mode=self._mode,
-            use_pallas=self._use_pallas,
-            interpret=self._interpret,
-        )
+        with obs.span("odag.extract", partition=True):
+            return odag_lib.extract_partition(
+                self._g,
+                self._odag,
+                mask,
+                app_filter=self._app_filter,
+                mode=self._mode,
+                use_pallas=self._use_pallas,
+                interpret=self._interpret,
+            )
 
     def chunks(self, max_rows: Optional[int] = None) -> Iterator[np.ndarray]:
         if self._odag is None:

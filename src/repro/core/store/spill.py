@@ -19,6 +19,7 @@ from typing import Iterator, List, Optional
 
 import numpy as np
 
+from repro.core import obs
 from repro.core.store.base import FrontierStore
 
 
@@ -46,7 +47,9 @@ class SpillStore(FrontierStore):
         self._inner.append(rows, worker=worker, count=count)
 
     def seal(self, size: int) -> None:
-        self._inner.seal(size)
+        with obs.span("store.seal", kind=f"spill[{self._inner.kind}]",
+                      size=size, budget_rows=self.budget_rows()):
+            self._inner.seal(size)
 
     @property
     def n_rows(self) -> int:

@@ -51,6 +51,16 @@ def resolve_halo(halo: Optional[str] = None) -> str:
     return halo
 
 
+def device_scope(name: str):
+    """Named XLA scope for a device-program stage (``repro/<name>``):
+    the device-side half of the §12 span taxonomy. ``jax.named_scope``
+    only relabels operations during tracing — zero runtime cost — so the
+    fused-chunk / halo-exchange / aggregation-bin stages are ALWAYS
+    scoped, and a ``jax.profiler.trace`` capture lines its device slices
+    up with the host spans (``obs.annotate``) without recompiling."""
+    return jax.named_scope(f"repro/{name}")
+
+
 def default_use_pallas() -> bool:
     """Engine-level auto knob (``EngineConfig.use_pallas=None``): route hot
     paths through the Pallas kernels only where they compile to native code;
