@@ -24,7 +24,9 @@ bench:
 # the checkpoint-overhead gate (<=5% of superstep wall time), the
 # aggregation-bytes gate (device level 1 >=10x below B*24 per superstep),
 # the graph-shard gate (per-device adjacency bytes <= 1/W at W=8,
-# partitioned mining bit-identical to replicated), and the observability
-# gate (traced run ≤1% overhead + zero extra syncs, ≥95% phase coverage)
+# partitioned mining bit-identical to replicated), the observability
+# gate (traced run ≤1% overhead + zero extra syncs, ≥95% phase coverage),
+# and the fault-recovery gate (supervised crash recovery bit-identical,
+# recovery overhead <=15% of the clean superstep wall)
 bench-smoke:
 	PYTHONPATH=src:. python -m benchmarks.run --smoke --json

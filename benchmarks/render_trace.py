@@ -59,8 +59,15 @@ def summarize(doc) -> str:
 
 
 def check(doc) -> list:
-    """Schema + coverage problems of one trace document (empty == pass)."""
+    """Schema + coverage problems of one trace document (empty == pass).
+
+    A partial trace of an aborted run (``otherData.aborted``, written by
+    the loop's exception path / supervisor-caught crash) must still parse
+    and pass the schema check, but its interrupted superstep legitimately
+    has uncovered wall — the coverage gate applies to clean runs only."""
     problems = obs.validate_chrome_trace(doc)
+    if doc.get("otherData", {}).get("aborted"):
+        return problems
     cov = obs.phase_coverage(doc)
     if cov["coverage"] < COVERAGE_GATE:
         problems.append(

@@ -5,8 +5,9 @@ Prints ``name,us_per_call,derived`` CSV rows. The dry-run/roofline tables
 ``python -m repro.launch.dryrun``; ``bench_roofline`` summarises them here.
 
 ``--smoke`` runs the mining-perf ladder plus the fused-superstep,
-checkpoint-overhead, aggregation-bytes, graph-shard, and observability
-gates — the quick sanity sweep behind ``make bench-smoke``.
+checkpoint-overhead, aggregation-bytes, graph-shard, observability,
+and fault-recovery gates — the quick sanity sweep behind
+``make bench-smoke``.
 ``--json [PATH]`` additionally writes every emitted row (us_per_call +
 parsed derived stats) as machine-readable JSON — the default path is
 ``benchmarks.common.DEFAULT_BENCH_JSON`` (``BENCH_<version>.json``, one
@@ -40,6 +41,7 @@ def main(argv=None) -> None:
         bench_aggregate,
         bench_breakdown,
         bench_checkpoint,
+        bench_faults,
         bench_graphshard,
         bench_large,
         bench_mining_perf,
@@ -67,6 +69,7 @@ def main(argv=None) -> None:
         ("aggregate(§10)", bench_aggregate.main),
         ("graphshard(§11)", bench_graphshard.main),
         ("obs(§12)", bench_obs.main),
+        ("faults(§13)", bench_faults.main),
         ("roofline(dry-run)", bench_roofline.main),
     ]
     if opts.smoke:
@@ -77,6 +80,7 @@ def main(argv=None) -> None:
             ("aggregate(§10)", bench_aggregate.main),
             ("graphshard(§11)", bench_graphshard.main),
             ("obs(§12)", bench_obs.main),
+            ("faults(§13)", bench_faults.main),
         ]
     failures = 0
     for name, fn in benches:

@@ -2,22 +2,27 @@
 
     PYTHONPATH=src python examples/resume_after_crash.py
 
-The walkthrough (DESIGN.md §9):
+The walkthrough (DESIGN.md §9 + §13):
 
   1. mine the reference result uninterrupted;
   2. launch the SAME run in a child process with
      ``EngineConfig(checkpoint_dir=...)`` — every sealed superstep is
-     persisted atomically — and hard-kill the child (``os._exit``) right
-     after superstep 2's checkpoint lands, before the run can finish: what
-     is left on disk is exactly what a SIGKILL / preemption at that seal
-     boundary leaves;
+     persisted atomically — and kill it with the §13 fault-injection
+     layer: ``FaultPlan([FaultSpec("materialize", 3, "exit")])`` hard-
+     exits (``os._exit``) the instant superstep 3 opens, right after
+     superstep 2's checkpoint landed. What is left on disk is exactly
+     what a SIGKILL / preemption at that boundary leaves;
   3. ``resume()`` from the surviving checkpoint and compare pattern
-     dictionaries: identical.
+     dictionaries: identical;
+  4. do it all again WITHOUT the manual resume: ``run_supervised`` with
+     an injected crash retries from the last valid checkpoint by itself
+     and reports what it did in ``result.recovery``.
 
 Because the checkpoint payload is worker-count-free (the sealed frontier
 store plus the superstep cursor), step 3 could equally hand the same
 checkpoint to a ``ShardMapBackend`` over any mesh — see the elastic
-restore tests in ``tests/test_checkpoint.py``.
+restore tests in ``tests/test_checkpoint.py``, and the full
+crash-at-every-phase kill matrix there for what this example smokes.
 
 This example doubles as the CI resume smoke (.github/workflows/ci.yml).
 """
@@ -27,34 +32,29 @@ import sys
 import tempfile
 import textwrap
 
-from repro.core import EngineConfig, graph, resume, run
+from repro.core import EngineConfig, graph, resume, run, run_supervised
+from repro.core.runtime import FaultPlan, FaultSpec, latest_checkpoint
+from repro.core.runtime import faults as faults_lib
 from repro.core.apps import MotifsApp
-from repro.core.runtime import latest_checkpoint
 
-SCALE = 0.05          # CiteSeer-shaped, seconds per run
-CRASH_AFTER_STEP = 2  # die once superstep 2's checkpoint is on disk
+SCALE = 0.05      # CiteSeer-shaped, seconds per run
+CRASH_STEP = 3    # die as superstep 3 opens: step 2's checkpoint survives
 
 CHILD = textwrap.dedent(
     f"""
-    import os, sys
+    import sys
     from repro.core import EngineConfig, graph, run
     from repro.core.apps import MotifsApp
-    from repro.core.stats import StepStats
+    from repro.core.runtime import FaultPlan, FaultSpec
 
-    ckpt_dir = sys.argv[1]
-    # crash injection: hard-exit the moment superstep {CRASH_AFTER_STEP}'s
-    # checkpoint has been written (StepStats.t_checkpoint is assigned right
-    # after the atomic os.replace), leaving the run genuinely unfinished.
-    t_ckpt_setter = StepStats.__setattr__
-    def die_after_checkpoint(self, name, value):
-        t_ckpt_setter(self, name, value)
-        if name == "t_checkpoint" and value > 0 and self.step >= {CRASH_AFTER_STEP}:
-            os._exit(17)
-    StepStats.__setattr__ = die_after_checkpoint
-
+    # deterministic crash injection (DESIGN.md §13): kind "exit" calls
+    # os._exit at the materialize boundary of superstep {CRASH_STEP} —
+    # no atexit, no unwinding, the run is genuinely torn.
+    plan = FaultPlan([FaultSpec("materialize", {CRASH_STEP}, "exit")])
     g = graph.citeseer_like(scale={SCALE})
-    run(g, MotifsApp(max_size=3), EngineConfig(checkpoint_dir=ckpt_dir))
-    os._exit(0)   # unreachable if the crash fired
+    run(g, MotifsApp(max_size=3),
+        EngineConfig(checkpoint_dir=sys.argv[1], faults=plan))
+    raise SystemExit("unreachable: the injected exit never fired")
     """
 )
 
@@ -76,7 +76,7 @@ def main() -> None:
         proc = subprocess.run(
             [sys.executable, "-c", CHILD, ckpt_dir], env=env
         )
-        assert proc.returncode == 17, (
+        assert proc.returncode == faults_lib.EXIT_CODE, (
             f"child should have died mid-run (exit {proc.returncode})"
         )
         survivor = latest_checkpoint(ckpt_dir)
@@ -85,10 +85,21 @@ def main() -> None:
         resumed = resume(g, app, survivor)
         print(f"resumed run:   {len(resumed.patterns)} patterns over "
               f"{len(resumed.stats.steps)} supersteps "
-              f"(replayed steps {[s.step for s in resumed.stats.steps[CRASH_AFTER_STEP:]]})")
+              f"(replayed steps "
+              f"{[s.step for s in resumed.stats.steps[CRASH_STEP - 1:]]})")
 
         assert resumed.patterns == reference.patterns, "outputs diverged!"
         print("OK: resumed output identical to the uninterrupted run")
+
+    # -- the supervised version: no manual resume step -------------------
+    plan = FaultPlan([FaultSpec("expand", 2, "crash")])
+    supervised = run_supervised(g, app, EngineConfig(faults=plan))
+    rec = supervised.recovery
+    print(f"run_supervised: crashed once, retried {rec['n_retries']}x, "
+          f"resumed from step {rec['resumed_step']}, recovery "
+          f"{rec['t_recovery'] * 1e3:.1f} ms")
+    assert supervised.patterns == reference.patterns, "outputs diverged!"
+    print("OK: supervised recovery identical to the uninterrupted run")
 
 
 if __name__ == "__main__":

@@ -10,16 +10,21 @@ from repro.core.engine import EngineConfig, MiningResult, run
 from repro.core.graph import (
     DeviceGraph, Graph, PartitionedGraph, to_device, to_partitioned,
 )
-from repro.core.runtime import RunConfig, SuperstepRuntime, resume
+from repro.core.runtime import (
+    FaultPlan, FaultSpec, RunConfig, SuperstepRuntime, resume, run_supervised,
+)
 
 __all__ = [
     "MiningApp",
     "EngineConfig",
+    "FaultPlan",
+    "FaultSpec",
     "MiningResult",
     "RunConfig",
     "SuperstepRuntime",
     "resume",
     "run",
+    "run_supervised",
     "DeviceGraph",
     "Graph",
     "PartitionedGraph",

@@ -258,12 +258,14 @@ def _bin_weighted(codes, valid, weights, cap: int, use_kernel: bool,
 
 
 @jax.jit
-def _finish_flags(uniq, counts, uvalid, n_stack, corrupt):
+def _finish_flags(uniq, counts, uvalid, n_stack, corrupt, sat):
     """The ONE scalar drain of a step's level-1 state: [final distinct
     count, max distinct count over every fold (merge-overflow detection),
     partial-corruption flag (a chunk's distinct count overflowed its bin
-    capacity), w1/w2 column-used flags, counts-fit-int32 flag] — read
-    together so overflow handling and the packed transfer cost no extra
+    capacity), w1/w2 column-used flags, counts-fit-int32 flag,
+    count-saturation flag (a folded int32 partial hit the I32_SAT
+    sentinel — totals would be floors, not counts)] — read together so
+    overflow/saturation handling and the packed transfer cost no extra
     round trips."""
     w1_used = jnp.any(jnp.where(uvalid, uniq[:, 1], 0) != 0)
     w2_used = jnp.any(jnp.where(uvalid, uniq[:, 2], 0) != 0)
@@ -271,7 +273,7 @@ def _finish_flags(uniq, counts, uvalid, n_stack, corrupt):
     return jnp.stack(
         [n_stack[-1], jnp.max(n_stack), corrupt.astype(jnp.int32),
          w1_used.astype(jnp.int32), w2_used.astype(jnp.int32),
-         fit32.astype(jnp.int32)]
+         fit32.astype(jnp.int32), sat.astype(jnp.int32)]
     ).astype(jnp.int32)
 
 
@@ -306,7 +308,7 @@ class DeviceLevel1:
     (:meth:`fold_rows`) or pre-binned per-chunk partials emitted by the
     fused chunk programs (:meth:`fold_partial`) — into a device-side
     distinct table, without any host transfer. :meth:`finish` drains the
-    O(Q) result: one (6,) scalar read, then the distinct codes packed to
+    O(Q) result: one (7,) scalar read, then the distinct codes packed to
     uint32 (label words dropped when unused) and the counts (int32 when
     they fit). Distinct codes come out in ascending lexicographic order,
     matching the host reference path bit for bit.
@@ -333,6 +335,7 @@ class DeviceLevel1:
         self.batches: List[tuple] = []  # (inv, lv, part_idx)  [fold_rows]
         self._merge_ns: List = []       # device n of every cross-batch merge
         self._corrupt = None            # device flag: a partial overflowed
+        self._sat = None                # device flag: int32 partial saturated
         self._compacted = False
         self._use_kernel = use_kernel
         self._interpret = interpret
@@ -364,6 +367,15 @@ class DeviceLevel1:
         slot swallowed patterns — tracked as a device flag that rides the
         finish drain, after which the caller re-folds from the waves."""
         uv = jnp.arange(cap, dtype=jnp.int32) < jnp.minimum(n, cap)
+        if counts.dtype == jnp.int32:
+            # a narrowed partial (the fused chunk programs emit int32):
+            # the I32_SAT sentinel means the true count was clipped — a
+            # device flag rides the finish drain, after which the caller
+            # re-folds the step from the waves in int64 (DESIGN.md §13)
+            hit = jnp.any(
+                jnp.where(uv, counts, 0) >= jnp.int32(agg_kernel.I32_SAT)
+            )
+            self._sat = hit if self._sat is None else (self._sat | hit)
         self.parts.append((uniq, counts.astype(jnp.int64), uv, cap, n))
         self.rows += rows
         if may_overflow:
@@ -418,14 +430,19 @@ class DeviceLevel1:
         corrupt = (
             self._corrupt if self._corrupt is not None else jnp.zeros((), bool)
         )
+        sat = self._sat if self._sat is not None else jnp.zeros((), bool)
         stack = jnp.stack([jnp.asarray(x, jnp.int32) for x in
                            (self._merge_ns + [n])])
-        flags = np.asarray(_finish_flags(u, c, uv, stack, corrupt))
+        flags = np.asarray(_finish_flags(u, c, uv, stack, corrupt, sat))
         nbytes = flags.nbytes
         self.observed_n = n_final = int(flags[0])
         max_n = int(flags[1])
         if flags[2]:
             return None             # a chunk partial overflowed its bin
+        if flags[6]:
+            # an int32 partial saturated at I32_SAT: its totals are floors;
+            # the wave re-fold re-bins everything in int64 (DESIGN.md §13)
+            return None
         if max_n > cap:
             if self._compacted:
                 return None
@@ -434,7 +451,8 @@ class DeviceLevel1:
             u, c, uv, cap, n = self._finalize(_next_pow2(max_n))
             stack = jnp.stack([jnp.asarray(self._merge_ns[-1], jnp.int32)])
             flags = np.asarray(
-                _finish_flags(u, c, uv, stack, jnp.zeros((), bool))
+                _finish_flags(u, c, uv, stack, jnp.zeros((), bool),
+                              jnp.zeros((), bool))
             )
             nbytes += flags.nbytes
             self.observed_n = n_final = int(flags[0])

@@ -523,7 +523,13 @@ def fused_chunk_step(
                 qp.codes, child_nv > 0, min(out_cap, agg_qcap),
                 use_kernel=aggregate_kernel, interpret=interpret,
             )
-            return (children, count, uniq, ucounts.astype(jnp.int32),
+            # the partial crosses chunks as int32: SATURATE at the I32_SAT
+            # sentinel instead of wrapping — fold_partial detects the
+            # sentinel and the step re-folds wide (DESIGN.md §13)
+            ucounts32 = jnp.minimum(
+                ucounts, jnp.int64(aggregate_kernel_lib.I32_SAT)
+            ).astype(jnp.int32)
+            return (children, count, uniq, ucounts32,
                     n_uniq, exp.n_generated, exp.n_canonical)
         codes = qp.codes
         # only FSM's min-image domains read the local-vertex table; when

@@ -185,6 +185,7 @@ def _step_record(st) -> Dict:
         "t_storage": st.t_storage, "t_aggregate": st.t_aggregate,
         "t_expand": st.t_expand, "t_gather": st.t_gather,
         "t_exchange": st.t_exchange, "t_checkpoint": st.t_checkpoint,
+        "n_retries": st.n_retries, "t_recovery": st.t_recovery,
     }
 
 
@@ -306,10 +307,17 @@ class RunObserver:
         if self.log_every and st.step % self.log_every == 0:
             print(f"[obs] {step_log_line(st)}", flush=True)
 
-    def finish(self, wall_time: float = 0.0) -> Optional[str]:
+    def finish(
+        self, wall_time: float = 0.0, aborted: bool = False
+    ) -> Optional[str]:
         """Uninstall + export. Returns the written trace path (or None).
         Idempotent — the loop's finally block may call it after a normal
-        finish (no-op) or on an exception (exports the partial trace)."""
+        finish (no-op) or on an exception (exports the partial trace).
+        ``aborted=True`` marks the export as a partial trace of a run
+        that died mid-superstep (``otherData["aborted"]``): the spans that
+        closed by exception unwinding are all flushed, and
+        ``render_trace.py --check`` skips the phase-coverage gate for it
+        (an aborted superstep legitimately has uncovered wall)."""
         if not self.enabled or self._finished:
             return self.trace_path if self.enabled else None
         self._finished = True
@@ -318,14 +326,18 @@ class RunObserver:
         if metrics_lib.current() is self.registry:
             metrics_lib.install(None)
         if self._jsonl is not None:
+            if aborted:
+                self._jsonl.write({"event": "aborted"}, flush=True)
             self._jsonl.close()
         if self.trace_path is not None:
+            meta = {
+                "backend": self.backend_name,
+                "wall_time_s": round(float(wall_time), 6),
+                "trace_sync": bool(self.config.trace_sync),
+            }
+            if aborted:
+                meta["aborted"] = True
             write_chrome_trace(
-                self.trace_path, self.tracer, self.registry,
-                meta={
-                    "backend": self.backend_name,
-                    "wall_time_s": round(float(wall_time), 6),
-                    "trace_sync": bool(self.config.trace_sync),
-                },
+                self.trace_path, self.tracer, self.registry, meta=meta
             )
         return self.trace_path

@@ -10,19 +10,29 @@ restore under a different worker count. ``engine.run`` and
 """
 from repro.core.runtime.backend import ExecutionBackend
 from repro.core.runtime.checkpoint import (
+    CheckpointCorruptError,
     CheckpointState,
     app_fingerprint,
     graph_fingerprint,
     latest_checkpoint,
+    load_latest_valid,
+    sweep_stale_tmp,
 )
 from repro.core.runtime.config import RunConfig, next_pow2
-from repro.core.runtime.loop import MiningResult, SuperstepRuntime, resume
+from repro.core.runtime.faults import FaultPlan, FaultSpec, InjectedFault
+from repro.core.runtime.loop import (
+    MiningResult, SuperstepRuntime, resume, run_supervised,
+)
 from repro.core.runtime.serial import SerialBackend
 from repro.core.runtime.shard import ShardMapBackend
 
 __all__ = [
+    "CheckpointCorruptError",
     "CheckpointState",
     "ExecutionBackend",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
     "MiningResult",
     "RunConfig",
     "SerialBackend",
@@ -31,6 +41,9 @@ __all__ = [
     "app_fingerprint",
     "graph_fingerprint",
     "latest_checkpoint",
+    "load_latest_valid",
     "next_pow2",
     "resume",
+    "run_supervised",
+    "sweep_stale_tmp",
 ]

@@ -29,7 +29,8 @@ import json
 import os
 import re
 import time
-from typing import Dict, List, Optional
+import zipfile
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -38,8 +39,21 @@ from repro.core.aggregation import StepAggregates
 from repro.core.graph import DeviceGraph
 from repro.core.stats import StepStats
 
-CHECKPOINT_VERSION = 1
+#: v2 embeds a SHA-256 payload checksum (DESIGN.md §13) — v1 checkpoints
+#: (no integrity record) are rejected as corrupt rather than trusted.
+CHECKPOINT_VERSION = 2
 _FILE_RE = re.compile(r"^ckpt-step(\d+)\.npz$")
+#: the staging-file shape ``save`` writes before ``os.replace`` — a crash
+#: mid-``np.savez`` leaves exactly one of these behind (satellite: swept on
+#: resume / Checkpointer init, never loadable as a checkpoint)
+_TMP_RE = re.compile(r"^ckpt-step\d+\.npz\.tmp-.*\.npz$")
+
+
+class CheckpointCorruptError(ValueError):
+    """A checkpoint file exists but cannot be trusted: unreadable archive,
+    missing integrity record, or SHA-256 payload mismatch. The supervisor
+    (``run_supervised``) treats this as "roll back one cut", never as a
+    fatal config error."""
 
 
 # ---------------------------------------------------------------------------
@@ -123,19 +137,61 @@ def checkpoint_path(directory: str, step: int) -> str:
     return os.path.join(directory, f"ckpt-step{step:04d}.npz")
 
 
-def latest_checkpoint(directory: str) -> Optional[str]:
-    """The highest-step checkpoint file in ``directory`` (None if empty)."""
-    best, best_step = None, -1
+def list_checkpoints(directory: str) -> List[str]:
+    """All checkpoint files in ``directory``, newest (highest step) first."""
     try:
         names = os.listdir(directory)
     except FileNotFoundError:
-        return None
+        return []
+    found = []
     for name in names:
         m = _FILE_RE.match(name)
-        if m and int(m.group(1)) > best_step:
-            best_step = int(m.group(1))
-            best = os.path.join(directory, name)
-    return best
+        if m:
+            found.append((int(m.group(1)), os.path.join(directory, name)))
+    return [p for _, p in sorted(found, reverse=True)]
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    """The highest-step checkpoint file in ``directory`` (None if empty)."""
+    paths = list_checkpoints(directory)
+    return paths[0] if paths else None
+
+
+def sweep_stale_tmp(directory: str) -> List[str]:
+    """Remove orphaned ``*.tmp-*.npz`` staging files a crash mid-save left
+    behind (``os.replace`` never ran, so they are garbage by construction).
+    Returns the removed paths. Called on Checkpointer init and on every
+    directory resume."""
+    removed: List[str] = []
+    try:
+        names = os.listdir(directory)
+    except FileNotFoundError:
+        return removed
+    for name in names:
+        if _TMP_RE.match(name):
+            path = os.path.join(directory, name)
+            try:
+                os.unlink(path)
+            except OSError:  # pragma: no cover - raced by another sweeper
+                continue
+            removed.append(path)
+    return removed
+
+
+def _payload_checksum(arrays: Dict[str, np.ndarray]) -> str:
+    """SHA-256 over every payload array (sorted by name; name + shape +
+    dtype + raw bytes). The ``checksum`` entry itself is excluded — it IS
+    the digest, stored inside the same atomic .npz."""
+    h = hashlib.sha256()
+    for name in sorted(arrays):
+        if name == "checksum":
+            continue
+        a = np.ascontiguousarray(np.asarray(arrays[name]))
+        h.update(name.encode())
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
 
 
 def save(path: str, state: CheckpointState) -> None:
@@ -181,6 +237,9 @@ def save(path: str, state: CheckpointState) -> None:
         },
     }
     arrays["meta"] = np.asarray(json.dumps(meta))
+    # integrity record (DESIGN.md §13): rides inside the same atomic file,
+    # so a torn/bit-flipped payload can never verify
+    arrays["checksum"] = np.asarray(_payload_checksum(arrays))
 
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     tmp = f"{path}.tmp-{os.getpid()}.npz"
@@ -192,43 +251,75 @@ def save(path: str, state: CheckpointState) -> None:
             os.unlink(tmp)
 
 
+def verify(path: str) -> Dict[str, np.ndarray]:
+    """Read a checkpoint's raw arrays and verify the embedded SHA-256.
+    Raises :class:`CheckpointCorruptError` on an unreadable archive, a
+    missing integrity record, or a digest mismatch."""
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            arrays = {key: np.asarray(z[key]) for key in z.files}
+    except FileNotFoundError:
+        # a missing file is a caller error (bad path), not corruption —
+        # rollback must never silently skip past a typo'd checkpoint
+        raise
+    except (zipfile.BadZipFile, OSError, EOFError, KeyError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable checkpoint {path}: {e}"
+        ) from e
+    if "checksum" not in arrays:
+        raise CheckpointCorruptError(
+            f"checkpoint {path} has no integrity record (pre-v2 or torn)"
+        )
+    want = str(arrays["checksum"][()])
+    got = _payload_checksum(arrays)
+    if want != got:
+        raise CheckpointCorruptError(
+            f"checkpoint {path} failed checksum "
+            f"(stored {want[:12]} != computed {got[:12]})"
+        )
+    return arrays
+
+
 def load(path: str) -> CheckpointState:
-    with np.load(path, allow_pickle=False) as z:
+    z = verify(path)
+    try:
         meta = json.loads(str(z["meta"][()]))
-        if meta["version"] != CHECKPOINT_VERSION:
-            raise ValueError(
-                f"checkpoint version {meta['version']} != "
-                f"{CHECKPOINT_VERSION} ({path})"
-            )
-        patterns: Dict[tuple, int] = {}
-        if "pat_codes" in z:
-            codes, values = z["pat_codes"], z["pat_values"]
-            patterns = {
-                tuple(int(x) for x in codes[i]): int(values[i])
-                for i in range(len(codes))
-            }
-        embeddings = {
-            int(s): np.asarray(z[f"emb{int(s)}"]) for s in meta["emb_sizes"]
+    except (KeyError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(f"bad meta in {path}: {e}") from e
+    if meta["version"] != CHECKPOINT_VERSION:
+        raise ValueError(
+            f"checkpoint version {meta['version']} != "
+            f"{CHECKPOINT_VERSION} ({path})"
+        )
+    patterns: Dict[tuple, int] = {}
+    if "pat_codes" in z:
+        codes, values = z["pat_codes"], z["pat_values"]
+        patterns = {
+            tuple(int(x) for x in codes[i]): int(values[i])
+            for i in range(len(codes))
         }
-        aggregates = [
-            StepAggregates(
-                canon_codes=np.asarray(z[f"agg{i}_canon"]),
-                counts=np.asarray(z[f"agg{i}_counts"]),
-                supports=np.asarray(z[f"agg{i}_supports"]),
-                n_quick=int(meta["agg_meta"][i][0]),
-                n_canonical=int(meta["agg_meta"][i][1]),
-                n_iso_checks=int(meta["agg_meta"][i][2]),
-            )
-            for i in range(meta["n_aggregates"])
-        ]
-        store_state = {
-            "kind": meta["store"]["kind"],
-            "meta": meta["store"]["meta"],
-            "arrays": {
-                key: np.asarray(z[f"store_{key}"])
-                for key in meta["store"]["array_keys"]
-            },
-        }
+    embeddings = {
+        int(s): np.asarray(z[f"emb{int(s)}"]) for s in meta["emb_sizes"]
+    }
+    aggregates = [
+        StepAggregates(
+            canon_codes=np.asarray(z[f"agg{i}_canon"]),
+            counts=np.asarray(z[f"agg{i}_counts"]),
+            supports=np.asarray(z[f"agg{i}_supports"]),
+            n_quick=int(meta["agg_meta"][i][0]),
+            n_canonical=int(meta["agg_meta"][i][1]),
+            n_iso_checks=int(meta["agg_meta"][i][2]),
+        )
+        for i in range(meta["n_aggregates"])
+    ]
+    store_state = {
+        "kind": meta["store"]["kind"],
+        "meta": meta["store"]["meta"],
+        "arrays": {
+            key: np.asarray(z[f"store_{key}"])
+            for key in meta["store"]["array_keys"]
+        },
+    }
     return CheckpointState(
         step=int(meta["step"]),
         size=int(meta["size"]),
@@ -256,6 +347,7 @@ def load_for(checkpoint: Optional[str], g: DeviceGraph, app) -> CheckpointState:
         raise ValueError("no checkpoint given (and no checkpoint_dir set)")
     path = checkpoint
     if os.path.isdir(path):
+        sweep_stale_tmp(path)
         path = latest_checkpoint(path)
         if path is None:
             raise FileNotFoundError(f"no checkpoints in {checkpoint!r}")
@@ -275,6 +367,39 @@ def load_for(checkpoint: Optional[str], g: DeviceGraph, app) -> CheckpointState:
     return state
 
 
+def load_latest_valid(
+    directory: str, g: DeviceGraph, app
+) -> Tuple[Optional[CheckpointState], Optional[str], List[str]]:
+    """Roll back past corrupt cuts (DESIGN.md §13): walk the directory's
+    checkpoints newest-first, skip any that fail the SHA-256 verify, and
+    return ``(state, path, skipped)`` for the newest *valid* one —
+    ``(None, None, skipped)`` when no checkpoint survives. Fingerprint
+    mismatches (wrong graph/app) still raise: that is a config error, not
+    a fault to retry past. Stale tmp staging files are swept first."""
+    sweep_stale_tmp(directory)
+    skipped: List[str] = []
+    for path in list_checkpoints(directory):
+        try:
+            state = load(path)
+        except CheckpointCorruptError:
+            skipped.append(path)
+            continue
+        gfp = graph_fingerprint(g)
+        if state.graph_fp != gfp:
+            raise ValueError(
+                f"checkpoint {path} was written for a different graph "
+                f"({state.graph_fp[:12]} != {gfp[:12]})"
+            )
+        afp = app_fingerprint(app)
+        if state.app_fp != afp:
+            raise ValueError(
+                f"checkpoint {path} was written for a different app config "
+                f"({state.app_fp[:12]} != {afp[:12]})"
+            )
+        return state, path, skipped
+    return None, None, skipped
+
+
 class Checkpointer:
     """Writes one checkpoint per seal boundary the cadence selects."""
 
@@ -283,7 +408,11 @@ class Checkpointer:
         self.graph_fp = graph_fingerprint(g)
         self.graph_layout = graph_layout(g)
         self.app_fp = app_fingerprint(app)
+        #: keep-last-K retention (0 = keep everything); K >= 2 leaves a
+        #: rollback target when the newest cut fails its checksum
+        self.keep = int(getattr(config, "keep_checkpoints", 0) or 0)
         os.makedirs(self.directory, exist_ok=True)
+        sweep_stale_tmp(self.directory)
 
     def save(self, *, step: int, size: int, capacity: int, store, result,
              wall_time: float) -> float:
@@ -307,6 +436,12 @@ class Checkpointer:
         )
         path = checkpoint_path(self.directory, step)
         save(path, state)
+        if self.keep > 0:
+            for old in list_checkpoints(self.directory)[self.keep:]:
+                try:
+                    os.unlink(old)
+                except OSError:  # pragma: no cover - raced removal
+                    pass
         # checkpoint size as a metrics gauge (DESIGN.md §12) — the traced
         # run's counter track shows the persisted cut growing per cadence
         obs.gauge("checkpoint_bytes", os.path.getsize(path), step=step)

@@ -142,6 +142,22 @@ class RunConfig:
     #: print one structured progress line every this-many supersteps
     #: (0 = silent). Works with or without ``trace``.
     log_every: int = 0
+    #: deterministic fault-injection plan (DESIGN.md §13): a
+    #: ``runtime.faults.FaultPlan`` of (phase, superstep, kind) triples
+    #: tripped at the loop's phase boundaries and the halo-exchange path.
+    #: None (the default) compiles to a single attribute read per phase —
+    #: production runs pay nothing. Test/chaos tooling only.
+    faults: Optional[object] = None
+    #: retry budget of ``run_supervised`` (DESIGN.md §13): how many times a
+    #: failed attempt restarts from the last *valid* checkpoint before the
+    #: failure is re-raised. 0 = one attempt, no retries.
+    max_retries: int = 3
+    #: base seconds of the supervisor's exponential backoff: retry k sleeps
+    #: ``retry_backoff * 2**(k-1)``. 0 = retry immediately (tests/benches).
+    retry_backoff: float = 0.0
+    #: keep-last-K checkpoint retention (0 = keep every cut). K >= 2 keeps
+    #: a rollback target when the newest checkpoint fails its checksum.
+    keep_checkpoints: int = 0
 
     def resolve_use_pallas(self) -> bool:
         return default_use_pallas() if self.use_pallas is None else self.use_pallas

@@ -1,0 +1,331 @@
+"""Deterministic fault injection + the graceful-degradation ladder (§13).
+
+Arabesque's fault-tolerance story (paper §5.5, and Aridhi et al.,
+arXiv:1212.0017) is superstep-granular: fail anywhere, restart from the
+last sealed cut. To *test* that story deterministically this module gives
+the runtime a :class:`FaultPlan` — an explicit list of (phase, superstep,
+kind) triples — tripped at every phase boundary of the BSP loop and at
+the shard halo-exchange path. A plan is exact and replayable: the same
+plan against the same run fails at the same instruction every time, which
+is what lets ``tests/test_faults.py`` assert bit-identical recovery.
+
+Three layers live here:
+
+* **Injection** — :class:`FaultSpec`/:class:`FaultPlan` and the injected
+  exception taxonomy (:class:`InjectedCrash`, :class:`InjectedOOM`,
+  :class:`InjectedHaloFailure`). Lethal kinds raise (or ``os._exit`` for
+  real-kill subprocess tests); benign kinds (``corrupt``, ``saturate``)
+  are consumed by the call site that simulates them via :meth:`FaultPlan.take`.
+  A plan is *stateful across retries*: a spec fires ``times`` times total,
+  shared through every supervisor attempt — so "crash at step 3 once"
+  means the retry sails past step 3.
+* **Classification** — :func:`classify_failure` maps an arbitrary caught
+  exception onto the failure taxonomy the supervisor retries over
+  (``oom`` / ``halo`` / ``crash``), matching real XLA OOM messages
+  (``RESOURCE_EXHAUSTED``) as well as the injected types.
+* **Degradation** — :func:`apply_degradation`, the ladder consulted when
+  the *same* phase fails twice: each rung returns a strictly safer
+  ``RunConfig`` (fused pipeline -> legacy chunk loop, device aggregation
+  -> host ``aggregate_rows``, Pallas -> jnp reference kernels,
+  ``all_to_all`` halo -> all-gather, ``device_budget_bytes`` halving on
+  OOM). Every rung is bit-identical by the guarantees of the PRs that
+  introduced the fast path, so a degraded retry still reproduces the
+  clean run's patterns exactly.
+
+``corrupt_checkpoint`` is the test half of the checkpoint-integrity
+format: it tampers a written cut while *keeping the stale embedded
+checksum*, producing exactly the artifact ``checkpoint.verify`` must
+reject and ``load_latest_valid`` must roll back past.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: process exit code of a ``kind="exit"`` fault — subprocess kill tests
+#: assert on it (mirrors examples/resume_after_crash.py).
+EXIT_CODE = 17
+
+#: where a plan can trip: the six loop phases (obs.PHASES) + the halo
+#: exchange inside expand (shard backend / partitioned serial).
+FAULT_PHASES = (
+    "materialize", "aggregate", "alpha", "expand", "seal", "checkpoint",
+    "halo",
+)
+
+#: lethal kinds abort the attempt at the trip site; benign kinds are
+#: consumed by the code path that simulates them (``FaultPlan.take``).
+LETHAL_KINDS = ("crash", "exit", "oom", "halo")
+BENIGN_KINDS = ("corrupt", "saturate")
+FAULT_KINDS = LETHAL_KINDS + BENIGN_KINDS
+
+
+class InjectedFault(RuntimeError):
+    """Root of every deterministically injected failure."""
+
+
+class InjectedCrash(InjectedFault):
+    """A generic process crash at a phase boundary (retryable)."""
+
+
+class InjectedOOM(InjectedFault):
+    """A simulated device allocation failure. The message carries the
+    real XLA marker so :func:`classify_failure` treats injected and real
+    OOMs identically."""
+
+
+class InjectedHaloFailure(InjectedFault):
+    """A failed halo exchange (lost worker / collective timeout)."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One planned fault: trip ``kind`` when ``phase`` runs at superstep
+    ``step``, up to ``times`` times across ALL supervisor attempts."""
+
+    phase: str
+    step: int
+    kind: str = "crash"
+    times: int = 1
+
+    def __post_init__(self) -> None:
+        if self.phase not in FAULT_PHASES:
+            raise ValueError(
+                f"unknown fault phase {self.phase!r} (one of {FAULT_PHASES})"
+            )
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r} (one of {FAULT_KINDS})"
+            )
+
+
+class FaultPlan:
+    """A deterministic schedule of faults, shared across retry attempts.
+
+    The plan is the *only* mutable state of the injection layer: each spec
+    carries a remaining-fire budget, decremented when it trips, so a
+    once-only crash does not re-fire on the supervised retry. ``fired``
+    records every (phase, step, kind) that actually tripped — tests assert
+    the schedule executed."""
+
+    def __init__(self, specs: Iterable[FaultSpec | Sequence]) -> None:
+        self.specs: List[FaultSpec] = [
+            s if isinstance(s, FaultSpec) else FaultSpec(*s) for s in specs
+        ]
+        self._remaining = [max(int(s.times), 0) for s in self.specs]
+        self.fired: List[Tuple[str, int, str]] = []
+
+    def _match(self, phase: str, step: int, kinds) -> Optional[str]:
+        for i, s in enumerate(self.specs):
+            if (
+                self._remaining[i] > 0
+                and s.phase == phase
+                and s.step == int(step)
+                and s.kind in kinds
+            ):
+                self._remaining[i] -= 1
+                self.fired.append((phase, int(step), s.kind))
+                return s.kind
+        return None
+
+    # -- injection sites -----------------------------------------------------
+    def trip(self, phase: str, step: int) -> None:
+        """Called at a phase boundary: fire any matching LETHAL spec.
+        Benign kinds never raise here — the simulating call site pulls
+        them via :meth:`take`."""
+        kind = self._match(phase, step, LETHAL_KINDS)
+        if kind is None:
+            return
+        if kind == "exit":
+            # a real kill: no unwinding, no atexit — the subprocess kill
+            # matrix asserts the parent sees EXIT_CODE
+            os._exit(EXIT_CODE)
+        if kind == "oom":
+            raise InjectedOOM(
+                f"RESOURCE_EXHAUSTED: injected device OOM at "
+                f"{phase}/step {step}"
+            )
+        if kind == "halo":
+            raise InjectedHaloFailure(
+                f"injected halo-exchange failure at step {step}"
+            )
+        raise InjectedCrash(f"injected crash at {phase}/step {step}")
+
+    def take(self, phase: str, step: int, kind: str) -> bool:
+        """Consume a matching BENIGN spec (``corrupt``/``saturate``);
+        returns whether one fired. The caller simulates the effect."""
+        if kind not in BENIGN_KINDS:
+            raise ValueError(f"take() is for benign kinds, not {kind!r}")
+        return self._match(phase, step, (kind,)) is not None
+
+    @property
+    def exhausted(self) -> bool:
+        return not any(self._remaining)
+
+
+def trip(plan: Optional[FaultPlan], phase: str, step: int) -> None:
+    """The one-liner the loop calls at each phase boundary: no-op on the
+    (default) ``faults=None`` path — a single attribute read."""
+    if plan is not None:
+        plan.trip(phase, step)
+
+
+def take(plan: Optional[FaultPlan], phase: str, step: int, kind: str) -> bool:
+    if plan is None:
+        return False
+    return plan.take(phase, step, kind)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint tampering: the adversarial half of the integrity format
+# ---------------------------------------------------------------------------
+
+def corrupt_checkpoint(path: str, mode: str = "payload") -> str:
+    """Tamper a written checkpoint in place.
+
+    ``mode="payload"`` flips one element of a payload array and re-saves
+    the archive **with the old embedded checksum** — a structurally valid
+    .npz whose SHA-256 no longer matches, exactly the artifact
+    ``checkpoint.verify`` must reject. ``mode="truncate"`` chops the file
+    in half (a torn write that never reached ``os.replace``) — unreadable
+    as a zip, also classified corrupt. Returns ``path``."""
+    if mode == "truncate":
+        with open(path, "r+b") as f:
+            f.truncate(max(os.path.getsize(path) // 2, 1))
+        return path
+    if mode != "payload":
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    with np.load(path, allow_pickle=False) as z:
+        arrays = {key: np.asarray(z[key]) for key in z.files}
+    for name in sorted(arrays):
+        if name in ("meta", "checksum"):
+            continue
+        a = arrays[name]
+        if a.size and np.issubdtype(a.dtype, np.number):
+            a = np.array(a, copy=True)
+            flat = a.reshape(-1)
+            if np.issubdtype(a.dtype, np.integer):
+                flat[0] = int(flat[0]) ^ 1
+            else:
+                flat[0] = float(flat[0]) + 1.0
+            arrays[name] = a
+            break
+    else:  # no numeric payload to flip (empty run): tear the file instead
+        return corrupt_checkpoint(path, mode="truncate")
+    np.savez(path, **arrays)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# failure classification: what the supervisor retries over
+# ---------------------------------------------------------------------------
+
+def classify_failure(exc: BaseException) -> str:
+    """Map a caught exception onto the retry taxonomy: ``"oom"`` (device
+    allocation — real RESOURCE_EXHAUSTED or injected), ``"halo"``
+    (exchange/collective failure), else ``"crash"``. Fatal config errors
+    (fingerprint mismatches) are the supervisor's business — it only calls
+    this for failures raised *inside* a mining attempt."""
+    if isinstance(exc, InjectedOOM):
+        return "oom"
+    if isinstance(exc, InjectedHaloFailure):
+        return "halo"
+    msg = str(exc)
+    if "RESOURCE_EXHAUSTED" in msg or "out of memory" in msg.lower():
+        return "oom"
+    return "crash"
+
+
+# ---------------------------------------------------------------------------
+# the graceful-degradation ladder (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+#: floor of ``device_budget_bytes`` halving — below this a wave holds a
+#: handful of rows and further halving cannot help.
+_BUDGET_FLOOR = 1 << 16
+#: seed budget when OOM strikes a run that never set one (2x halvable).
+_BUDGET_SEED = 1 << 26
+
+
+def apply_degradation(config, phase: str, kind: str):
+    """One rung down the ladder for a repeated (phase, kind) failure.
+
+    Returns ``(new_config, event)`` where ``event`` names the downshift
+    (recorded as an obs counter + span attribute in the trace), or
+    ``(config, None)`` when no safer configuration remains. Every rung is
+    behaviour-preserving: the slow path it falls back to is the measured
+    reference the fast path was verified against."""
+    if kind == "oom":
+        # rung 1: halve the spill-wave budget — the direct remedy for a
+        # frontier wave outgrowing device memory
+        budget = config.device_budget_bytes
+        if budget is None:
+            new = _BUDGET_SEED
+            return (
+                dataclasses.replace(config, device_budget_bytes=new),
+                f"budget_capped:{new}",
+            )
+        if budget > _BUDGET_FLOOR:
+            new = max(budget // 2, _BUDGET_FLOOR)
+            return (
+                dataclasses.replace(config, device_budget_bytes=new),
+                f"budget_halved:{new}",
+            )
+        # rung 2: drop the fused pipeline (smaller per-chunk footprint)
+        if config.async_chunks:
+            return (
+                dataclasses.replace(config, async_chunks=False),
+                "fused_off",
+            )
+        return config, None
+
+    if kind == "halo" or phase == "halo":
+        # all_to_all exchange -> ragged all-gather fallback (PR 6)
+        if config.resolve_halo() != "gather":
+            return dataclasses.replace(config, halo="gather"), "halo_gather"
+        return config, None
+
+    if phase in ("aggregate", "alpha"):
+        # device level-1 aggregation -> host aggregate_rows reference
+        if config.device_aggregate:
+            return (
+                dataclasses.replace(config, device_aggregate=False),
+                "host_aggregate",
+            )
+        if config.resolve_aggregate_kernel():
+            return (
+                dataclasses.replace(config, aggregate_kernel=False),
+                "aggregate_kernel_off",
+            )
+        return config, None
+
+    if phase in ("materialize", "expand", "seal"):
+        # rung 1: fused pipeline -> legacy chunk loop
+        if config.async_chunks:
+            return (
+                dataclasses.replace(config, async_chunks=False),
+                "fused_off",
+            )
+        # rung 2: Pallas kernels -> jnp reference lowerings
+        if (
+            config.resolve_use_pallas()
+            or config.resolve_compact_kernel()
+            or config.fused_expand
+        ):
+            return (
+                dataclasses.replace(
+                    config,
+                    use_pallas=False,
+                    fused_expand=False,
+                    compact_kernel=False,
+                ),
+                "pallas_off",
+            )
+        return config, None
+
+    # checkpoint-phase failures have no safer configuration — retry from
+    # the previous cut IS the remedy
+    return config, None

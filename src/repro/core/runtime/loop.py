@@ -32,6 +32,7 @@ from repro.core.graph import (
     DeviceGraph, Graph, PartitionedGraph, to_device, to_partitioned,
 )
 from repro.core.runtime import checkpoint as checkpoint_lib
+from repro.core.runtime import faults as faults_lib
 from repro.core.runtime import programs
 from repro.core.runtime.backend import ExecutionBackend
 from repro.core.runtime.config import RunConfig
@@ -47,6 +48,10 @@ class MiningResult:
     #: Chrome trace exported by this run (``trace=True`` + ``trace_dir``;
     #: DESIGN.md §12), None otherwise.
     trace_path: Optional[str] = None
+    #: recovery report of a supervised run that retried (DESIGN.md §13):
+    #: {n_retries, t_recovery, degradations, rolled_back, resumed_step}.
+    #: None for a clean run (or one not under ``run_supervised``).
+    recovery: Optional[Dict] = None
 
     def pattern_count(self, code) -> int:
         return self.patterns.get(tuple(int(x) for x in code), 0)
@@ -121,6 +126,20 @@ class SuperstepRuntime:
         observer.start()
         t_start = time.perf_counter()
 
+        #: fault-injection plan (DESIGN.md §13): None (default) makes every
+        #: trip a single attribute read. ``self.failed_phase`` names the
+        #: phase an exception escaped from — the supervisor's ladder key.
+        plan: Optional[faults_lib.FaultPlan] = config.faults
+        self.failed_phase: Optional[str] = None
+        #: recovery attribution stamped by ``run_supervised`` before a
+        #: retry attempt: lands on the first step this attempt executes
+        #: (StepStats.n_retries / t_recovery) + an instant trace span.
+        recovery = getattr(self, "recovery", None)
+        self.recovery = None
+        if recovery is not None:
+            with obs.span("recovery", **recovery):
+                pass
+
         if state is None:
             result = MiningResult(
                 patterns={}, aggregates=[], stats=RunStats(), embeddings={}
@@ -151,6 +170,10 @@ class SuperstepRuntime:
                 if b == 0:
                     break
                 st = StepStats(step=step, size=size, n_frontier=b)
+                if recovery is not None:
+                    st.n_retries = int(recovery.get("n_retries", 0))
+                    st.t_recovery = float(recovery.get("t_recovery", 0.0))
+                    recovery = None
                 st.frontier_bytes = store.raw_bytes
                 if store.kind == "odag":
                     st.odag_bytes = store.stored_bytes
@@ -159,6 +182,8 @@ class SuperstepRuntime:
                 with obs.span("superstep", step=step, size=size, frontier=b):
                     # ---- re-materialise the frontier (waves / slices) ----
                     with obs.span("materialize", step=step):
+                        self.failed_phase = "materialize"
+                        faults_lib.trip(plan, "materialize", step)
                         blocks = backend.begin_step(store, st)
                         # extraction may resurrect pattern-pruned rows (a
                         # superset of the appended rows; see ODAGStore) —
@@ -178,6 +203,8 @@ class SuperstepRuntime:
                         with obs.span(
                             "aggregate", step=step, frontier=st.n_frontier
                         ), obs.annotate("aggregate"):
+                            self.failed_phase = "aggregate"
+                            faults_lib.trip(plan, "aggregate", step)
                             agg, canon_slot = backend.aggregate_step(
                                 blocks, size, carried, st
                             )
@@ -187,6 +214,8 @@ class SuperstepRuntime:
 
                     # ---- alpha: aggregation filter on the frontier -------
                     with obs.span("alpha", step=step):
+                        self.failed_phase = "alpha"
+                        faults_lib.trip(plan, "alpha", step)
                         if agg is not None:
                             if canon_slot is not None:
                                 # host path: per-row alpha over per-row
@@ -253,10 +282,14 @@ class SuperstepRuntime:
                         with obs.span(
                             "expand", step=step, frontier=b_live
                         ), obs.annotate("expand"):
+                            self.failed_phase = "expand"
+                            faults_lib.trip(plan, "expand", step)
                             carried = backend.expand(store, blocks, size, st)
                             obs.fence(carried)
                         obs.set_stat(st, "t_expand", timer.lap())
                         with obs.span("seal", step=step):
+                            self.failed_phase = "seal"
+                            faults_lib.trip(plan, "seal", step)
                             store.seal(size + 1)
                             st.n_children = store.n_rows
                         obs.count(st, "t_storage", timer.lap())
@@ -272,6 +305,8 @@ class SuperstepRuntime:
                             with obs.span(
                                 "checkpoint", step=step
                             ), obs.annotate("checkpoint"):
+                                self.failed_phase = "checkpoint"
+                                faults_lib.trip(plan, "checkpoint", step)
                                 obs.set_stat(
                                     st, "t_checkpoint",
                                     ckpt.save(
@@ -284,6 +319,17 @@ class SuperstepRuntime:
                                         + (time.perf_counter() - t_start),
                                     ),
                                 )
+                                # benign corruption fault: tamper the cut
+                                # just written (keeps the stale checksum)
+                                # so resume must detect + roll back past it
+                                if faults_lib.take(
+                                    plan, "checkpoint", step, "corrupt"
+                                ):
+                                    faults_lib.corrupt_checkpoint(
+                                        checkpoint_lib.checkpoint_path(
+                                            ckpt.directory, step + 1
+                                        )
+                                    )
                 observer.step_done(st)
                 if done or store.n_rows == 0:
                     break
@@ -293,6 +339,7 @@ class SuperstepRuntime:
                 time.perf_counter() - t_start
             )
             backend.finalize(result.stats)
+            self.failed_phase = None
             result.trace_path = observer.finish(
                 wall_time=result.stats.wall_time
             )
@@ -300,9 +347,11 @@ class SuperstepRuntime:
         finally:
             # exception path: uninstall the tracer/registry so a failed
             # traced run can't leak observation into later runs; exports
-            # the partial trace (idempotent after a normal finish)
+            # the partial trace (idempotent after a normal finish), marked
+            # aborted so render_trace skips the phase-coverage gate
             observer.finish(
-                wall_time=prior_wall + (time.perf_counter() - t_start)
+                wall_time=prior_wall + (time.perf_counter() - t_start),
+                aborted=True,
             )
 
 
@@ -320,3 +369,97 @@ def resume(
     notably the worker count (elastic restore) — but the store kind must
     match the payload and graph/app must fingerprint-match."""
     return SuperstepRuntime(graph, app, config, backend).resume(checkpoint)
+
+
+def run_supervised(
+    graph: Graph | DeviceGraph,
+    app: MiningApp,
+    config: Optional[RunConfig] = None,
+    backend: Optional[ExecutionBackend] = None,
+) -> MiningResult:
+    """The fault-tolerant entry point (DESIGN.md §13): the BSP loop under
+    a supervisor with bounded retry from the last *valid* checkpoint.
+
+    On a failed attempt the supervisor classifies the failure
+    (``faults.classify_failure``), sleeps the exponential backoff
+    (``retry_backoff * 2**(k-1)``), reloads the newest checkpoint whose
+    SHA-256 verifies (``checkpoint.load_latest_valid`` — corrupt cuts are
+    rolled back past automatically), and re-runs. When the SAME phase
+    fails repeatedly — or immediately for deterministic resource failures
+    (OOM, halo) — it consults the graceful-degradation ladder
+    (``faults.apply_degradation``) and retries under a strictly safer
+    config; every downshift is recorded in the recovery span of the trace
+    and the retry attempt stamps ``StepStats.n_retries``/``t_recovery``
+    on its first step. After ``max_retries`` failed retries the last
+    failure re-raises. Fingerprint mismatches (wrong graph/app) raise
+    immediately — a config error, not a fault.
+
+    With no ``checkpoint_dir`` configured, a private temporary directory
+    with ``checkpoint_every=1`` provides the retry cut (cleaned up on
+    return); a configured directory is used as-is, cadence included."""
+    import tempfile
+
+    config = config if config is not None else RunConfig()
+    owned_dir = None
+    if config.checkpoint_dir is None:
+        owned_dir = tempfile.TemporaryDirectory(prefix="repro-supervise-")
+        config = dataclasses.replace(
+            config, checkpoint_dir=owned_dir.name, checkpoint_every=1
+        )
+    try:
+        attempt = 0              # retries consumed so far
+        fail_counts: Dict[tuple, int] = {}
+        degradations: List[str] = []
+        pending_t = 0.0          # recovery seconds accrued in the except arm
+        while True:
+            t0 = time.perf_counter()
+            runtime = SuperstepRuntime(graph, app, config, backend)
+            state = None
+            if attempt:
+                # newest checkpoint that passes its checksum; corrupt cuts
+                # (including one the failure itself tore) are skipped
+                state, _, skipped = checkpoint_lib.load_latest_valid(
+                    config.checkpoint_dir, runtime.g, app
+                )
+                if state is not None:
+                    runtime.store.from_state_dict(state.store_state)
+                    runtime.backend.capacity = max(int(state.capacity), 1)
+                runtime.recovery = {
+                    "n_retries": attempt,
+                    "t_recovery": round(
+                        pending_t + (time.perf_counter() - t0), 6
+                    ),
+                    "degradations": list(degradations),
+                    "rolled_back": len(skipped),
+                    "resumed_step": int(state.step) if state else 0,
+                }
+            recovery_report = getattr(runtime, "recovery", None)
+            try:
+                result = runtime._run(state)
+                result.recovery = recovery_report
+                return result
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as exc:
+                attempt += 1
+                if attempt > max(int(config.max_retries), 0):
+                    raise
+                t_fail = time.perf_counter()
+                kind = faults_lib.classify_failure(exc)
+                phase = getattr(runtime, "failed_phase", None) or "expand"
+                key = (phase, kind)
+                fail_counts[key] = fail_counts.get(key, 0) + 1
+                # the ladder: repeated failure of the same phase — or any
+                # deterministic resource failure — downshifts the config
+                if fail_counts[key] >= 2 or kind in ("oom", "halo"):
+                    config, event = faults_lib.apply_degradation(
+                        config, phase, kind
+                    )
+                    if event is not None:
+                        degradations.append(event)
+                if config.retry_backoff > 0:
+                    time.sleep(config.retry_backoff * 2 ** (attempt - 1))
+                pending_t = time.perf_counter() - t_fail
+    finally:
+        if owned_dir is not None:
+            owned_dir.cleanup()

@@ -32,6 +32,7 @@ import numpy as np
 from repro.core import aggregation, explore, obs, pattern as pattern_lib
 from repro.core.api import MiningApp
 from repro.core.graph import PartitionedGraph
+from repro.core.runtime import faults as faults_lib
 from repro.core.runtime import programs
 from repro.core.runtime.backend import ExecutionBackend
 from repro.core.runtime.config import next_pow2
@@ -188,6 +189,13 @@ class SerialBackend(ExecutionBackend):
         if lvl1 is None:
             lvl1 = self._fold_waves(blocks, size)
         res = lvl1.finish()
+        if res is not None and faults_lib.take(
+            self.config.faults, "aggregate", st.step, "saturate"
+        ):
+            # injected count saturation (DESIGN.md §13): discard the packed
+            # result exactly as a tripped saturation flag would, forcing
+            # the wide re-fold below — same recovery path, deterministic
+            res = None
         if res is None:
             # a chunk partial or eager compaction overflowed: the carried
             # state is unrecoverable on device, so re-fold from the waves

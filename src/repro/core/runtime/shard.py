@@ -37,6 +37,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import aggregation, explore, obs, pattern as pattern_lib
 from repro.core.api import MiningApp
 from repro.core.graph import PartitionedGraph
+from repro.core.runtime import faults as faults_lib
 from repro.core.runtime import programs
 from repro.core.runtime.backend import ExecutionBackend
 from repro.core.runtime.config import next_pow2
@@ -719,6 +720,13 @@ class ShardMapBackend(ExecutionBackend):
         )
         flags = np.asarray(jnp.stack([gn[0], gcorrupt[0].astype(gn.dtype)]))
         obs.count(st, "bytes_to_host", flags.nbytes)
+        if faults_lib.take(
+            self.config.faults, "aggregate", st.step, "saturate"
+        ):
+            # injected saturation: route through the host reference path
+            # exactly as a tripped overflow flag would (DESIGN.md §13)
+            flags = flags.copy()
+            flags[1] = 1
         if int(flags[1]):
             # a worker's distinct table overflowed the pattern-sized cap:
             # host reference path for this step, bigger cap for the next
@@ -803,6 +811,11 @@ class ShardMapBackend(ExecutionBackend):
         halo_bytes = (
             self._halo_bytes(per, size) if self._partitioned else 0
         )
+        if self._partitioned:
+            # the halo-exchange injection site (DESIGN.md §13): a planned
+            # "halo" fault aborts here exactly where a lost worker would
+            # surface; the supervisor's ladder answers with halo="gather"
+            faults_lib.trip(self.config.faults, "halo", st.step)
         if self._partitioned and obs.sync_active():
             # trace_sync probe (DESIGN.md §12): the halo exchange runs
             # INSIDE the jitted superstep, so its share of t_expand is only

@@ -52,6 +52,15 @@ class StepStats:
     #: 0.0 when checkpointing is off or the cadence skipped the step.
     #: ``bench_checkpoint.py`` gates the sum at ≤5% of superstep wall time.
     t_checkpoint: float = 0.0
+    #: supervisor retries that preceded this step's (re-)execution
+    #: (DESIGN.md §13): stamped by ``run_supervised`` on the first step of
+    #: each recovery attempt, 0 everywhere else.
+    n_retries: int = 0
+    #: seconds the supervisor spent RECOVERING before this step re-ran:
+    #: checkpoint reload + validation + backend rebuild + backoff sleep —
+    #: the pure fault-tolerance tax, excluding re-mined supersteps.
+    #: ``bench_faults.py`` gates the sum at ≤15% of superstep wall.
+    t_recovery: float = 0.0
 
     @property
     def compression(self) -> float:

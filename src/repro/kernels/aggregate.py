@@ -49,6 +49,15 @@ from repro.kernels.dispatch import resolve_interpret
 #: allow; larger capacities route to the jnp segment path.
 VMEM_SLOT_LIMIT = 4 * 2**20
 
+#: the int32 count ceiling (DESIGN.md §13): when a pipeline stage must
+#: narrow per-pattern counts to int32 (the fused chunk programs' partial
+#: emission), it SATURATES at this sentinel instead of wrapping negative.
+#: ``DeviceLevel1.fold_partial`` detects the sentinel on device and its
+#: finish drain reports it (7th scalar of the one flags read) — the caller
+#: then re-folds the step from the frontier waves in int64, so totals past
+#: 2^31 stay exact instead of silently corrupting.
+I32_SAT = 2**31 - 1
+
 
 def fits_vmem(cap: int) -> bool:
     """True when the two (cap + 1) int32 slot windows are VMEM-sized."""
@@ -216,6 +225,12 @@ def bin_rows(codes, valid, cap: int, weights=None, *, use_kernel: bool = False,
         return (jnp.zeros((cap, 3), jnp.int64), jnp.zeros((cap,), jnp.int64),
                 jnp.zeros((0,), jnp.int32), jnp.zeros((), jnp.int32),
                 jnp.zeros((cap,), bool))
+    if weights is None and b >= I32_SAT:
+        # static wide guard: the unweighted path accumulates per-slot
+        # counts in int32 inside the seg-unique kernels, exact only while
+        # a slot's count (<= B, a static shape) fits — past that, route
+        # through the int64 weighted segment-sum instead of wrapping
+        weights = jnp.ones((b,), jnp.int64)
     sc, sv, order = sort_codes(codes, valid)
     prev_diff = jnp.concatenate(
         [jnp.ones((1,), bool), (sc[1:] != sc[:-1]).any(axis=1)]

@@ -297,6 +297,144 @@ def test_resume_preserves_stats_history(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# §13 kill matrix: crash at EVERY phase boundary x both backends — the
+# supervised run must equal the uninterrupted one bit-identically
+# ---------------------------------------------------------------------------
+
+from repro.core import run_supervised  # noqa: E402  (§13 additions)
+from repro.core.runtime import FaultPlan, FaultSpec  # noqa: E402
+from repro.core.runtime import faults as faults_lib  # noqa: E402
+
+KILL_PHASES = (
+    "materialize", "aggregate", "alpha", "expand", "seal", "checkpoint",
+)
+
+
+def _km_graph():
+    return G.random_labeled(40, 90, n_labels=3, seed=3)
+
+
+def _km_app():
+    return MotifsApp(max_size=3, collect_embeddings=True)
+
+
+_KM_CLEAN = {}
+
+
+def _km_clean(backend):
+    if backend not in _KM_CLEAN:
+        if backend == "serial":
+            _KM_CLEAN[backend] = run(_km_graph(), _km_app(),
+                                     EngineConfig(**SMALL))
+        else:
+            _KM_CLEAN[backend] = run_distributed(
+                _km_graph(), _km_app(), jax.make_mesh((1,), ("data",)),
+                DistConfig(),
+            )
+    return _KM_CLEAN[backend]
+
+
+@pytest.mark.parametrize("phase", KILL_PHASES)
+def test_kill_matrix_serial(phase, tmp_path):
+    plan = FaultPlan([FaultSpec(phase, 2, "crash")])
+    res = run_supervised(
+        _km_graph(), _km_app(),
+        EngineConfig(**SMALL, faults=plan, checkpoint_dir=str(tmp_path)),
+    )
+    assert plan.fired == [(phase, 2, "crash")], "fault did not trip"
+    _assert_same(_km_clean("serial"), res)
+    assert res.recovery["n_retries"] == 1
+    assert res.recovery["degradations"] == []
+
+
+@pytest.mark.parametrize("phase", KILL_PHASES)
+def test_kill_matrix_shard(phase, tmp_path):
+    plan = FaultPlan([FaultSpec(phase, 2, "crash")])
+    res = run_supervised(
+        _km_graph(), _km_app(),
+        DistConfig(faults=plan, checkpoint_dir=str(tmp_path)),
+        ShardMapBackend(jax.make_mesh((1,), ("data",))),
+    )
+    assert plan.fired == [(phase, 2, "crash")], "fault did not trip"
+    _assert_same(_km_clean("shard"), res)
+    assert res.recovery["n_retries"] == 1
+
+
+# ---------------------------------------------------------------------------
+# real process death (kind "exit"): the in-process matrix above raises;
+# this one actually kills the interpreter mid-superstep, then a fresh
+# process resumes from the surviving cut
+# ---------------------------------------------------------------------------
+
+KILL_SCRIPT = textwrap.dedent(
+    """
+    import sys
+    from repro.core import EngineConfig, graph as G, run
+    from repro.core.apps import MotifsApp
+    from repro.core.runtime import FaultPlan, FaultSpec
+
+    plan = FaultPlan([FaultSpec(sys.argv[2], int(sys.argv[3]), "exit")])
+    run(
+        G.random_labeled(40, 90, n_labels=3, seed=3),
+        MotifsApp(max_size=3, collect_embeddings=True),
+        EngineConfig(chunk_size=64, initial_capacity=64,
+                     checkpoint_dir=sys.argv[1], faults=plan),
+    )
+    raise SystemExit("fault never tripped")
+    """
+)
+
+
+def test_kill_matrix_real_process_death(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-W", "ignore", "-c", KILL_SCRIPT,
+         str(tmp_path), "seal", "2"],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == faults_lib.EXIT_CODE, proc.stderr[-3000:]
+    # no torn staging file survives the kill; the cut before it does
+    assert _ckpts(str(tmp_path)), "no checkpoint survived the kill"
+    resumed = resume(
+        _km_graph(), _km_app(), str(tmp_path), EngineConfig(**SMALL)
+    )
+    _assert_same(_km_clean("serial"), resumed)
+
+
+# ---------------------------------------------------------------------------
+# stale staging-file sweep (§13 satellite): orphaned *.tmp-* checkpoints
+# from a killed writer are removed on resume, never mistaken for cuts
+# ---------------------------------------------------------------------------
+
+def test_stale_tmp_swept_on_resume(tmp_path):
+    g = _km_graph()
+    ref = run(
+        g, _km_app(), EngineConfig(**SMALL, checkpoint_dir=str(tmp_path))
+    )
+    orphan = tmp_path / "ckpt-step0002.npz.tmp-9999.npz"
+    orphan.write_bytes(b"torn half-written payload")
+    bystander = tmp_path / "unrelated.npz"
+    bystander.write_bytes(b"not a staging file")
+    resumed = resume(g, _km_app(), str(tmp_path), EngineConfig(**SMALL))
+    assert not orphan.exists(), "orphaned staging file survived resume"
+    assert bystander.exists(), "sweep removed a non-staging file"
+    _assert_same(ref, resumed)
+
+
+def test_sweep_stale_tmp_direct(tmp_path):
+    from repro.core.runtime import sweep_stale_tmp
+
+    orphan = tmp_path / "ckpt-step0007.npz.tmp-12345.npz"
+    orphan.write_bytes(b"x")
+    (tmp_path / "ckpt-step0007.npz").write_bytes(b"real cut")
+    removed = sweep_stale_tmp(str(tmp_path))
+    assert [os.path.basename(p) for p in removed] == [orphan.name]
+    assert (tmp_path / "ckpt-step0007.npz").exists()
+    assert sweep_stale_tmp(str(tmp_path / "missing")) == []
+
+
+# ---------------------------------------------------------------------------
 # elastic restore on a real multi-device mesh (subprocess, @slow)
 # ---------------------------------------------------------------------------
 

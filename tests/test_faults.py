@@ -1,0 +1,402 @@
+"""Fault-tolerance subsystem tests (DESIGN.md §13).
+
+Covers the deterministic injection layer (FaultSpec/FaultPlan semantics,
+fire budgets shared across retries), checkpoint integrity (SHA-256
+payload checksums, corrupt-cut detection and rollback, keep-last-K
+retention), the ``run_supervised`` supervisor (bounded retry from the
+last valid checkpoint, bit-identical recovery, retries-exhausted
+re-raise), every rung of the graceful-degradation ladder, the int32
+count-saturation satellite (counts > 2^31 stay exact via the wide
+re-fold), and recovery visibility in the obs trace.
+
+The full crash-at-every-phase × backend kill matrix lives in
+``tests/test_checkpoint.py`` next to the resume identity tests.
+
+Graphs stay ~40 vertices: every engine run here is sub-second.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FaultPlan,
+    FaultSpec,
+    RunConfig,
+    aggregation,
+    graph as G,
+    run,
+    run_supervised,
+)
+from repro.core.apps import FSMApp, MotifsApp
+from repro.core.runtime import ShardMapBackend, checkpoint as ckpt_lib
+from repro.core.runtime import faults as faults_lib
+from repro.kernels import aggregate as agg_kernel
+
+SMALL = dict(chunk_size=64, initial_capacity=64)
+
+
+def _graph():
+    return G.random_labeled(40, 90, n_labels=3, seed=3)
+
+
+_CLEAN = {}
+
+
+def _clean(max_size=3):
+    if max_size not in _CLEAN:
+        _CLEAN[max_size] = run(
+            _graph(), MotifsApp(max_size=max_size), RunConfig(**SMALL)
+        )
+    return _CLEAN[max_size]
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+# ---------------------------------------------------------------------------
+# the injection layer
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validates_phase_and_kind():
+    with pytest.raises(ValueError):
+        FaultSpec("warp", 1, "crash")
+    with pytest.raises(ValueError):
+        FaultSpec("expand", 1, "gremlin")
+    FaultSpec("halo", 2, "halo")  # the exchange site is a valid phase
+
+
+def test_fault_plan_fire_budget_and_record():
+    plan = FaultPlan([FaultSpec("expand", 2, "crash", times=2)])
+    with pytest.raises(faults_lib.InjectedCrash):
+        plan.trip("expand", 2)
+    plan.trip("expand", 1)          # wrong step: no fire
+    plan.trip("seal", 2)            # wrong phase: no fire
+    with pytest.raises(faults_lib.InjectedCrash):
+        plan.trip("expand", 2)
+    plan.trip("expand", 2)          # budget spent: no fire
+    assert plan.fired == [("expand", 2, "crash")] * 2
+    assert plan.exhausted
+
+
+def test_fault_plan_benign_take_never_raises_in_trip():
+    plan = FaultPlan([("checkpoint", 2, "corrupt"), ("aggregate", 2,
+                                                     "saturate")])
+    plan.trip("checkpoint", 2)      # benign kinds don't trip lethally
+    plan.trip("aggregate", 2)
+    assert plan.fired == []
+    assert plan.take("checkpoint", 2, "corrupt")
+    assert not plan.take("checkpoint", 2, "corrupt")  # consumed
+    assert plan.take("aggregate", 2, "saturate")
+    with pytest.raises(ValueError):
+        plan.take("expand", 2, "crash")  # lethal kinds go through trip()
+
+
+def test_injected_kinds_raise_their_types():
+    plan = FaultPlan([
+        FaultSpec("expand", 1, "oom"),
+        FaultSpec("halo", 1, "halo"),
+    ])
+    with pytest.raises(faults_lib.InjectedOOM, match="RESOURCE_EXHAUSTED"):
+        plan.trip("expand", 1)
+    with pytest.raises(faults_lib.InjectedHaloFailure):
+        plan.trip("halo", 1)
+
+
+def test_classify_failure():
+    assert faults_lib.classify_failure(faults_lib.InjectedOOM("x")) == "oom"
+    assert faults_lib.classify_failure(
+        faults_lib.InjectedHaloFailure("x")) == "halo"
+    assert faults_lib.classify_failure(
+        RuntimeError("RESOURCE_EXHAUSTED: Out of memory")) == "oom"
+    assert faults_lib.classify_failure(
+        RuntimeError("cuda OUT OF MEMORY allocating")) == "oom"
+    assert faults_lib.classify_failure(RuntimeError("segfault-ish")) == "crash"
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity: checksums, corruption, rollback, retention
+# ---------------------------------------------------------------------------
+
+def _checkpointed_run(td, **kw):
+    cfg = RunConfig(**SMALL, checkpoint_dir=str(td), checkpoint_every=1, **kw)
+    return run(_graph(), MotifsApp(max_size=3), cfg)
+
+
+def test_checksum_rides_the_checkpoint_and_verifies(tmp_path):
+    _checkpointed_run(tmp_path)
+    paths = ckpt_lib.list_checkpoints(str(tmp_path))
+    assert paths
+    arrays = ckpt_lib.verify(paths[0])
+    assert "checksum" in arrays          # the embedded integrity record
+    ckpt_lib.load(paths[0])              # verifies + parses
+
+
+@pytest.mark.parametrize("mode", ["payload", "truncate"])
+def test_corrupt_checkpoint_detected(tmp_path, mode):
+    _checkpointed_run(tmp_path)
+    newest = ckpt_lib.latest_checkpoint(str(tmp_path))
+    faults_lib.corrupt_checkpoint(newest, mode=mode)
+    with pytest.raises(ckpt_lib.CheckpointCorruptError):
+        ckpt_lib.load(newest)
+
+
+def test_load_latest_valid_rolls_back_past_corrupt(tmp_path):
+    _checkpointed_run(tmp_path)
+    paths = ckpt_lib.list_checkpoints(str(tmp_path))
+    assert len(paths) >= 2
+    faults_lib.corrupt_checkpoint(paths[0])
+    state, path, skipped = ckpt_lib.load_latest_valid(
+        str(tmp_path), rt_g(), MotifsApp(max_size=3)
+    )
+    assert path == paths[1] and skipped == [paths[0]]
+    assert state is not None
+    # every cut corrupt -> no state, all skipped
+    for p in paths[1:]:
+        faults_lib.corrupt_checkpoint(p)
+    state, path, skipped = ckpt_lib.load_latest_valid(
+        str(tmp_path), rt_g(), MotifsApp(max_size=3)
+    )
+    assert state is None and path is None and len(skipped) == len(paths)
+
+
+def rt_g():
+    from repro.core import to_device
+    return to_device(_graph())
+
+
+def test_fingerprint_mismatch_is_fatal_not_corrupt(tmp_path):
+    _checkpointed_run(tmp_path)
+    with pytest.raises(ValueError, match="different app"):
+        ckpt_lib.load_latest_valid(
+            str(tmp_path), rt_g(), MotifsApp(max_size=4)
+        )
+
+
+def test_keep_checkpoints_retention(tmp_path):
+    res = _checkpointed_run(tmp_path, keep_checkpoints=2)
+    assert len(res.stats.steps) >= 3
+    paths = ckpt_lib.list_checkpoints(str(tmp_path))
+    assert len(paths) == 2               # only the newest K cuts survive
+    for p in paths:
+        ckpt_lib.verify(p)
+
+
+# ---------------------------------------------------------------------------
+# the supervisor: retry, rollback, ladder
+# ---------------------------------------------------------------------------
+
+def test_supervised_recovers_from_crash_bit_identically():
+    clean = _clean()
+    plan = FaultPlan([FaultSpec("expand", 2, "crash")])
+    res = run_supervised(
+        _graph(), MotifsApp(max_size=3), RunConfig(**SMALL, faults=plan)
+    )
+    assert res.patterns == clean.patterns
+    assert plan.fired == [("expand", 2, "crash")]
+    assert res.recovery["n_retries"] == 1
+    assert res.recovery["degradations"] == []
+    # the retry attempt stamped its first re-executed step
+    marked = [s for s in res.stats.steps if s.n_retries]
+    assert len(marked) == 1 and marked[0].step == 2
+    assert marked[0].t_recovery > 0
+
+
+def test_supervised_rolls_back_past_injected_corruption():
+    clean = _clean(max_size=4)
+    # corrupt the newest cut, then crash: the supervisor must detect the
+    # checksum mismatch and resume from the previous valid checkpoint
+    plan = FaultPlan([
+        FaultSpec("checkpoint", 2, "corrupt"),
+        FaultSpec("expand", 3, "crash"),
+    ])
+    res = run_supervised(
+        _graph(), MotifsApp(max_size=4), RunConfig(**SMALL, faults=plan)
+    )
+    assert res.patterns == clean.patterns
+    assert res.recovery["rolled_back"] == 1
+    assert res.recovery["resumed_step"] == 2   # the cut BEFORE the corrupt one
+
+
+def test_supervised_reraises_after_retry_budget():
+    plan = FaultPlan([FaultSpec("expand", 2, "crash", times=99)])
+    cfg = RunConfig(**SMALL, faults=plan, max_retries=2)
+    with pytest.raises(faults_lib.InjectedCrash):
+        run_supervised(_graph(), MotifsApp(max_size=3), cfg)
+    assert len(plan.fired) == 3          # 1 attempt + 2 retries
+
+
+def test_ladder_oom_caps_then_halves_budget():
+    clean = _clean()
+    plan = FaultPlan([FaultSpec("expand", 2, "oom")])
+    res = run_supervised(
+        _graph(), MotifsApp(max_size=3), RunConfig(**SMALL, faults=plan)
+    )
+    assert res.patterns == clean.patterns
+    assert res.recovery["degradations"] == [
+        f"budget_capped:{faults_lib._BUDGET_SEED}"
+    ]
+    # with a budget already set, OOM halves it
+    plan = FaultPlan([FaultSpec("expand", 2, "oom")])
+    cfg = RunConfig(**SMALL, faults=plan, device_budget_bytes=1 << 20)
+    res = run_supervised(_graph(), MotifsApp(max_size=3), cfg)
+    assert res.patterns == clean.patterns
+    assert res.recovery["degradations"] == [f"budget_halved:{1 << 19}"]
+
+
+def test_ladder_repeated_expand_crash_drops_fused_then_pallas():
+    clean = _clean()
+    plan = FaultPlan([FaultSpec("expand", 2, "crash", times=3)])
+    cfg = RunConfig(**SMALL, faults=plan, max_retries=5, use_pallas=True,
+                    pallas_interpret=True)
+    res = run_supervised(_graph(), MotifsApp(max_size=3), cfg)
+    assert res.patterns == clean.patterns
+    assert res.recovery["degradations"] == ["fused_off", "pallas_off"]
+
+
+def test_ladder_repeated_aggregate_crash_goes_host():
+    clean = _clean()
+    plan = FaultPlan([FaultSpec("aggregate", 2, "crash", times=2)])
+    res = run_supervised(
+        _graph(), MotifsApp(max_size=3),
+        RunConfig(**SMALL, faults=plan, max_retries=4),
+    )
+    assert res.patterns == clean.patterns
+    assert res.recovery["degradations"] == ["host_aggregate"]
+
+
+def test_ladder_halo_failure_downshifts_to_gather():
+    clean = _clean()
+    plan = FaultPlan([FaultSpec("halo", 2, "halo")])
+    cfg = RunConfig(**SMALL, faults=plan, graph_partition=1)
+    res = run_supervised(
+        _graph(), MotifsApp(max_size=3), cfg, ShardMapBackend(_mesh1())
+    )
+    assert res.patterns == clean.patterns
+    assert res.recovery["degradations"] == ["halo_gather"]
+
+
+def test_apply_degradation_rungs_are_pure_config_transforms():
+    cfg = RunConfig()
+    c1, e1 = faults_lib.apply_degradation(cfg, "expand", "oom")
+    assert e1.startswith("budget_capped") and c1.device_budget_bytes
+    c2, e2 = faults_lib.apply_degradation(c1, "expand", "oom")
+    assert e2.startswith("budget_halved")
+    assert c2.device_budget_bytes == c1.device_budget_bytes // 2
+    c3, e3 = faults_lib.apply_degradation(cfg, "seal", "crash")
+    assert e3 == "fused_off" and c3.async_chunks is False
+    c4, e4 = faults_lib.apply_degradation(cfg, "alpha", "crash")
+    assert e4 == "host_aggregate" and c4.device_aggregate is False
+    c5, e5 = faults_lib.apply_degradation(cfg, "halo", "halo")
+    assert e5 == "halo_gather" and c5.resolve_halo() == "gather"
+    # checkpoint failures have no rung: retry is the remedy
+    c6, e6 = faults_lib.apply_degradation(cfg, "checkpoint", "crash")
+    assert e6 is None and c6 is cfg
+    # the original config is never mutated
+    assert cfg.device_budget_bytes is None and cfg.async_chunks
+
+
+def test_saturate_fault_exercises_wide_refold_both_backends():
+    clean = _clean()
+    plan = FaultPlan([FaultSpec("aggregate", 2, "saturate")])
+    res = run(_graph(), MotifsApp(max_size=3), RunConfig(**SMALL,
+                                                         faults=plan))
+    assert res.patterns == clean.patterns
+    assert plan.fired == [("aggregate", 2, "saturate")]
+    from repro.core.distributed import run_distributed
+    plan = FaultPlan([FaultSpec("aggregate", 2, "saturate")])
+    res = run_distributed(
+        _graph(), MotifsApp(max_size=3), _mesh1(),
+        RunConfig(**SMALL, faults=plan),
+    )
+    assert res.patterns == clean.patterns
+    assert plan.fired == [("aggregate", 2, "saturate")]
+
+
+def test_supervised_fsm_with_domains_recovers():
+    g = _graph()
+    app = FSMApp(support=3, max_size=3)
+    clean = run(g, app, RunConfig(**SMALL))
+    plan = FaultPlan([FaultSpec("aggregate", 2, "crash")])
+    res = run_supervised(g, app, RunConfig(**SMALL, faults=plan))
+    assert res.patterns == clean.patterns
+
+
+# ---------------------------------------------------------------------------
+# recovery visibility in the trace
+# ---------------------------------------------------------------------------
+
+def test_recovery_span_and_degradations_visible_in_trace(tmp_path):
+    clean = _clean()
+    plan = FaultPlan([FaultSpec("expand", 2, "oom")])
+    cfg = RunConfig(**SMALL, faults=plan, trace=True,
+                    trace_dir=str(tmp_path))
+    res = run_supervised(_graph(), MotifsApp(max_size=3), cfg)
+    assert res.patterns == clean.patterns
+    doc = json.load(open(res.trace_path))
+    rec = [e for e in doc["traceEvents"]
+           if e.get("ph") == "X" and e["name"] == "recovery"]
+    assert len(rec) == 1
+    args = rec[0]["args"]
+    assert args["n_retries"] == 1
+    assert args["degradations"] == [f"budget_capped:{faults_lib._BUDGET_SEED}"]
+    # the crashed attempt exported its own partial trace, marked aborted
+    aborted = [
+        json.load(open(os.path.join(tmp_path, f)))
+        for f in sorted(os.listdir(tmp_path)) if f.endswith(".trace.json")
+        if os.path.join(tmp_path, f) != res.trace_path
+    ]
+    assert any(d["otherData"].get("aborted") for d in aborted)
+
+
+# ---------------------------------------------------------------------------
+# int32 count saturation (satellite): counts > 2^31 stay exact
+# ---------------------------------------------------------------------------
+
+BIG = 2 ** 31 + 5
+
+
+def test_fold_partial_int64_counts_past_2_31_exact():
+    lvl1 = aggregation.DeviceLevel1(merge_cap=8)
+    uniq = jnp.asarray(
+        np.array([[3, 0, 0], [5, 0, 0], [0, 0, 0], [0, 0, 0]], np.int64)
+    )
+    counts = jnp.asarray(np.array([BIG, 7, 0, 0], np.int64))
+    lvl1.fold_partial(uniq, counts, jnp.asarray(2, jnp.int32), 4, rows=10)
+    u, c, _ = lvl1.finish()
+    assert c.dtype == np.int64           # fit32 kept the drain wide
+    assert int(c[0]) == BIG and int(c[1]) == 7
+
+
+def test_saturated_int32_partial_forces_wide_refold():
+    lvl1 = aggregation.DeviceLevel1(merge_cap=8)
+    uniq = jnp.asarray(
+        np.array([[3, 0, 0], [5, 0, 0], [0, 0, 0], [0, 0, 0]], np.int64)
+    )
+    sat = jnp.asarray(
+        np.array([agg_kernel.I32_SAT, 7, 0, 0], np.int32)
+    )
+    lvl1.fold_partial(uniq, sat, jnp.asarray(2, jnp.int32), 4, rows=10)
+    assert lvl1.finish() is None         # the 7th flag: re-fold wide
+    # an unsaturated int32 partial still drains normally
+    lvl1 = aggregation.DeviceLevel1(merge_cap=8)
+    ok = jnp.asarray(np.array([9, 7, 0, 0], np.int32))
+    lvl1.fold_partial(uniq, ok, jnp.asarray(2, jnp.int32), 4, rows=16)
+    u, c, _ = lvl1.finish()
+    assert c.tolist() == [9, 7]
+
+
+def test_weighted_bin_rows_past_2_31_exact():
+    codes = jnp.asarray(
+        np.array([[3, 0, 0], [3, 0, 0], [5, 0, 0]], np.int64)
+    )
+    w = jnp.asarray(np.array([BIG, BIG, 3], np.int64))
+    _, counts, _, n, _ = agg_kernel.bin_rows(
+        codes, jnp.ones((3,), bool), 4, weights=w
+    )
+    assert int(n) == 2
+    assert int(counts[0]) == 2 * BIG and int(counts[1]) == 3

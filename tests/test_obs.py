@@ -327,6 +327,43 @@ def test_observer_uninstalls_on_loop_exception(tmp_path):
     assert metrics_lib.current() is None
 
 
+def test_abort_path_flushes_partial_trace(tmp_path):
+    """A run killed mid-superstep (§13 injected crash) still exports a
+    well-formed partial trace: spans closed by the unwinding, document
+    marked aborted, JSONL flushed with a terminal abort record, and
+    ``render_trace --check`` accepts it (coverage gate waived — a partial
+    superstep cannot meet it; schema validation still applies)."""
+    from repro.core.runtime import FaultPlan, FaultSpec
+
+    g = _graph()
+    plan = FaultPlan([FaultSpec("expand", 2, "crash")])
+    cfg = RunConfig(trace=True, trace_dir=str(tmp_path), faults=plan)
+    rt = SuperstepRuntime(g, MotifsApp(max_size=3), cfg)
+    with pytest.raises(Exception, match="injected"):
+        rt.run()
+    # tracer/registry uninstalled despite the abort
+    assert tracer_lib.current() is None
+    assert metrics_lib.current() is None
+    # the partial Chrome trace landed, schema-valid and marked aborted
+    path = rt.observer.trace_path
+    doc = json.load(open(path))
+    assert doc["otherData"]["aborted"] is True
+    assert obs.validate_chrome_trace(doc) == []
+    names = {e["name"] for e in doc["traceEvents"] if e.get("ph") == "X"}
+    # the span the fault tripped inside was closed by the unwinding
+    assert "expand" in names and "superstep" in names
+    # --check passes on the aborted doc, schema problems still rejected
+    assert render_trace.check(doc) == []
+    assert render_trace.main(["--check", path]) == 0
+    # JSONL flushed: the aborted superstep's spans plus a terminal record
+    jsonl = path.replace(".trace.json", ".events.jsonl")
+    records = [json.loads(l) for l in open(jsonl)]
+    assert records[-1]["event"] == "aborted"
+    assert any(
+        r["event"] == "span" and r["name"] == "expand" for r in records
+    )
+
+
 # ---------------------------------------------------------------------------
 # RunStats summary additions + render_trace CLI
 # ---------------------------------------------------------------------------
