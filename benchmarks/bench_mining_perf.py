@@ -113,6 +113,44 @@ def _pallas_ladder():
             f"backend={jax.default_backend()}",
         )
 
+    # ---- ladder_auto: the cost-model-decided rung (DESIGN.md §14) ------
+    # The BENCH_8 regression was ``auto`` (the old static heuristic)
+    # picking a mode measured slower than jnp on CPU. The heuristic is
+    # gone; the decision now comes from the same pilot ladder the engine
+    # runs at bind time. Gate: the decided combo, re-timed back-to-back
+    # against the jnp baseline (same process phase — absolute times drift
+    # ~25% across this bench, so cross-phase ratios are meaningless), must
+    # be within noise of it. If the pilot decides jnp, this is exact.
+    from repro.core.runtime.costmodel import calibrate
+
+    table = calibrate(dg, MotifsApp(max_size=3), EngineConfig(), "serial")
+
+    def time_combo(up, ck):
+        step = lambda: explore.expand_and_compact(
+            dg, members, nv, "vertex", cap,
+            use_pallas=up, compact_kernel=ck,
+        )
+        jax.block_until_ready(step())
+        best = float("inf")
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            jax.block_until_ready(step())
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_auto = time_combo(table.use_pallas, table.compact_kernel)
+    t_jnp_now = time_combo(False, False)
+    vs_jnp = t_jnp_now / t_auto
+    emit(
+        "perf_mining.ladder_auto", t_auto * 1e6,
+        f"use_pallas={table.use_pallas};compact={table.compact_kernel};"
+        f"source={table.source};vs_jnp={vs_jnp:.2f}x",
+    )
+    assert vs_jnp >= 0.90, (
+        f"cost-model ladder pick is {vs_jnp:.2f}x of the jnp baseline — "
+        f"auto must never pick a mode the pilot measured slower"
+    )
+
 
 def main():
     n = len(jax.devices())

@@ -24,6 +24,11 @@ Hard gates (enforced like bench_odag's compression gate):
   * fused host syncs per superstep O(1) (≤ 2: pilot + drain) while both
     baselines pay O(chunks);
   * fused wall-clock ≥ 1.3x faster than the PR-2 chunk loop.
+
+Cost-model rows (DESIGN.md §14): ``force_device``/``force_host`` pin the
+placement extremes and ``auto_costmodel`` is the new default — gated to
+be within 5% of the fastest forced config (auto must never pick a mode
+the pilot measured slower) and a real win over the old static default.
 """
 from __future__ import annotations
 
@@ -47,6 +52,11 @@ SCALE = 0.005
 CHUNK = 512
 REPEAT = 2
 SPEEDUP_GATE = 1.3
+#: auto must be within 5% of the fastest forced placement (noise floor).
+AUTO_GATE = 0.95
+#: and a real win over the old fused-everywhere static default — measured
+#: ~2.4x on CPU; gated conservatively against scheduler noise.
+AUTO_STATIC_GATE = 1.3
 
 
 # ---------------------------------------------------------------------------
@@ -145,8 +155,18 @@ def _pr2_run(g, dg, expand_fn, max_size=3, chunk_size=CHUNK, cap0=CHUNK):
 
 
 def _cfg(async_chunks: bool) -> EngineConfig:
+    # cost_model="off" pins the pre-calibration static defaults so these
+    # rows keep measuring the same dataflow BENCH_8 did; the cost-model
+    # rows below measure the new auto/forced dispatch against them.
     return EngineConfig(
-        async_chunks=async_chunks, chunk_size=CHUNK, initial_capacity=CHUNK
+        async_chunks=async_chunks, chunk_size=CHUNK, initial_capacity=CHUNK,
+        cost_model="off",
+    )
+
+
+def _cm_cfg(mode: str) -> EngineConfig:
+    return EngineConfig(
+        chunk_size=CHUNK, initial_capacity=CHUNK, cost_model=mode
     )
 
 
@@ -219,6 +239,53 @@ def main():
     assert speedup >= SPEEDUP_GATE, (
         f"fused superstep speedup {speedup:.2f}x < {SPEEDUP_GATE}x gate "
         f"(PR-2 {t_pr2 * 1e3:.0f} ms vs fused {t_fused * 1e3:.0f} ms)"
+    )
+
+    # ---- cost-model dispatch rows (DESIGN.md §14) ----------------------
+    # Warm-up runs pay calibration (auto) and compiles once; the timed
+    # runs then hit the process-wide decision-table cache, so the rows
+    # measure dispatch quality, not the pilot.
+    for mode in ("auto", "force_device", "force_host"):
+        run(g, MotifsApp(max_size=3), _cm_cfg(mode))
+    auto, t_auto = _best(lambda: run(g, MotifsApp(max_size=3), _cm_cfg("auto")))
+    fdev, t_fdev = _best(
+        lambda: run(g, MotifsApp(max_size=3), _cm_cfg("force_device"))
+    )
+    fhost, t_fhost = _best(
+        lambda: run(g, MotifsApp(max_size=3), _cm_cfg("force_host"))
+    )
+    assert auto.patterns == fdev.patterns == fhost.patterns == pr2_patterns, (
+        "cost-model modes diverged"
+    )
+    auto_syncs = max(
+        s.n_host_syncs for s in auto.stats.steps if s.n_chunks
+    )
+    assert auto_syncs <= 2, (
+        f"auto cost model broke the O(1)-sync contract: {auto_syncs}"
+    )
+    cm = auto.stats.cost_model
+    t_best_forced = min(t_fdev, t_fhost)
+    auto_vs_forced = t_best_forced / t_auto
+    auto_vs_static = t_fused / t_auto
+    emit("superstep.force_device", t_fdev * 1e6,
+         f"syncs={fdev.stats.total_host_syncs}")
+    emit("superstep.force_host", t_fhost * 1e6,
+         f"syncs={fhost.stats.total_host_syncs}")
+    emit(
+        "superstep.auto_costmodel", t_auto * 1e6,
+        f"source={cm['source']};async={cm['async_chunks']};"
+        f"devagg={cm['device_aggregate']};bin={cm['aggregate_bin']};"
+        f"syncs_per_step_max={auto_syncs};"
+        f"vs_best_forced={auto_vs_forced:.2f}x;"
+        f"speedup_vs_static_default={auto_vs_static:.2f}x",
+    )
+    assert auto_vs_forced >= AUTO_GATE, (
+        f"auto config is {auto_vs_forced:.2f}x of the fastest forced config "
+        f"(gate {AUTO_GATE}x): auto picked a mode the pilot measured slower"
+    )
+    assert auto_vs_static >= AUTO_STATIC_GATE, (
+        f"auto config only {auto_vs_static:.2f}x vs the static fused default "
+        f"(gate {AUTO_STATIC_GATE}x): calibration stopped paying for itself"
     )
 
 

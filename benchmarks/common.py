@@ -4,14 +4,30 @@ can write the machine-readable perf trajectory (BENCH_<n>.json) that
 future PRs gate against."""
 from __future__ import annotations
 
+import os
+import sys
 import time
 from typing import Dict, List
 
 #: THE bench-trajectory version: bump once per PR. ``run.py --json``,
 #: the Makefile and CI all derive the output filename from here so the
 #: three can never disagree again (PR 7 fixed a hardcoded stale default).
-BENCH_VERSION = 8
+BENCH_VERSION = 9
 DEFAULT_BENCH_JSON = f"BENCH_{BENCH_VERSION}.json"
+PREV_BENCH_JSON = f"BENCH_{BENCH_VERSION - 1}.json"
+
+
+def warn_missing_previous(root: str = ".") -> None:
+    """Warn when the previous PR's trajectory file is absent — BENCH_7.json
+    silently vanished in the PR-7 version rename; an explicit warning at
+    ``--json`` time keeps the gap from recurring unnoticed."""
+    if not os.path.exists(os.path.join(root, PREV_BENCH_JSON)):
+        print(
+            f"# WARNING: {PREV_BENCH_JSON} not found next to the new "
+            f"trajectory — the bench history has a gap (commit the previous "
+            f"version's file or note the break in CHANGES.md)",
+            file=sys.stderr,
+        )
 
 #: every emit() of the process, in order — drained by run.py --json.
 RECORDS: List[Dict] = []

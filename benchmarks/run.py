@@ -93,7 +93,9 @@ def main(argv=None) -> None:
     if opts.json:
         import jax
 
-        from benchmarks.common import RECORDS
+        from benchmarks.common import RECORDS, warn_missing_previous
+
+        warn_missing_previous()
 
         with open(opts.json, "w") as f:
             json.dump(

@@ -10,7 +10,12 @@ itself runs as the fused pipeline of DESIGN.md §8: ``async_chunks=True``
 (default) dispatches chunks sync-free with child pattern codes computed
 in the same device pass (``False`` = the PR-2 chunk loop, one host sync
 per chunk), and ``compact_kernel`` routes compaction through the Pallas
-stream-compaction kernel (auto-on where Pallas compiles natively).
+stream-compaction kernel. ``cost_model="auto"`` (the default) resolves
+every unset knob — pipeline shape, aggregation placement, kernel vs jnp,
+sort vs radix bin — to the pilot-measured fastest choice for your
+backend and graph, recorded in ``result.stats.cost_model``; pass
+``cost_model="off"`` for the static defaults or ``cost_model_dir=...``
+to skip the pilot on repeat runs (DESIGN.md §14).
 ``checkpoint_dir=...`` persists every sealed superstep so an interrupted
 run resumes with identical output (DESIGN.md §9,
 ``examples/resume_after_crash.py``). ``trace=True, trace_dir="traces"``

@@ -234,26 +234,27 @@ def aggregate_rows(
 # ---------------------------------------------------------------------------
 
 @functools.partial(
-    jax.jit, static_argnames=("cap", "use_kernel", "interpret")
+    jax.jit, static_argnames=("cap", "use_kernel", "interpret", "method")
 )
-def _bin_all_valid(codes, cap: int, use_kernel: bool, interpret):
+def _bin_all_valid(codes, cap: int, use_kernel: bool, interpret,
+                   method: str = "sort"):
     """Bin one batch of all-valid quick codes at capacity ``cap``."""
     b = codes.shape[0]
     return agg_kernel.bin_rows(
         codes, jnp.ones((b,), bool), cap,
-        use_kernel=use_kernel, interpret=interpret,
+        use_kernel=use_kernel, interpret=interpret, method=method,
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cap", "use_kernel", "interpret")
+    jax.jit, static_argnames=("cap", "use_kernel", "interpret", "method")
 )
 def _bin_weighted(codes, valid, weights, cap: int, use_kernel: bool,
-                  interpret):
+                  interpret, method: str = "sort"):
     """Fold pre-binned partials: weighted re-bin of stacked unique tables."""
     return agg_kernel.bin_rows(
         codes, valid, cap, weights=weights,
-        use_kernel=use_kernel, interpret=interpret,
+        use_kernel=use_kernel, interpret=interpret, method=method,
     )
 
 
@@ -328,7 +329,8 @@ class DeviceLevel1:
     """
 
     def __init__(self, *, merge_cap: int, use_kernel: bool = False,
-                 interpret=None, pending_limit: int = 32) -> None:
+                 bin_method: str = "sort", interpret=None,
+                 pending_limit: int = 32) -> None:
         self.merge_cap = int(merge_cap)
         self.rows = 0                   # host-known rows folded so far
         self.parts: List[tuple] = []    # (uniq, counts i64, uvalid, cap, n)
@@ -338,6 +340,7 @@ class DeviceLevel1:
         self._sat = None                # device flag: int32 partial saturated
         self._compacted = False
         self._use_kernel = use_kernel
+        self._bin_method = bin_method
         self._interpret = interpret
         self._pending_limit = pending_limit
         self._final = None              # (uniq, counts, uvalid, cap, n)
@@ -352,7 +355,7 @@ class DeviceLevel1:
             return
         cap = _next_pow2(b)
         u, c, inv, n, uv = _bin_all_valid(
-            codes, cap, self._use_kernel, self._interpret
+            codes, cap, self._use_kernel, self._interpret, self._bin_method
         )
         self.parts.append((u, c, uv, cap, n))
         self.batches.append((inv, lv, len(self.parts) - 1))
@@ -391,7 +394,7 @@ class DeviceLevel1:
         c = jnp.concatenate([p[1] for p in parts])
         v = jnp.concatenate([p[2] for p in parts])
         mu, mc, minv, mn, muv = _bin_weighted(
-            u, v, c, cap, self._use_kernel, self._interpret
+            u, v, c, cap, self._use_kernel, self._interpret, self._bin_method
         )
         self._merge_ns.append(mn)
         return mu, mc, minv, mn, muv

@@ -48,8 +48,6 @@ from repro.core.runtime.shard import (  # noqa: F401  (canonical home)
     shard_map,
     shard_map_pallas_ok as _shard_map_pallas_ok,
 )
-from repro.kernels.dispatch import default_use_pallas
-
 __all__ = ["DistConfig", "run_distributed", "mining_step_for_dryrun"]
 
 
@@ -88,7 +86,7 @@ def mining_step_for_dryrun(mesh: Mesh, axes=("pod", "data"),
     ``use_pallas=True`` explicitly to lower/inspect the kernel path the
     TPU engine defaults to.
     """
-    resolved_pallas = default_use_pallas() if use_pallas is None else use_pallas
+    resolved_pallas = RunConfig(use_pallas=use_pallas).resolve_use_pallas()
 
     def step(g: DeviceGraph, members, n_valid, quick_dict):
         """members: (B, k) sharded over `axes`; quick_dict: (Q, 3) replicated."""

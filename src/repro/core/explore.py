@@ -450,6 +450,7 @@ def fused_chunk_step(
     fused: bool = False,
     compact_kernel: bool = False,
     aggregate_kernel: bool = False,
+    aggregate_bin: str = "sort",
     interpret=None,
 ):
     """ONE device pass of the fused superstep pipeline (DESIGN.md §8):
@@ -522,6 +523,7 @@ def fused_chunk_step(
             uniq, ucounts, _, n_uniq, _ = aggregate_kernel_lib.bin_rows(
                 qp.codes, child_nv > 0, min(out_cap, agg_qcap),
                 use_kernel=aggregate_kernel, interpret=interpret,
+                method=aggregate_bin,
             )
             # the partial crosses chunks as int32: SATURATE at the I32_SAT
             # sentinel instead of wrapping — fold_partial detects the

@@ -47,7 +47,15 @@ class ExecutionBackend(abc.ABC):
         owns the loop, the backend owns the programs). ``capacity`` is the
         persistent output-capacity bucket — it survives across supersteps
         (one overflow re-dispatch per run, not per step) and is part of the
-        checkpoint cursor."""
+        checkpoint cursor.
+
+        Every tri-state knob is resolved here, ONCE, through the cost
+        model (DESIGN.md §14): ``self.config`` and everything built from
+        it see only concrete choices, and ``self.decisions`` carries the
+        effective table for ``RunStats``/trace recording."""
+        from repro.core.runtime import costmodel
+
+        config, self.decisions = costmodel.resolve(config, g, app, self.name)
         self.g = g
         self.app = app
         self.config = config

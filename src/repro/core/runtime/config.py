@@ -18,7 +18,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.kernels.dispatch import default_use_pallas, resolve_halo
+import jax
+
+from repro.kernels.dispatch import resolve_halo
 
 
 def next_pow2(x: int) -> int:
@@ -28,6 +30,16 @@ def next_pow2(x: int) -> int:
     recompiles only per bucket (DESIGN.md §8) — shared by both backends and
     the benchmarks."""
     return 1 << max(0, (int(x) - 1).bit_length())
+
+
+def _static_native() -> bool:
+    """Pre-resolution fallback for the kernel knobs: Pallas only where it
+    compiles to native code (TPU — see ``costmodel.static_table`` for the
+    rationale).  Configs that went through ``costmodel.resolve`` never hit
+    this — every decided knob is concrete by the time a backend builds its
+    programs; this keeps direct ``resolve_*`` callers (faults ladder,
+    benches) working on an unresolved config."""
+    return jax.default_backend() == "tpu"
 
 
 @dataclasses.dataclass
@@ -63,8 +75,10 @@ class RunConfig:
     #: counts stay device-resident and the host drains them ONCE per
     #: superstep (O(1) host syncs instead of O(chunks)). False = the PR-2
     #: chunk loop (one host sync per chunk, separate quick-pattern pass) —
-    #: kept as the measured baseline.
-    async_chunks: bool = True
+    #: kept as the measured baseline. None -> cost model (DESIGN.md §14):
+    #: the calibration pilot compares the legacy loop's per-chunk tax
+    #: (sync + upload + quick-pattern pass) against the fused pipeline's.
+    async_chunks: Optional[bool] = None
     #: route chunk compaction through the Pallas stream-compaction kernel
     #: (block prefix-sum + scatter, ``kernels/compact.py``) instead of the
     #: jnp nonzero gather. None -> auto: on where Pallas compiles to
@@ -78,11 +92,35 @@ class RunConfig:
     #: codes each superstep. Apps overriding the per-row
     #: ``aggregation_filter`` (instead of ``pattern_filter``) fall back to
     #: the host path automatically — alpha then needs per-row slots.
-    device_aggregate: bool = True
+    #: None -> cost model: measured per-row device fold+merge cost vs
+    #: per-row host drain cost decides the placement per backend.
+    device_aggregate: Optional[bool] = None
     #: route the level-1 segment-unique/reduce through the Pallas kernel
     #: (``kernels/aggregate.py``; the row sort stays on XLA's tuned sort).
     #: None -> auto: on where Pallas compiles natively (TPU), off on CPU.
     aggregate_kernel: Optional[bool] = None
+    #: row-binning algorithm of the device level-1 bin: "sort" keeps XLA's
+    #: 2-key ``lax.sort`` (``kernels/aggregate.py``), "radix" routes
+    #: through the LSB-radix / fused-key bucket bin
+    #: (``kernels/radix_bin.py``) — measured faster on CPU where XLA's
+    #: variadic sort is slow. None -> cost model picks per backend.
+    aggregate_bin: Optional[str] = None
+    #: how the ``None``/auto knobs above resolve (DESIGN.md §14): "auto"
+    #: runs the pilot-calibrated cost model (probe timings pick the
+    #: fastest implementation per phase per backend, cached per
+    #: (backend, app, graph) signature); "off" pins the static defaults
+    #: (fused + device aggregation, Pallas on TPU only); "force_device" /
+    #: "force_host" pin the placement extremes so every dispatch path is
+    #: reachable regardless of measurements.
+    cost_model: str = "auto"
+    #: directory the calibrated decision tables persist in (JSON, one file
+    #: per (backend, platform, app, graph, config) signature) so repeat
+    #: runs in fresh processes skip the calibration pilot. None -> the
+    #: table is cached process-wide only.
+    cost_model_dir: Optional[str] = None
+    #: graphs with fewer edges than this resolve through the static table
+    #: without calibrating — a unit-test-sized run must never pay a pilot.
+    cost_model_min_edges: int = 2048
     #: starting capacity of the cross-batch level-1 merge table (distinct
     #: quick patterns per superstep). Like the output-capacity bucket it
     #: grows by pow2 on overflow — the unclamped distinct count rides the
@@ -160,21 +198,24 @@ class RunConfig:
     keep_checkpoints: int = 0
 
     def resolve_use_pallas(self) -> bool:
-        return default_use_pallas() if self.use_pallas is None else self.use_pallas
+        return _static_native() if self.use_pallas is None else self.use_pallas
 
     def resolve_compact_kernel(self) -> bool:
         return (
-            default_use_pallas()
+            _static_native()
             if self.compact_kernel is None
             else self.compact_kernel
         )
 
     def resolve_aggregate_kernel(self) -> bool:
         return (
-            default_use_pallas()
+            _static_native()
             if self.aggregate_kernel is None
             else self.aggregate_kernel
         )
+
+    def resolve_aggregate_bin(self) -> str:
+        return "sort" if self.aggregate_bin is None else self.aggregate_bin
 
     def resolve_halo(self) -> str:
         return resolve_halo(self.halo)

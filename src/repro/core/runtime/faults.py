@@ -274,8 +274,10 @@ def apply_degradation(config, phase: str, kind: str):
                 dataclasses.replace(config, device_budget_bytes=new),
                 f"budget_halved:{new}",
             )
-        # rung 2: drop the fused pipeline (smaller per-chunk footprint)
-        if config.async_chunks:
+        # rung 2: drop the fused pipeline (smaller per-chunk footprint).
+        # ``is not False`` because the knob is tri-state (None = cost-model
+        # auto, effectively on): an unresolved config still downshifts.
+        if config.async_chunks is not False:
             return (
                 dataclasses.replace(config, async_chunks=False),
                 "fused_off",
@@ -289,8 +291,15 @@ def apply_degradation(config, phase: str, kind: str):
         return config, None
 
     if phase in ("aggregate", "alpha"):
-        # device level-1 aggregation -> host aggregate_rows reference
-        if config.device_aggregate:
+        # rung 1: radix bucket bin -> the lax.sort reference bin
+        if config.resolve_aggregate_bin() == "radix":
+            return (
+                dataclasses.replace(config, aggregate_bin="sort"),
+                "radix_bin_off",
+            )
+        # rung 2: device level-1 aggregation -> host aggregate_rows
+        # reference (tri-state knob: None = cost-model auto = maybe on)
+        if config.device_aggregate is not False:
             return (
                 dataclasses.replace(config, device_aggregate=False),
                 "host_aggregate",
@@ -303,8 +312,8 @@ def apply_degradation(config, phase: str, kind: str):
         return config, None
 
     if phase in ("materialize", "expand", "seal"):
-        # rung 1: fused pipeline -> legacy chunk loop
-        if config.async_chunks:
+        # rung 1: fused pipeline -> legacy chunk loop (tri-state knob)
+        if config.async_chunks is not False:
             return (
                 dataclasses.replace(config, async_chunks=False),
                 "fused_off",

@@ -86,6 +86,11 @@ class SuperstepRuntime:
         self.app = app
         self.backend = backend if backend is not None else SerialBackend()
         self.store = self.backend.bind(self.g, self.app, self.config)
+        # bind resolved every tri-state knob through the cost model
+        # (DESIGN.md §14) — the runtime sees the same concrete config the
+        # backend built its programs from (the supervisor's degradation
+        # ladder inspects these knobs and must see the effective values).
+        self.config = self.backend.config
 
     # -- entry points -------------------------------------------------------
     def run(self) -> MiningResult:
@@ -140,6 +145,17 @@ class SuperstepRuntime:
             with obs.span("recovery", **recovery):
                 pass
 
+        #: the effective cost-model table (DESIGN.md §14): an instant span
+        #: in the trace + a RunStats record, so every placement decision
+        #: is observable without re-deriving it from phase timings.
+        decisions = getattr(backend, "decisions", None)
+        if decisions is not None:
+            with obs.span(
+                "cost_model",
+                source=decisions.source, **decisions.decisions(),
+            ):
+                pass
+
         if state is None:
             result = MiningResult(
                 patterns={}, aggregates=[], stats=RunStats(), embeddings={}
@@ -157,6 +173,8 @@ class SuperstepRuntime:
             )
             prior_wall = state.wall_time
             size, first_step = state.size, state.step
+        if decisions is not None:
+            result.stats.cost_model = decisions.as_dict()
 
         #: fused mode: (codes, local_verts) of the sealed frontier, carried
         #: from the previous superstep's chunk programs — the next

@@ -46,7 +46,7 @@ def make_expand_fn(app: MiningApp, mode: str, use_pallas: bool = False,
                    fused: bool = False, interpret=None,
                    compact_kernel: bool = False, with_patterns: bool = False,
                    with_aggregates: bool = False, agg_qcap: int = 4096,
-                   aggregate_kernel: bool = False,
+                   aggregate_kernel: bool = False, aggregate_bin: str = "sort",
                    with_local_verts: bool = True):
     """Jitted chunk program of the superstep pipeline: expand + canonicality
     + app filter + compaction (+ child quick patterns when the pipeline is
@@ -58,7 +58,7 @@ def make_expand_fn(app: MiningApp, mode: str, use_pallas: bool = False,
     if app_key is not None:
         key = (app_key, mode, use_pallas, fused, interpret,
                compact_kernel, with_patterns, with_aggregates, agg_qcap,
-               aggregate_kernel, with_local_verts)
+               aggregate_kernel, aggregate_bin, with_local_verts)
         cached = _CHUNK_PROGRAM_CACHE.get(key)
         if cached is not None:
             return cached
@@ -77,6 +77,7 @@ def make_expand_fn(app: MiningApp, mode: str, use_pallas: bool = False,
             fused=fused,
             compact_kernel=compact_kernel,
             aggregate_kernel=aggregate_kernel,
+            aggregate_bin=aggregate_bin,
             interpret=interpret,
         )
 

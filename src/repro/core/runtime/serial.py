@@ -53,6 +53,7 @@ class SerialBackend(ExecutionBackend):
         config, app = self.config, self.app
         self._use_pallas = config.resolve_use_pallas()
         self._agg_kernel = config.resolve_aggregate_kernel()
+        self._agg_bin = config.resolve_aggregate_bin()
         store = make_store(
             config.store, self.g,
             mode=app.mode,
@@ -97,6 +98,7 @@ class SerialBackend(ExecutionBackend):
             with_aggregates=self.with_aggregates,
             agg_qcap=self._agg_qcap,
             aggregate_kernel=self._agg_kernel,
+            aggregate_bin=self._agg_bin,
             with_local_verts=app.wants_domains,
         )
         self._cache_before = programs.jit_cache_size(self._expand_fn)
@@ -261,6 +263,7 @@ class SerialBackend(ExecutionBackend):
             with_aggregates=True,
             agg_qcap=self._agg_qcap,
             aggregate_kernel=self._agg_kernel,
+            aggregate_bin=self._agg_bin,
             with_local_verts=self.app.wants_domains,
         )
         new = programs.jit_cache_size(self._expand_fn)
@@ -277,6 +280,7 @@ class SerialBackend(ExecutionBackend):
         lvl1 = aggregation.DeviceLevel1(
             merge_cap=self._run_qcap,
             use_kernel=self._agg_kernel,
+            bin_method=self._agg_bin,
             interpret=config.pallas_interpret,
         )
         wave_dev = (
@@ -378,6 +382,7 @@ class SerialBackend(ExecutionBackend):
                 aggregation.DeviceLevel1(
                     merge_cap=self._run_qcap,
                     use_kernel=self._agg_kernel,
+                    bin_method=self._agg_bin,
                     interpret=config.pallas_interpret,
                 )
                 if self.with_aggregates

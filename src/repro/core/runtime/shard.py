@@ -371,7 +371,7 @@ def _linear_rank(axes):
 
 
 def make_sharded_quick_bin(mesh: Mesh, axes=("data",), use_kernel=False,
-                           interpret=None):
+                           bin_method: str = "sort", interpret=None):
     """Device-resident level-1 aggregation over the mesh (DESIGN.md §10).
 
     Each worker bins its shard's quick codes locally
@@ -401,6 +401,7 @@ def make_sharded_quick_bin(mesh: Mesh, axes=("data",), use_kernel=False,
                 u, c, inv, n, uv = agg_kernel_lib.bin_rows(
                     codes, valid, local_cap,
                     use_kernel=use_kernel, interpret=interpret,
+                    method=bin_method,
                 )
                 gath_u = jax.lax.all_gather(u, axes)    # (W, cap, 3)
                 gath_c = jax.lax.all_gather(c, axes)
@@ -411,6 +412,7 @@ def make_sharded_quick_bin(mesh: Mesh, axes=("data",), use_kernel=False,
                     gath_v.reshape(w * local_cap),
                     global_cap,
                     use_kernel=use_kernel, interpret=interpret,
+                    method=bin_method,
                 )
                 rank = _linear_rank(axes)
                 my_map = jax.lax.dynamic_slice_in_dim(
@@ -589,6 +591,7 @@ class ShardMapBackend(ExecutionBackend):
         self._quick_bin = make_sharded_quick_bin(
             self.mesh, self.axes,
             use_kernel=self._agg_kernel,
+            bin_method=config.resolve_aggregate_bin(),
             interpret=config.pallas_interpret,
         )
         self._domain_scatter = make_sharded_domain_scatter(

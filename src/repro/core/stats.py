@@ -84,6 +84,11 @@ class RunStats:
     #: actually dispatched — width and capacity must be powers of two
     #: (tested); each signature compiles at most one chunk program.
     chunk_signatures: List[tuple] = dataclasses.field(default_factory=list)
+    #: the effective cost-model decision table of this run (DESIGN.md §14):
+    #: every resolved knob + probe timings + provenance ("static" /
+    #: "calibrated" / "cached" / "forced:<mode>") — placement decisions
+    #: must be observable after the fact, not inferred from timings.
+    cost_model: Dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_embeddings(self) -> int:

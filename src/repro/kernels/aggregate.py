@@ -199,7 +199,7 @@ def sort_codes(codes, valid):
 
 
 def bin_rows(codes, valid, cap: int, weights=None, *, use_kernel: bool = False,
-             block: int = 8192, interpret=None):
+             block: int = 8192, interpret=None, method: str = "sort"):
     """Level-1 device binning of one batch of quick codes.
 
     ``codes`` (B, 3) int64, ``valid`` (B,) bool ->
@@ -219,7 +219,23 @@ def bin_rows(codes, valid, cap: int, weights=None, *, use_kernel: bool = False,
 
     Precondition (from the quick-code encoding, see :func:`sort_codes`):
     every code word is non-negative and < 2^32.
+
+    ``method`` selects the partition strategy: ``"sort"`` is this
+    module's `lax.sort` + segment-unique route; ``"radix"`` routes to
+    :mod:`repro.kernels.radix_bin` (Pallas LSB radix / fused-key bucket
+    partition) — same contract, bit-identical outputs, chosen per
+    backend by the cost model (`runtime/costmodel.py`).
     """
+    if method == "radix":
+        # late import: radix_bin's slow-path fallback calls back into this
+        # module (one-way lazy edge breaks the cycle). The module holds no
+        # jnp-valued globals, so importing mid-trace is safe.
+        from repro.kernels import radix_bin
+
+        return radix_bin.bin_rows_radix(
+            codes, valid, cap, weights,
+            use_kernel=use_kernel, block=block, interpret=interpret,
+        )
     b = codes.shape[0]
     if b == 0:
         return (jnp.zeros((cap, 3), jnp.int64), jnp.zeros((cap,), jnp.int64),

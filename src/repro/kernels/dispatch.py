@@ -60,16 +60,7 @@ def device_scope(name: str):
     up with the host spans (``obs.annotate``) without recompiling."""
     return jax.named_scope(f"repro/{name}")
 
-
-def default_use_pallas() -> bool:
-    """Engine-level auto knob (``EngineConfig.use_pallas=None``): route hot
-    paths through the Pallas kernels only where they compile to native code;
-    on CPU the interpreter is strictly slower than the fused-jnp path, so
-    the engine stays on jnp unless explicitly overridden.
-
-    Deliberately TPU-only for now: the canonical-check kernels lean on 2-D
-    advanced-index gathers over VMEM-resident tables, which the Mosaic
-    lowering handles but the Pallas-Triton (GPU) path has not been
-    validated against. GPU users can still opt in with
-    ``use_pallas=True``; the *default* engine path must never crash."""
-    return jax.default_backend() == "tpu"
+# NB: the old ``default_use_pallas`` static heuristic moved into the
+# cost-model layer (``runtime/costmodel.py``): ``static_table`` keeps its
+# TPU-only rule as the pre-calibration default, and calibration replaces
+# it with a measured choice per backend (DESIGN.md §14).

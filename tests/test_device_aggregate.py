@@ -283,9 +283,14 @@ def test_device_aggregate_shard_multiworker_raw():
 
 
 def test_device_aggregate_is_default_and_knob_respected():
-    """device_aggregate defaults on; False is the host regression path
-    (O(frontier) aggregation bytes instead of O(Q))."""
-    assert EngineConfig().device_aggregate is True
+    """device_aggregate resolves on for small graphs (static table);
+    False is the host regression path (O(frontier) aggregation bytes
+    instead of O(Q)). The raw knob is tri-state since the §14 cost model
+    (None = decided at bind time)."""
+    from repro.core.runtime.costmodel import static_table
+
+    assert EngineConfig().device_aggregate is None
+    assert static_table("serial").device_aggregate is True
     g = G.random_labeled(40, 120, n_labels=2, seed=11)
     dev = run(g, MotifsApp(max_size=3), EngineConfig(**SMALL))
     host = run(

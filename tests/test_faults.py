@@ -296,8 +296,9 @@ def test_apply_degradation_rungs_are_pure_config_transforms():
     # checkpoint failures have no rung: retry is the remedy
     c6, e6 = faults_lib.apply_degradation(cfg, "checkpoint", "crash")
     assert e6 is None and c6 is cfg
-    # the original config is never mutated
-    assert cfg.device_budget_bytes is None and cfg.async_chunks
+    # the original config is never mutated (async_chunks default is the
+    # tri-state None = cost-modelled, DESIGN.md §14)
+    assert cfg.device_budget_bytes is None and cfg.async_chunks is None
 
 
 def test_saturate_fault_exercises_wide_refold_both_backends():

@@ -49,9 +49,12 @@ def test_resolve_interpret_explicit_passthrough():
 def test_resolve_interpret_auto_matches_backend():
     expected = jax.default_backend() not in dispatch.COMPILED_BACKENDS
     assert dispatch.resolve_interpret(None) is expected
-    # the engine auto-knob is stricter: default-on only where the kernels
-    # are validated (TPU); GPU/CPU default to the jnp path
-    assert dispatch.default_use_pallas() is (jax.default_backend() == "tpu")
+    # the engine-level static default is stricter: kernels default on only
+    # where they are validated (TPU); GPU/CPU default to the jnp path
+    from repro.core.runtime.costmodel import static_table
+    assert static_table("serial").use_pallas is (
+        jax.default_backend() == "tpu"
+    )
 
 
 def test_large_graph_falls_back_to_jnp(monkeypatch):

@@ -19,7 +19,7 @@ from repro.core import (
 from repro.core.apps import MotifsApp
 from repro.core.distributed import DistConfig
 from repro.core.runtime import SerialBackend, ShardMapBackend, next_pow2
-from repro.kernels.dispatch import default_use_pallas
+from repro.core.runtime.costmodel import static_table
 
 SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro" / "core"
 
@@ -70,8 +70,9 @@ def test_shims_resolve_identically_to_runconfig(knob):
         assert shim.resolve_use_pallas() == base.resolve_use_pallas()
         assert shim.resolve_compact_kernel() == base.resolve_compact_kernel()
         if knob is None:
-            assert shim.resolve_use_pallas() == default_use_pallas()
-            assert shim.resolve_compact_kernel() == default_use_pallas()
+            static = static_table("serial")
+            assert shim.resolve_use_pallas() == static.use_pallas
+            assert shim.resolve_compact_kernel() == static.compact_kernel
         else:
             assert shim.resolve_use_pallas() is knob
             assert shim.resolve_compact_kernel() is knob
