@@ -12,7 +12,7 @@ from typing import Dict, List
 #: THE bench-trajectory version: bump once per PR. ``run.py --json``,
 #: the Makefile and CI all derive the output filename from here so the
 #: three can never disagree again (PR 7 fixed a hardcoded stale default).
-BENCH_VERSION = 9
+BENCH_VERSION = 10
 DEFAULT_BENCH_JSON = f"BENCH_{BENCH_VERSION}.json"
 PREV_BENCH_JSON = f"BENCH_{BENCH_VERSION - 1}.json"
 

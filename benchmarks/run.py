@@ -40,6 +40,7 @@ def main(argv=None) -> None:
     from benchmarks import (
         bench_aggregate,
         bench_breakdown,
+        bench_canon,
         bench_checkpoint,
         bench_faults,
         bench_graphshard,
@@ -70,6 +71,7 @@ def main(argv=None) -> None:
         ("graphshard(§11)", bench_graphshard.main),
         ("obs(§12)", bench_obs.main),
         ("faults(§13)", bench_faults.main),
+        ("canon(§15)", bench_canon.main),
         ("roofline(dry-run)", bench_roofline.main),
     ]
     if opts.smoke:

@@ -31,6 +31,7 @@ import numpy as np
 from repro.core import obs
 from repro.core import pattern as pattern_lib
 from repro.kernels import aggregate as agg_kernel
+from repro.kernels import canonical_refine
 
 
 def _next_pow2(x: int) -> int:
@@ -161,6 +162,7 @@ def aggregate_rows(
     codes: np.ndarray,        # (B, 3) int64 quick codes (host)
     local_verts,              # (B, 8) int32 (host); None iff not with_domains
     with_domains: bool,
+    canon_fn=None,            # level-2 miss hook (device placement)
 ) -> tuple[StepAggregates, np.ndarray]:
     """Full two-level aggregation for one step's embeddings, over
     pre-computed quick patterns (DESIGN.md §7).
@@ -183,7 +185,9 @@ def aggregate_rows(
     codes = np.asarray(codes)
     b = len(codes)
     uniq, inv = quick_slot_ids(codes, np.ones(b, dtype=bool))
-    table = pattern_lib.build_pattern_table(uniq, with_orbits=with_domains)
+    table = pattern_lib.build_pattern_table(
+        uniq, with_orbits=with_domains, canon_fn=canon_fn
+    )
     q = len(uniq)
     pc = len(table.canon_codes)
     if q == 0:
@@ -518,16 +522,180 @@ def build_step_aggregates(table: pattern_lib.PatternTable,
 
 
 def finish_quick_level2(uniq: np.ndarray, counts_q: np.ndarray,
-                        with_domains: bool):
+                        with_domains: bool, canon_fn=None):
     """Host level 2 over device-drained level-1 state: canonicalise the Q
     distinct quick codes (memoised, :func:`pattern.build_pattern_table`)
     and fold the quick counts to canonical slots. Returns
     ``(table, counts (Pc,) int64)``."""
-    table = pattern_lib.build_pattern_table(uniq, with_orbits=with_domains)
+    table = pattern_lib.build_pattern_table(
+        uniq, with_orbits=with_domains, canon_fn=canon_fn
+    )
     pc = len(table.canon_codes)
     counts = np.zeros(pc, dtype=np.int64)
     np.add.at(counts, table.quick_to_canon, counts_q.astype(np.int64))
     return table, counts
+
+
+# ---------------------------------------------------------------------------
+# Level-2 placement (DESIGN.md §15): device re-bin + async host overlap
+# ---------------------------------------------------------------------------
+
+def async_level2_ok(app) -> bool:
+    """True when level 2 may run off the critical path (``host_async``).
+
+    The deferred table must not be consulted mid-step: apps that override
+    ``pattern_filter`` (FSM's support prune feeds alpha) or the per-row
+    ``aggregation_filter``, or that consume orbit domains, need the table
+    before expansion — they silently run the synchronous host placement
+    instead (bit-identical output either way)."""
+    from repro.core.api import MiningApp
+
+    return (
+        app.wants_patterns
+        and not app.wants_domains
+        and type(app).pattern_filter is MiningApp.pattern_filter
+        and type(app).aggregation_filter is MiningApp.aggregation_filter
+    )
+
+
+_ASYNC_EXECUTOR = None
+
+
+def _async_executor():
+    global _ASYNC_EXECUTOR
+    if _ASYNC_EXECUTOR is None:
+        from concurrent.futures import ThreadPoolExecutor
+
+        # one worker: supersteps submit at most one level-2 batch each and
+        # join it at the next seal, so deeper parallelism buys nothing and
+        # single-worker FIFO keeps memo writes ordered.
+        _ASYNC_EXECUTOR = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="repro-canon"
+        )
+    return _ASYNC_EXECUTOR
+
+
+class PendingLevel2:
+    """An in-flight ``host_async`` level-2 batch: the backend submits the
+    drained O(Q) table to the background thread and the loop joins the
+    future at the seal boundary — canonicalisation overlaps the next
+    superstep's expansion instead of sitting on the critical path."""
+
+    def __init__(self, future, n_quick: int):
+        self._future = future
+        self.n_quick = n_quick
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def result(self):
+        """Block until the batch lands: ``(table, counts (Pc,) int64)``."""
+        return self._future.result()
+
+
+def submit_level2(uniq: np.ndarray, counts_q: np.ndarray) -> PendingLevel2:
+    """Queue one step's host level 2 on the background thread (domains are
+    never requested here — ``async_level2_ok`` excludes domain apps)."""
+    fut = _async_executor().submit(finish_quick_level2, uniq, counts_q, False)
+    return PendingLevel2(fut, len(uniq))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cap", "nvs", "with_orbits", "use_kernel", "interpret",
+                     "method"),
+)
+def _level2_program(u, c, uv, cap: int, nvs: tuple, with_orbits: bool,
+                    use_kernel: bool, interpret, method: str):
+    """The in-program device level 2: batched canonical refine of the
+    O(Q) distinct table + weighted quick→canonical re-bin (+ the orbit
+    pass over the canonical table for FSM). ``bin_rows`` emits distinct
+    codes in ascending lexicographic order — the same order as the host's
+    ``np.unique`` — so every output is bit-identical to the host path."""
+    canon, sigma, _ = canonical_refine.refine_codes(
+        u, uv, nvs, with_orbits=False, use_kernel=use_kernel,
+        interpret=interpret,
+    )
+    canon = jnp.where(uv[:, None], canon, 0)
+    cu, cc, q2c, cn, cuv = agg_kernel.bin_rows(
+        canon, uv, cap, weights=c,
+        use_kernel=use_kernel, interpret=interpret, method=method,
+    )
+    if with_orbits:
+        _, _, rep = canonical_refine.refine_codes(
+            cu, cuv, nvs, with_orbits=True, use_kernel=use_kernel,
+            interpret=interpret,
+        )
+    else:
+        rep = jnp.tile(jnp.arange(8, dtype=jnp.int32), (cap, 1))
+    return canon, sigma, cu, cc, q2c, cn, cuv, rep
+
+
+def device_level2(u, c, uv, cap: int, n_final: int, quick_codes: np.ndarray,
+                  counts_q: np.ndarray, *, nvs: tuple, with_domains: bool,
+                  use_kernel: bool = False, interpret=None,
+                  method: str = "sort"):
+    """Device-placed level 2 over the finalized device level-1 state.
+
+    ``u``/``c``/``uv`` are the device distinct table (capacity ``cap``),
+    ``n_final`` the already-drained distinct count, ``quick_codes`` /
+    ``counts_q`` the host copies from the level-1 drain (the quick table
+    still crosses — phase 2 and the memo need it; what this path removes
+    is the host permutation search). The canonical table can never
+    overflow ``cap`` (Pc ≤ Q ≤ cap), so no growth rung is needed.
+
+    Returns ``(table, counts (Pc,) int64, bytes_to_host)``.
+    """
+    canon_d, sigma_d, cu_d, cc_d, q2c_d, cn_d, cuv_d, rep_d = _level2_program(
+        u, c, uv, cap, nvs, with_domains, use_kernel, interpret, method
+    )
+    q = int(n_final)
+    pc = int(cn_d)
+    sigma = np.asarray(sigma_d[:q], dtype=np.int32)
+    q2c = np.asarray(q2c_d[:q], dtype=np.int32)
+    cu = np.asarray(cu_d[:pc], dtype=np.int64)
+    cc = np.asarray(cc_d[:pc], dtype=np.int64)
+    canon_rows = np.asarray(canon_d[:q], dtype=np.int64)
+    if with_domains:
+        orbits = np.asarray(rep_d[:pc], dtype=np.int32)
+    else:
+        orbits = np.tile(
+            np.arange(pattern_lib.MAX_PATTERN_VERTICES, dtype=np.int32),
+            (pc, 1),
+        )
+    nbytes = (sigma.nbytes + q2c.nbytes + cu.nbytes + cc.nbytes
+              + canon_rows.nbytes + (orbits.nbytes if with_domains else 0) + 4)
+    table = pattern_lib.PatternTable(
+        quick_codes=quick_codes,
+        canon_codes=cu,
+        quick_to_canon=q2c,
+        sigma=sigma,
+        canon_n_verts=(cu[:, 0] & 0xF).astype(np.int32),
+        canon_orbits=orbits,
+        n_iso_checks=q,
+    )
+    # warm the host memo with the device results: a later host placement
+    # (degradation rung, resumed run) over the same patterns is then pure
+    # cache hits.
+    pattern_lib.seed_memo(
+        quick_codes, canon_rows, sigma,
+        canon_codes=cu if with_domains else None,
+        orbits=orbits if with_domains else None,
+    )
+    return table, cc, nbytes
+
+
+def level2_nvs(app, size: int) -> tuple:
+    """STATIC nv set of the patterns a step of ``size`` may emit: the
+    per-nv refine passes of the device placement are compiled per this
+    tuple. Vertex mode explores fixed-size embeddings (nv == size); edge
+    mode's embeddings of k edges span 2..min(k+1, 8) vertices."""
+    if getattr(app, "mode", "vertex") == "edge":
+        # a connected k-edge embedding spans 2..k+1 vertices (tree upper
+        # bound), capped at the 8-vertex encoding limit
+        hi = min(int(size) + 1, pattern_lib.MAX_PATTERN_VERTICES)
+        return tuple(range(2, hi + 1))
+    return (min(int(size), pattern_lib.MAX_PATTERN_VERTICES),)
 
 
 def level2_device_tables(table: pattern_lib.PatternTable, cap: int):

@@ -7,12 +7,21 @@ isomorphic embeddings may map to different quick patterns, but the number of
 distinct quick patterns is orders of magnitude smaller than the number of
 embeddings (paper Table 4).
 
-Level 2 (host, once per distinct quick pattern): canonicalisation — the
-minimum encoding over all vertex-position permutations. This replaces the
-paper's use of the ``bliss`` canonical-labeling library; pattern orders are
-small (k ≤ 8) so brute-force minimisation over k! permutations is exact and
-cheap *because* it only runs on quick patterns, never on embeddings — the
-paper's entire argument for the two-level scheme.
+Level 2 (once per distinct quick pattern): canonicalisation — the minimum
+encoding over all vertex-position permutations. This replaces the paper's
+use of the ``bliss`` canonical-labeling library; pattern orders are small
+(k ≤ 8) so brute-force minimisation over k! permutations is exact and cheap
+*because* it only runs on quick patterns, never on embeddings — the paper's
+entire argument for the two-level scheme.
+
+This module is the *host memo/decode layer*: the pure canonical math lives
+in :mod:`repro.core.canon_math` (shared with the batched device kernel
+``kernels/canonical_refine.py``), and every name is re-exported here for
+back-compat. The process-wide quick→canonical memo is thread-safe (the
+``host_async`` placement canonicalises on a background thread) and bounded
+(LRU cap, ``RunConfig.canonical_memo_cap`` / :func:`set_memo_cap` —
+unbounded growth was a real leak on labeled graphs: mico has 37k distinct
+size-3 quick patterns *per scale step*).
 
 Encoding (3 × int64 per pattern):
   w0 = n_vertices | adj_bits << 4     (pair (a<b) -> bit b*(b-1)/2 + a)
@@ -21,20 +30,29 @@ Encoding (3 × int64 per pattern):
 """
 from __future__ import annotations
 
-import itertools
-from typing import NamedTuple
+import threading
+from collections import OrderedDict
+from typing import Callable, NamedTuple, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import DeviceGraph
-
-MAX_PATTERN_VERTICES = 8
-
-
-def _pair_bit(a, b):
-    """Bit index for unordered position pair (a < b)."""
-    return (b * (b - 1)) // 2 + a
+from repro.core.canon_math import (  # noqa: F401  (re-exported, back-compat)
+    MAX_PATTERN_VERTICES,
+    _canonicalize_batch,
+    _decode_batch,
+    _encode_batch,
+    _lex_less,
+    _pair_bit,
+    _perms,
+    automorphism_orbits,
+    canonicalize_one,
+    decode,
+    encode,
+    n_pair_bits,
+    perm_tables,
+)
 
 
 class QuickPatterns(NamedTuple):
@@ -134,177 +152,74 @@ def quick_pattern_edge(
 
 
 # ---------------------------------------------------------------------------
-# Host-side decode / canonicalisation (level 2)
+# Process-wide quick -> canonical memo (thread-safe, bounded LRU)
 # ---------------------------------------------------------------------------
 
-def decode(code) -> tuple[int, np.ndarray, np.ndarray]:
-    """(n_vertices, dense adjacency (nv, nv) bool, labels (nv,))."""
-    w0, w1, w2 = (int(x) for x in code)
-    nv = w0 & 0xF
-    bits = w0 >> 4
-    adj = np.zeros((nv, nv), dtype=bool)
-    for bb in range(1, nv):
-        for aa in range(bb):
-            if (bits >> _pair_bit(aa, bb)) & 1:
-                adj[aa, bb] = adj[bb, aa] = True
-    labels = np.array([(w1 >> (8 * i)) & 0xFF for i in range(4)]
-                      + [(w2 >> (8 * i)) & 0xFF for i in range(4)])[:nv]
-    return nv, adj, labels.astype(np.int32)
+#: default LRU cap: generous (a million distinct patterns ≈ 50 MB of memo)
+#: but finite — labeled-graph workloads otherwise grow the memo without
+#: bound for the lifetime of the process.
+DEFAULT_MEMO_CAP = 1 << 20
+
+_MEMO_LOCK = threading.Lock()
+#: quick code-row bytes -> (canon (3,) int64, sigma (8,) int32). Quick
+#: patterns recur across supersteps and runs (the paper's engine accumulates
+#: exactly this map), so level 2 pays the permutation search once per
+#: distinct pattern per process, not per step.
+_CANON_CACHE: "OrderedDict[bytes, tuple]" = OrderedDict()
+#: canonical code tuple -> orbit representatives (8,) int32 (FSM domains).
+_ORBIT_CACHE: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
+_MEMO_CAP = DEFAULT_MEMO_CAP
 
 
-def encode(nv: int, adj: np.ndarray, labels: np.ndarray) -> tuple[int, int, int]:
-    bits = 0
-    for bb in range(1, nv):
-        for aa in range(bb):
-            if adj[aa, bb]:
-                bits |= 1 << _pair_bit(aa, bb)
-    w0 = nv | (bits << 4)
-    w1 = w2 = 0
-    for i in range(min(nv, 4)):
-        w1 |= int(labels[i]) << (8 * i)
-    for i in range(4, min(nv, 8)):
-        w2 |= int(labels[i]) << (8 * (i - 4))
-    return w0, w1, w2
+def set_memo_cap(cap: Optional[int]) -> int:
+    """Set the LRU cap of the canonical/orbit memos; returns the old cap.
 
-
-_PERMS_CACHE: dict[int, np.ndarray] = {}
-
-#: process-wide quick->canonical memo: code-row bytes -> (canon (3,) int64,
-#: sigma (8,) int32). Quick patterns recur across supersteps and runs (the
-#: paper's engine accumulates exactly this map), so level 2 pays the
-#: permutation search once per distinct pattern per process, not per step.
-_CANON_CACHE: dict[bytes, tuple] = {}
-#: canonical code -> orbit representatives (8,) int32 (FSM domains only).
-_ORBIT_CACHE: dict[tuple, np.ndarray] = {}
-
-
-def _perms(nv: int) -> np.ndarray:
-    if nv not in _PERMS_CACHE:
-        _PERMS_CACHE[nv] = np.array(list(itertools.permutations(range(nv))), np.int32)
-    return _PERMS_CACHE[nv]
-
-
-def _decode_batch(codes: np.ndarray, nv: int):
-    """Vectorised :func:`decode` over (Q, 3) codes sharing ``n_verts``."""
-    w0, w1, w2 = codes[:, 0], codes[:, 1], codes[:, 2]
-    bits = w0 >> 4
-    adj = np.zeros((len(codes), nv, nv), dtype=bool)
-    for bb in range(1, nv):
-        for aa in range(bb):
-            on = ((bits >> _pair_bit(aa, bb)) & 1).astype(bool)
-            adj[:, aa, bb] = adj[:, bb, aa] = on
-    labels = np.zeros((len(codes), nv), dtype=np.int64)
-    for i in range(min(nv, 4)):
-        labels[:, i] = (w1 >> (8 * i)) & 0xFF
-    for i in range(4, min(nv, 8)):
-        labels[:, i] = (w2 >> (8 * (i - 4))) & 0xFF
-    return adj, labels
-
-
-def _encode_batch(adj: np.ndarray, labels: np.ndarray) -> np.ndarray:
-    """Vectorised :func:`encode`: (Q, nv, nv) + (Q, nv) -> (Q, 3) int64."""
-    q, nv = labels.shape
-    bits = np.zeros(q, dtype=np.int64)
-    for bb in range(1, nv):
-        for aa in range(bb):
-            bits |= adj[:, aa, bb].astype(np.int64) << _pair_bit(aa, bb)
-    w0 = nv | (bits << 4)
-    w1 = np.zeros(q, dtype=np.int64)
-    w2 = np.zeros(q, dtype=np.int64)
-    for i in range(min(nv, 4)):
-        w1 |= labels[:, i] << (8 * i)
-    for i in range(4, min(nv, 8)):
-        w2 |= labels[:, i] << (8 * (i - 4))
-    return np.stack([w0, w1, w2], axis=1)
-
-
-def _lex_less(a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    """Row-wise lexicographic a < b over (Q, 3) code triples."""
-    return (
-        (a[:, 0] < b[:, 0])
-        | ((a[:, 0] == b[:, 0]) & (a[:, 1] < b[:, 1]))
-        | ((a[:, 0] == b[:, 0]) & (a[:, 1] == b[:, 1]) & (a[:, 2] < b[:, 2]))
-    )
-
-
-def _canonicalize_batch(codes: np.ndarray):
-    """Batched :func:`canonicalize_one` over (Q, 3) codes sharing
-    ``n_verts``: one vectorised pass per permutation instead of a Python
-    loop per pattern. Identical tie-breaking (first minimal permutation
-    wins), hence bit-identical canon codes and sigmas."""
-    q = len(codes)
-    nv = int(codes[0, 0]) & 0xF
-    sigma = np.tile(np.arange(MAX_PATTERN_VERTICES, dtype=np.int32), (q, 1))
-    if nv <= 1:
-        return codes.astype(np.int64, copy=True), sigma
-    adj, labels = _decode_batch(codes, nv)
-    perms = _perms(nv)
-    best = None
-    best_pi = np.zeros(q, dtype=np.int64)
-    for pi, perm in enumerate(perms):
-        key = _encode_batch(adj[:, perm][:, :, perm], labels[:, perm])
-        if best is None:
-            best = key
-        else:
-            better = _lex_less(key, best)
-            best = np.where(better[:, None], key, best)
-            best_pi = np.where(better, pi, best_pi)
-    chosen = perms[best_pi]                       # (Q, nv): canon pos -> local
-    rows = np.arange(q)[:, None]
-    sigma[rows, chosen] = np.arange(nv, dtype=np.int32)[None, :]
-    return best, sigma
-
-
-def canonicalize_one(code) -> tuple[tuple[int, int, int], np.ndarray]:
-    """Canonical code of one quick pattern + the permutation sigma with
-    sigma[local_pos] = canonical_pos achieving it (graph-isomorphism
-    canonical form; exact, replaces bliss)."""
-    nv, adj, labels = decode(code)
-    if nv <= 1:
-        return encode(nv, adj, labels), np.arange(MAX_PATTERN_VERTICES, dtype=np.int32)
-    perms = _perms(nv)                        # (p!, nv): perm[i] = new position? see below
-    best_key, best_sigma = None, None
-    for perm in perms:
-        # perm maps canonical position -> local position (a relabeling order)
-        padj = adj[np.ix_(perm, perm)]
-        plab = labels[perm]
-        key = encode(nv, padj, plab)
-        if best_key is None or key < best_key:
-            best_key = key
-            sigma = np.empty(nv, dtype=np.int32)
-            sigma[perm] = np.arange(nv, dtype=np.int32)  # local -> canonical
-            best_sigma = sigma
-    full = np.arange(MAX_PATTERN_VERTICES, dtype=np.int32)
-    full[:nv] = best_sigma
-    return best_key, full
-
-
-def automorphism_orbits(code) -> np.ndarray:
-    """Orbit representative per vertex position of a (canonical) pattern.
-
-    Min-image domains are defined over mappings from *any* automorphism of
-    an embedding (paper §4.2); with a single fixed isomorphism per embedding
-    (our sigma), the full domain of position p is the union of the
-    single-isomorphism domains over p's orbit under Aut(pattern). Positions
-    sharing a representative must have their domains OR-ed.
+    ``None`` restores :data:`DEFAULT_MEMO_CAP`. Shrinking evicts
+    least-recently-used entries immediately.
     """
-    nv, adj, labels = decode(np.asarray(code))
-    rep = np.arange(MAX_PATTERN_VERTICES, dtype=np.int32)
-    if nv <= 1:
-        return rep
-    base = encode(nv, adj, labels)
-    for perm in _perms(nv):
-        padj = adj[np.ix_(perm, perm)]
-        plab = labels[perm]
-        if encode(nv, padj, plab) == base:
-            # perm maps new position i -> old position perm[i]; i and
-            # perm[i] are in the same orbit.
-            for i in range(nv):
-                a, b = rep[i], rep[perm[i]]
-                if a != b:
-                    lo, hi = (a, b) if a < b else (b, a)
-                    rep[rep == hi] = lo
-    return rep
+    global _MEMO_CAP
+    with _MEMO_LOCK:
+        old = _MEMO_CAP
+        _MEMO_CAP = DEFAULT_MEMO_CAP if cap is None else max(1, int(cap))
+        while len(_CANON_CACHE) > _MEMO_CAP:
+            _CANON_CACHE.popitem(last=False)
+        while len(_ORBIT_CACHE) > _MEMO_CAP:
+            _ORBIT_CACHE.popitem(last=False)
+    return old
+
+
+def clear_memo() -> None:
+    """Drop every memoised canonicalisation (benchmarks: cold timing)."""
+    with _MEMO_LOCK:
+        _CANON_CACHE.clear()
+        _ORBIT_CACHE.clear()
+
+
+def memo_sizes() -> tuple[int, int]:
+    """(canon entries, orbit entries) currently memoised."""
+    with _MEMO_LOCK:
+        return len(_CANON_CACHE), len(_ORBIT_CACHE)
+
+
+def _memo_get_canon(keys: list) -> dict:
+    """Snapshot memo hits for ``keys`` (marks them recently used)."""
+    out = {}
+    with _MEMO_LOCK:
+        for k in keys:
+            got = _CANON_CACHE.get(k)
+            if got is not None:
+                _CANON_CACHE.move_to_end(k)
+                out[k] = got
+    return out
+
+
+def _memo_put_canon(items) -> None:
+    with _MEMO_LOCK:
+        for k, v in items:
+            _CANON_CACHE[k] = v
+            _CANON_CACHE.move_to_end(k)
+        while len(_CANON_CACHE) > _MEMO_CAP:
+            _CANON_CACHE.popitem(last=False)
 
 
 class PatternTable(NamedTuple):
@@ -320,16 +235,25 @@ class PatternTable(NamedTuple):
 
 
 def build_pattern_table(
-    unique_quick: np.ndarray, with_orbits: bool = True
+    unique_quick: np.ndarray,
+    with_orbits: bool = True,
+    canon_fn: Optional[Callable[[np.ndarray], tuple]] = None,
 ) -> PatternTable:
     """Level 2 for one step's distinct quick patterns, batched + memoised.
 
     Uncached codes are canonicalised in vectorised per-``n_verts`` batches
-    (:func:`_canonicalize_batch`) and remembered process-wide, so the
-    permutation search runs once per distinct pattern per process — across
-    supersteps AND runs (the superstep pipeline's aggregation is host-bound
-    exactly here, DESIGN.md §8). ``n_iso_checks`` stays the *conceptual*
-    per-step invocation count (Table 4 semantics), not the cache-miss count.
+    (:func:`canon_math._canonicalize_batch`) and remembered process-wide, so
+    the permutation search runs once per distinct pattern per process —
+    across supersteps AND runs (the superstep pipeline's aggregation is
+    host-bound exactly here, DESIGN.md §8). ``n_iso_checks`` stays the
+    *conceptual* per-step invocation count (Table 4 semantics), not the
+    cache-miss count.
+
+    ``canon_fn`` (optional) replaces the host permutation search for the
+    cache *misses*: it receives the (M, 3) int64 miss codes (mixed nv) and
+    must return ``(canon (M, 3) int64, sigma (M, 8) int32)`` under the
+    exact :func:`canonicalize_one` contract — the hook the device placement
+    (``kernels/canonical_refine``) plugs into. Memoisation still applies.
 
     ``with_orbits=False`` skips the automorphism-orbit search (only FSM's
     min-image domains consume orbits) and returns identity representatives.
@@ -339,18 +263,28 @@ def build_pattern_table(
     sigma = np.zeros((q, MAX_PATTERN_VERTICES), dtype=np.int32)
     rows64 = np.ascontiguousarray(unique_quick, dtype=np.int64)
     keys = [row.tobytes() for row in rows64]
-    misses = [i for i, k in enumerate(keys) if k not in _CANON_CACHE]
+    # hits snapshotted into a local dict so concurrent eviction can never
+    # drop an entry between the miss pass and the fill loop below.
+    local = _memo_get_canon(keys)
+    misses = [i for i, k in enumerate(keys) if k not in local]
     if misses:
-        miss_codes = unique_quick[misses].astype(np.int64)
-        by_nv: dict[int, list] = {}
-        for j, i in enumerate(misses):
-            by_nv.setdefault(int(miss_codes[j, 0]) & 0xF, []).append(j)
-        for nv, js in by_nv.items():
-            ck, sg = _canonicalize_batch(miss_codes[js])
-            for row, j in enumerate(js):
-                _CANON_CACHE[keys[misses[j]]] = (ck[row], sg[row])
+        miss_codes = rows64[misses]
+        if canon_fn is not None:
+            ck, sg = canon_fn(miss_codes)
+            fresh = [(keys[misses[j]], (ck[j], sg[j])) for j in range(len(misses))]
+        else:
+            fresh = []
+            by_nv: dict[int, list] = {}
+            for j, i in enumerate(misses):
+                by_nv.setdefault(int(miss_codes[j, 0]) & 0xF, []).append(j)
+            for nv, js in by_nv.items():
+                ck, sg = _canonicalize_batch(miss_codes[js])
+                for row, j in enumerate(js):
+                    fresh.append((keys[misses[j]], (ck[row], sg[row])))
+        local.update(fresh)
+        _memo_put_canon(fresh)
     for i, k in enumerate(keys):
-        canon[i], sigma[i] = _CANON_CACHE[k]
+        canon[i], sigma[i] = local[k]
     uniq_canon, inv = np.unique(canon.reshape(q, 3), axis=0, return_inverse=True)
     if with_orbits and len(uniq_canon):
         orbits = np.stack([_orbits_cached(c) for c in uniq_canon], axis=0)
@@ -372,10 +306,35 @@ def build_pattern_table(
 
 def _orbits_cached(code: np.ndarray) -> np.ndarray:
     key = tuple(int(x) for x in code)
-    got = _ORBIT_CACHE.get(key)
-    if got is None:
-        got = _ORBIT_CACHE[key] = automorphism_orbits(code)
+    with _MEMO_LOCK:
+        got = _ORBIT_CACHE.get(key)
+        if got is not None:
+            _ORBIT_CACHE.move_to_end(key)
+            return got
+    got = automorphism_orbits(code)
+    with _MEMO_LOCK:
+        _ORBIT_CACHE[key] = got
+        while len(_ORBIT_CACHE) > _MEMO_CAP:
+            _ORBIT_CACHE.popitem(last=False)
     return got
+
+
+def seed_memo(quick_codes: np.ndarray, canon: np.ndarray, sigma: np.ndarray,
+              canon_codes: Optional[np.ndarray] = None,
+              orbits: Optional[np.ndarray] = None) -> None:
+    """Warm the memo with externally computed (device) canonicalisations so
+    later host passes over the same patterns are cache hits."""
+    rows64 = np.ascontiguousarray(quick_codes, dtype=np.int64)
+    _memo_put_canon(
+        (rows64[i].tobytes(), (canon[i], sigma[i])) for i in range(len(rows64))
+    )
+    if canon_codes is not None and orbits is not None:
+        with _MEMO_LOCK:
+            for i in range(len(canon_codes)):
+                key = tuple(int(x) for x in canon_codes[i])
+                _ORBIT_CACHE[key] = np.asarray(orbits[i], dtype=np.int32)
+            while len(_ORBIT_CACHE) > _MEMO_CAP:
+                _ORBIT_CACHE.popitem(last=False)
 
 
 def pattern_to_networkx(code):

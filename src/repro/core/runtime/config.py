@@ -20,7 +20,7 @@ from typing import Optional
 
 import jax
 
-from repro.kernels.dispatch import resolve_halo
+from repro.kernels.dispatch import resolve_canonical_placement, resolve_halo
 
 
 def next_pow2(x: int) -> int:
@@ -105,6 +105,23 @@ class RunConfig:
     #: (``kernels/radix_bin.py``) — measured faster on CPU where XLA's
     #: variadic sort is slow. None -> cost model picks per backend.
     aggregate_bin: Optional[str] = None
+    #: where level-2 canonicalisation of the distinct quick-code table runs
+    #: (DESIGN.md §15): "device" refines all O(Q) codes in a batched
+    #: permutation kernel inside the aggregation program
+    #: (``kernels/canonical_refine.py``); "host" is the memoised numpy
+    #: batch on the critical path (the reference); "host_async" runs that
+    #: same host batch on a background thread overlapped with the next
+    #: superstep's expansion and joined at the seal boundary (apps that
+    #: prune on patterns mid-step — FSM's support filter — or consume
+    #: domains fall back to "host" silently: alpha needs the table).
+    #: None -> cost model: the calibration pilot times device refine vs
+    #: host batch on the pilot's distinct codes and picks per backend.
+    canonical_placement: Optional[str] = None
+    #: LRU cap of the process-wide quick->canonical memo
+    #: (``pattern.set_memo_cap``). None keeps ``pattern.DEFAULT_MEMO_CAP``
+    #: (2^20 entries); labeled-graph services that mine many graphs can
+    #: lower it to bound resident memo bytes.
+    canonical_memo_cap: Optional[int] = None
     #: how the ``None``/auto knobs above resolve (DESIGN.md §14): "auto"
     #: runs the pilot-calibrated cost model (probe timings pick the
     #: fastest implementation per phase per backend, cached per
@@ -219,3 +236,6 @@ class RunConfig:
 
     def resolve_halo(self) -> str:
         return resolve_halo(self.halo)
+
+    def resolve_canonical_placement(self) -> str:
+        return resolve_canonical_placement(self.canonical_placement)

@@ -67,7 +67,8 @@ from repro.kernels import aggregate as agg_kernel
 from repro.kernels.dispatch import COMPILED_BACKENDS
 
 #: table schema version — bump to invalidate every persisted table.
-SCHEMA_VERSION = 1
+#: v2: + canonical_placement (level-2 placement, DESIGN.md §15).
+SCHEMA_VERSION = 2
 
 #: the config knobs a table decides, in resolution order.
 DECIDED_KNOBS = (
@@ -77,6 +78,7 @@ DECIDED_KNOBS = (
     "compact_kernel",
     "aggregate_kernel",
     "aggregate_bin",
+    "canonical_placement",
 )
 
 COST_MODEL_MODES = ("auto", "off", "force_device", "force_host")
@@ -112,6 +114,7 @@ class DecisionTable:
     compact_kernel: bool = False
     aggregate_kernel: bool = False
     aggregate_bin: str = "sort"      # "sort" | "radix"
+    canonical_placement: str = "host"  # "device" | "host" | "host_async"
     timings: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> Dict:
@@ -169,10 +172,12 @@ def forced_table(mode: str, backend_name: str,
         t.async_chunks = True
         t.device_aggregate = True
         t.aggregate_bin = "radix"
+        t.canonical_placement = "device"
     elif mode == "force_host":
         t.async_chunks = False
         t.device_aggregate = False
         t.aggregate_bin = "sort"
+        t.canonical_placement = "host"
     else:
         raise ValueError(f"unknown forced cost_model mode {mode!r}")
     return t
@@ -423,6 +428,45 @@ def _calibrate(g, app, config, backend_name: str) -> DecisionTable:
     timings["async.legacy_chunk_tax"] = round(legacy_tax, 1)
     timings["async.fused_chunk_tax"] = round(fused_tax, 1)
     table.async_chunks = fused_tax <= legacy_tax
+
+    # ---- probe 5: level-2 placement -> canonical_placement -------------
+    # Device refine batches the whole distinct-code table through the
+    # permutation kernel (upload + refine + drain, the real device-route
+    # cost); the host batch is canon_math._canonicalize_batch per nv
+    # group (memo-cold, exactly what a miss pays).  Device wins on raw
+    # speed; otherwise prefer overlapping the host batch with the next
+    # superstep (host_async) when the app's filters allow a deferred
+    # table, else stay on the synchronous host reference.
+    from repro.core import aggregation, canon_math
+    from repro.kernels import canonical_refine
+
+    u = np.unique(np.asarray(codes)[np.asarray(valid)], axis=0)
+    if len(u):
+        device_us = _time_us(lambda: canonical_refine.canonicalize_on_device(
+            u, use_kernel=table.aggregate_kernel, interpret=interpret,
+        ))
+
+        def host_canon():
+            by_nv: Dict[int, list] = {}
+            for i in range(len(u)):
+                by_nv.setdefault(int(u[i, 0]) & 0xF, []).append(i)
+            for js in by_nv.values():
+                canon_math._canonicalize_batch(u[js])
+            return ()
+
+        host_us = _time_us(host_canon)
+        timings["canon.device"] = round(device_us, 1)
+        timings["canon.host"] = round(host_us, 1)
+        if device_us < host_us:
+            table.canonical_placement = "device"
+        elif table.device_aggregate and aggregation.async_level2_ok(app):
+            # host_async only exists on the device-aggregation path (the
+            # host reference has no deferrable table) — a host_async
+            # decision with device_aggregate=False would silently run
+            # synchronously, so don't record one
+            table.canonical_placement = "host_async"
+        else:
+            table.canonical_placement = "host"
     return table
 
 

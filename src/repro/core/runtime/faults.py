@@ -291,6 +291,16 @@ def apply_degradation(config, phase: str, kind: str):
         return config, None
 
     if phase in ("aggregate", "alpha"):
+        # rung 0: device / overlapped level-2 canonicalisation -> the
+        # synchronous memoised host batch (DESIGN.md §15). No-op for an
+        # unresolved knob (None resolves to "host" pre-calibration), so
+        # existing ladder sequences are unchanged unless the placement was
+        # actually lifted off the host.
+        if config.resolve_canonical_placement() != "host":
+            return (
+                dataclasses.replace(config, canonical_placement="host"),
+                "canon_host",
+            )
         # rung 1: radix bucket bin -> the lax.sort reference bin
         if config.resolve_aggregate_bin() == "radix":
             return (

@@ -112,6 +112,32 @@ class SuperstepRuntime:
         self.backend.capacity = max(int(state.capacity), 1)
         return self._run(state)
 
+    def _join_level2(self, pending, result: MiningResult, st) -> None:
+        """Join an overlapped ``host_async`` level-2 batch (DESIGN.md §15):
+        replace the step's placeholder aggregate and record its surviving
+        patterns. ``t_canon`` here is the *residual* blocking wait — the
+        overlap win is exactly ``host t_canon - this`` — and the drain does
+        not count as a host sync (only control-flow reads do)."""
+        t0 = time.perf_counter()
+        with obs.span(
+            "canonicalize", placement="host_async",
+            n_quick=pending.n_quick, step=st.step,
+        ):
+            table, counts = pending.result()
+        obs.count(st, "t_canon", time.perf_counter() - t0)
+        agg = aggregation.build_step_aggregates(
+            table, counts, counts.copy(), pending.n_quick, st
+        )
+        assert result.aggregates and result.aggregates[-1] is None
+        result.aggregates[-1] = agg
+        # beta/outputs deferred from alpha: async eligibility means no
+        # pattern pruning, so "surviving" is exactly the live patterns
+        for pc in np.flatnonzero(agg.counts > 0):
+            code = tuple(int(x) for x in agg.canon_codes[pc])
+            result.patterns[code] = (
+                result.patterns.get(code, 0) + int(agg.counts[pc])
+            )
+
     # -- the unified loop ---------------------------------------------------
     def _run(self, state) -> MiningResult:
         config, app, store, backend = (
@@ -217,6 +243,7 @@ class SuperstepRuntime:
                     # level 1 stayed on device (DESIGN.md §10) ------------
                     canon_slot = None
                     agg = None
+                    pending = None
                     if app.wants_patterns:
                         with obs.span(
                             "aggregate", step=step, frontier=st.n_frontier
@@ -226,7 +253,17 @@ class SuperstepRuntime:
                             agg, canon_slot = backend.aggregate_step(
                                 blocks, size, carried, st
                             )
-                            result.aggregates.append(agg)
+                            if isinstance(agg, aggregation.PendingLevel2):
+                                # host_async placement (DESIGN.md §15): the
+                                # level-2 batch runs on a background thread;
+                                # eligibility (async_level2_ok) guarantees
+                                # no alpha/beta consumer needs the table
+                                # before the join at the seal boundary.
+                                # Placeholder replaced at the join.
+                                pending, agg = agg, None
+                                result.aggregates.append(None)
+                            else:
+                                result.aggregates.append(agg)
                     carried = None
                     obs.set_stat(st, "t_aggregate", timer.lap())
 
@@ -292,6 +329,10 @@ class SuperstepRuntime:
                         or b_live == 0
                         or step == config.max_steps
                     ):
+                        if pending is not None:
+                            # no next superstep to overlap with: drain the
+                            # in-flight batch now
+                            self._join_level2(pending, result, st)
                         result.stats.steps.append(st)
                         done = True
                     else:
@@ -311,6 +352,15 @@ class SuperstepRuntime:
                             store.seal(size + 1)
                             st.n_children = store.n_rows
                         obs.count(st, "t_storage", timer.lap())
+                        if pending is not None:
+                            # join the overlapped level-2 batch at the seal
+                            # boundary: the next frontier is sealed (and the
+                            # expansion dispatched), so only the residual
+                            # wait — not the whole canonicalisation — lands
+                            # on the critical path. Must complete before
+                            # end_step/checkpoint so the cut never carries
+                            # an in-flight future.
+                            self._join_level2(pending, result, st)
                         backend.end_step(store, st)
                         result.stats.steps.append(st)
 

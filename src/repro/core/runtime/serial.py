@@ -23,6 +23,7 @@ the host reference path (``aggregation.aggregate_rows``).
 """
 from __future__ import annotations
 
+import time
 from typing import List, Optional
 
 import jax
@@ -30,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation, explore, obs, pattern as pattern_lib
+from repro.kernels import canonical_refine
 from repro.core.api import MiningApp
 from repro.core.graph import PartitionedGraph
 from repro.core.runtime import faults as faults_lib
@@ -69,6 +71,16 @@ class SerialBackend(ExecutionBackend):
             and app.wants_patterns
             and type(app).aggregation_filter is MiningApp.aggregation_filter
         )
+        # level-2 placement (DESIGN.md §15): host_async needs a deferrable
+        # table (loop joins at seal) — pruning/domain apps degrade to the
+        # synchronous host reference, bit-identical either way.
+        self._canon_placement = config.resolve_canonical_placement()
+        if self._canon_placement == "host_async" and not (
+            self._device_agg and aggregation.async_level2_ok(app)
+        ):
+            self._canon_placement = "host"
+        if config.canonical_memo_cap is not None:
+            pattern_lib.set_memo_cap(config.canonical_memo_cap)
         #: cross-batch level-1 merge capacity, grown pow2 on observed
         #: overflow (the unclamped distinct count rides the one drain)
         self._agg_qcap = max(config.agg_qcap, 1)
@@ -168,8 +180,19 @@ class SerialBackend(ExecutionBackend):
         return codes, lv
 
     def aggregate(self, codes, lv, st):
+        # host-resident level 1 (reference path): placement "device" still
+        # routes the miss batch through the refine kernel; "host_async" has
+        # no deferrable table here and runs synchronously (bit-identical).
+        canon_fn = (
+            canonical_refine.make_canon_fn(
+                use_kernel=self._agg_kernel,
+                interpret=self.config.pallas_interpret,
+            )
+            if self._canon_placement == "device"
+            else None
+        )
         agg, canon_slot = aggregation.aggregate_rows(
-            self.g.n, codes, lv, self.app.wants_domains
+            self.g.n, codes, lv, self.app.wants_domains, canon_fn=canon_fn
         )
         obs.set_stat(st, "n_quick_patterns", agg.n_quick)
         obs.set_stat(st, "n_canonical_patterns", agg.n_canonical)
@@ -218,9 +241,35 @@ class SerialBackend(ExecutionBackend):
         uniq, counts_q, nbytes = res
         self._run_qcap = max(self._run_qcap, next_pow2(max(lvl1.observed_n, 1)))
         obs.count(st, "bytes_to_host", nbytes)
-        table, counts = aggregation.finish_quick_level2(
-            uniq, counts_q, app.wants_domains
-        )
+        placement = self._canon_placement
+        if placement == "host_async":
+            # overlap: the loop joins the pending future at the seal
+            # boundary, after the next expansion has been enqueued.
+            # Eligibility (async_level2_ok) guarantees no pruning reads
+            # the table this step, so carrying no _table is safe.
+            obs.annotate("canonicalize_submit")
+            pending = aggregation.submit_level2(uniq, counts_q)
+            self._lvl1, self._table = lvl1, None
+            self._agg_blocks, self._agg_size = blocks, size
+            return pending, None
+        t0 = time.perf_counter()
+        with obs.span("canonicalize", placement=placement, n_quick=len(uniq)):
+            if placement == "device" and lvl1._final is not None and len(uniq):
+                u, c, uv, fcap, _n = lvl1._final
+                table, counts, nbytes2 = aggregation.device_level2(
+                    u, c, uv, fcap, len(uniq), uniq, counts_q,
+                    nvs=aggregation.level2_nvs(app, size),
+                    with_domains=app.wants_domains,
+                    use_kernel=self._agg_kernel,
+                    interpret=self.config.pallas_interpret,
+                    method=self._agg_bin,
+                )
+                obs.count(st, "bytes_to_host", nbytes2)
+            else:
+                table, counts = aggregation.finish_quick_level2(
+                    uniq, counts_q, app.wants_domains
+                )
+        obs.count(st, "t_canon", time.perf_counter() - t0)
         pc = len(table.canon_codes)
         if app.wants_domains and pc:
             bm = self._scatter_domains(lvl1, table, st)

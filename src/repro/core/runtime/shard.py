@@ -27,6 +27,7 @@ serial pipeline:
 from __future__ import annotations
 
 import functools
+import time
 from typing import List, NamedTuple
 
 import jax
@@ -43,6 +44,7 @@ from repro.core.runtime.backend import ExecutionBackend
 from repro.core.runtime.config import next_pow2
 from repro.core.store import FrontierStore, make_store
 from repro.kernels import aggregate as agg_kernel_lib
+from repro.kernels import canonical_refine
 from repro.kernels import gather as gather_kernel_lib
 from repro.kernels.dispatch import device_scope
 
@@ -553,6 +555,16 @@ class ShardMapBackend(ExecutionBackend):
             and type(app).aggregation_filter is MiningApp.aggregation_filter
         )
         self._agg_kernel = config.resolve_aggregate_kernel()
+        self._agg_bin = config.resolve_aggregate_bin()
+        # level-2 placement (DESIGN.md §15): same contract as the serial
+        # backend — host_async needs the deferrable device-agg path
+        self._canon_placement = config.resolve_canonical_placement()
+        if self._canon_placement == "host_async" and not (
+            self._device_agg and aggregation.async_level2_ok(app)
+        ):
+            self._canon_placement = "host"
+        if config.canonical_memo_cap is not None:
+            pattern_lib.set_memo_cap(config.canonical_memo_cap)
         #: per-worker distinct-table capacity (pattern-sized, so gathered
         #: bytes stay O(Q)); grows pow2 after a host-fallback step
         self._shard_qcap = next_pow2(max(config.agg_qcap, 1))
@@ -631,8 +643,19 @@ class ShardMapBackend(ExecutionBackend):
             for row in codes:
                 pattern_lib.canonicalize_one(row)           # B iso checks
         uniq, inv = aggregation.quick_slot_ids(codes, np.ones(b, bool))
+        # placement "device" routes the miss batch through the refine
+        # kernel even on this host-reference path (bit-identical);
+        # "host_async" has no deferrable table here and runs synchronously
+        canon_fn = (
+            canonical_refine.make_canon_fn(
+                use_kernel=self._agg_kernel,
+                interpret=config.pallas_interpret,
+            )
+            if self._canon_placement == "device"
+            else None
+        )
         table = pattern_lib.build_pattern_table(
-            uniq, with_orbits=app.wants_domains
+            uniq, with_orbits=app.wants_domains, canon_fn=canon_fn
         )
         pc = len(table.canon_codes)
         canon_slot, verts_canon = aggregation.map_to_canonical_positions(
@@ -759,9 +782,38 @@ class ShardMapBackend(ExecutionBackend):
             fit32=bool(pflags[2]),
         )
         obs.count(st, "bytes_to_host", pflags.nbytes + tbytes)
-        table, counts = aggregation.finish_quick_level2(
-            uniq, counts_q, app.wants_domains
-        )
+        placement = self._canon_placement
+        if placement == "host_async":
+            # overlap: joined by the loop at the seal boundary; eligibility
+            # guarantees neither alpha_rows nor the domain scatter fires
+            obs.annotate("canonicalize_submit")
+            pending = aggregation.submit_level2(uniq, counts_q)
+            self._row_slot, self._row_cnts = row_slot, cnts
+            self._agg_table, self._agg_global_cap = None, global_cap
+            return pending, None
+        t0 = time.perf_counter()
+        with obs.span("canonicalize", placement=placement, n_quick=n):
+            if placement == "device" and n:
+                # canonical re-bin runs on the REPLICATED global table
+                # (identical on every worker post-gather): a second
+                # non-collective program, so the superstep keeps its
+                # <=2-sync contract — no new control reads appear
+                uv_dev = jnp.arange(global_cap) < jnp.int32(n)
+                table, counts, nbytes2 = aggregation.device_level2(
+                    gu[0], gcounts[0], uv_dev, global_cap, n,
+                    uniq, counts_q,
+                    nvs=aggregation.level2_nvs(app, size),
+                    with_domains=app.wants_domains,
+                    use_kernel=self._agg_kernel,
+                    interpret=self.config.pallas_interpret,
+                    method=self._agg_bin,
+                )
+                obs.count(st, "bytes_to_host", nbytes2)
+            else:
+                table, counts = aggregation.finish_quick_level2(
+                    uniq, counts_q, app.wants_domains
+                )
+        obs.count(st, "t_canon", time.perf_counter() - t0)
         pc = len(table.canon_codes)
         if app.wants_domains and pc:
             pc_cap = next_pow2(pc)

@@ -35,6 +35,12 @@ class StepStats:
     bytes_to_host: int = 0
     t_expand: float = 0.0            # G+C phases of Fig 12
     t_aggregate: float = 0.0         # P phase
+    #: seconds of level-2 canonicalisation on the CRITICAL PATH
+    #: (DESIGN.md §15): the host batch or device refine under sync
+    #: placements, but only the residual join wait under ``host_async`` —
+    #: the overlap win is exactly the sync placement's value minus this.
+    #: ``bench_canon.py`` gates host_async at <=1/5 of the host wall.
+    t_canon: float = 0.0
     t_storage: float = 0.0           # W+R phases (ODAG build/extract)
     #: tile-gather seconds of the partitioned layout (DESIGN.md §11/§12):
     #: ``build_tile_view`` runs INSIDE the fused chunk program, so the
@@ -108,8 +114,8 @@ class RunStats:
         """Per-phase wall totals over the run (Fig. 12's split, seconds)."""
         out: Dict[str, float] = {}
         for name in (
-            "t_expand", "t_aggregate", "t_storage", "t_gather",
-            "t_exchange", "t_checkpoint",
+            "t_expand", "t_aggregate", "t_canon", "t_storage",
+            "t_gather", "t_exchange", "t_checkpoint",
         ):
             out[name] = round(sum(getattr(s, name) for s in self.steps), 4)
         return out

@@ -51,6 +51,30 @@ def resolve_halo(halo: Optional[str] = None) -> str:
     return halo
 
 
+#: level-2 canonicalisation placements (DESIGN.md §15).
+CANONICAL_PLACEMENTS = ("device", "host", "host_async")
+
+
+def resolve_canonical_placement(placement: Optional[str] = None) -> str:
+    """Map the level-2 placement knob (``RunConfig.canonical_placement``)
+    to a concrete choice.
+
+    ``None``/``"auto"`` -> ``"host"``: the memoised host batch is the
+    reference placement and the static pre-calibration default — the cost
+    model (``costmodel.resolve``) replaces it with the measured-fastest of
+    ``"device"`` (batched permutation-refinement kernel,
+    ``kernels/canonical_refine.py``) and ``"host_async"`` (background
+    thread joined at the seal boundary) when calibration runs."""
+    if placement is None or placement == "auto":
+        return "host"
+    if placement not in CANONICAL_PLACEMENTS:
+        raise ValueError(
+            f"unknown canonical placement {placement!r} (expected one of "
+            f"{CANONICAL_PLACEMENTS} or 'auto')"
+        )
+    return placement
+
+
 def device_scope(name: str):
     """Named XLA scope for a device-program stage (``repro/<name>``):
     the device-side half of the §12 span taxonomy. ``jax.named_scope``

@@ -1,0 +1,154 @@
+"""Level-2 placement equivalence + the bounded canonical memo (§15).
+
+The acceptance regression of the device-resident/overlapped level-2
+refactor: a mico-like labeled workload whose depth-3 frontier emits tens
+of thousands of DISTINCT size-3 quick patterns (crossing the default
+``agg_qcap`` so the pow2 growth rung fires) must produce bit-identical
+patterns/counts under every ``canonical_placement`` — the synchronous
+host batch, the device refine kernel, and the seal-joined background
+thread — plus the memo-cap knob and thread-safety of the quick→canonical
+cache that all placements share.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import graph as G, pattern as pattern_lib
+from repro.core.apps.motifs import MotifsApp
+from repro.core.runtime.config import RunConfig, next_pow2
+from repro.core.runtime.loop import SuperstepRuntime
+
+PLACEMENTS = ["host", "device", "host_async", None]
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memo():
+    pattern_lib.clear_memo()
+    yield
+    pattern_lib.set_memo_cap(None)
+    pattern_lib.clear_memo()
+
+
+def _run(placement, **kw):
+    # pin the device-aggregation path: the placement dispatch, the qcap
+    # growth rung, and the async overlap all live there (the CPU cost
+    # model would otherwise choose the host reference and the regression
+    # would silently test nothing)
+    cfg = RunConfig(canonical_placement=placement, pallas_interpret=True,
+                    device_aggregate=True, **kw)
+    rt = SuperstepRuntime(G.mico_like(scale=0.005), MotifsApp(max_size=3),
+                          cfg)
+    return rt, rt.run()
+
+
+def test_mico_like_depth3_identical_across_placements():
+    results = {}
+    for placement in PLACEMENTS:
+        pattern_lib.clear_memo()       # cold level 2 for every placement
+        rt, res = _run(placement)
+        results[placement] = res
+        n_quick = max(s.n_quick_patterns for s in res.stats.steps)
+        # the regression's whole point: a LABELED graph whose distinct
+        # size-3 quick-pattern table dwarfs the default agg_qcap
+        assert n_quick >= 10_000
+        # ... which must have fired the pow2 capacity growth rung
+        assert rt.backend._run_qcap >= next_pow2(n_quick)
+        assert rt.backend._run_qcap > next_pow2(rt.config.agg_qcap)
+    base = results["host"]
+    assert len(base.patterns) > 1_000
+    for placement, res in results.items():
+        assert res.patterns == base.patterns, placement
+        for a, b in zip(res.aggregates, base.aggregates):
+            np.testing.assert_array_equal(a.canon_codes, b.canon_codes)
+            np.testing.assert_array_equal(a.counts, b.counts)
+            assert a.n_quick == b.n_quick
+
+
+def test_host_async_overlaps_and_host_critical_path_shrinks():
+    pattern_lib.clear_memo()
+    _, sync = _run("host")
+    pattern_lib.clear_memo()
+    _, overlapped = _run("host_async")
+    assert overlapped.patterns == sync.patterns
+    # overlap exists only where a NEXT superstep runs underneath the
+    # in-flight batch: the terminal step joins on the done path with
+    # nothing to hide behind, so compare the non-final steps — there the
+    # join waits only for the residual, not the whole host batch
+    # (bench_canon gates the full 5x critical-path reduction on the
+    # depth-4 workload whose big table is non-terminal)
+    t_sync = sum(s.t_canon for s in sync.stats.steps[:-1])
+    t_async = sum(s.t_canon for s in overlapped.stats.steps[:-1])
+    assert t_sync > 0
+    assert t_async < t_sync
+
+
+# ---------------------------------------------------------------------------
+# the shared quick->canonical memo: bounded + thread-safe (satellite a)
+# ---------------------------------------------------------------------------
+
+def _codes(n, seed):
+    from repro.core import canon_math
+    rng = np.random.default_rng(seed)
+    out = set()
+    while len(out) < n:
+        adj = np.zeros((4, 4), dtype=bool)
+        for bb in range(1, 4):
+            for aa in range(bb):
+                if rng.random() < 0.5:
+                    adj[aa, bb] = adj[bb, aa] = True
+        out.add(canon_math.encode(4, adj, rng.integers(0, 6, size=4)))
+    return np.array(sorted(out), dtype=np.int64)
+
+
+def test_memo_cap_bounds_and_evicts_lru():
+    old = pattern_lib.set_memo_cap(8)
+    try:
+        assert old == pattern_lib.DEFAULT_MEMO_CAP
+        codes = _codes(24, seed=0)
+        pattern_lib.build_pattern_table(codes)
+        canon_size, _ = pattern_lib.memo_sizes()
+        assert canon_size <= 8
+        # shrinking the cap evicts down immediately
+        pattern_lib.set_memo_cap(2)
+        canon_size, _ = pattern_lib.memo_sizes()
+        assert canon_size <= 2
+    finally:
+        pattern_lib.set_memo_cap(None)
+    assert pattern_lib.set_memo_cap(None) == pattern_lib.DEFAULT_MEMO_CAP
+
+
+def test_memo_cap_config_knob_applies():
+    pattern_lib.set_memo_cap(None)
+    _run("host", canonical_memo_cap=16)
+    canon_size, _ = pattern_lib.memo_sizes()
+    assert canon_size <= 16
+
+
+def test_memo_concurrent_build_is_consistent():
+    codes = _codes(64, seed=3)
+    want = pattern_lib.build_pattern_table(codes)
+    pattern_lib.clear_memo()
+    pattern_lib.set_memo_cap(32)        # force concurrent eviction too
+    tables, errors = [None] * 8, []
+
+    def worker(i):
+        try:
+            rng = np.random.default_rng(i)
+            sub = codes[np.sort(rng.choice(len(codes), 48, replace=False))]
+            for _ in range(5):
+                pattern_lib.build_pattern_table(sub)
+            tables[i] = pattern_lib.build_pattern_table(codes)
+        except Exception as exc:          # surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    for tab in tables:
+        np.testing.assert_array_equal(tab.canon_codes, want.canon_codes)
+        np.testing.assert_array_equal(tab.sigma, want.sigma)
+        np.testing.assert_array_equal(tab.quick_to_canon, want.quick_to_canon)

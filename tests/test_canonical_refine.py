@@ -1,0 +1,193 @@
+"""Device canonical-refine kernel vs. the host oracle (DESIGN.md §15).
+
+The contract under test: ``kernels/canonical_refine.py`` must be
+bit-identical to ``canon_math.canonicalize_one`` (canonical code + sigma,
+first-minimal-permutation tie-break) and ``canon_math.automorphism_orbits``
+(orbit representative per position, computed on canonical codes) — for
+every placement route (jnp fori-loop reference and the Pallas kernel,
+pinned to ``interpret=True`` so CI on CPU exercises the exact kernel
+dataflow).
+
+Coverage: exhaustive adjacency × label enumeration for nv ≤ 4, seeded
+random codes for nv ∈ {5..8}, mixed-nv batches, empty/single-row batches,
+and the numpy convenience wrapper the backends and the cost-model probe
+call.
+"""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import canon_math
+from repro.kernels import canonical_refine as cr
+
+
+def _encode_all(nv: int, labels_pool):
+    """Every adjacency mask × every label assignment for ``nv`` vertices."""
+    nbits = canon_math.n_pair_bits(nv)
+    out = []
+    for mask in range(1 << nbits):
+        adj = np.zeros((nv, nv), dtype=bool)
+        for bb in range(1, nv):
+            for aa in range(bb):
+                if mask & (1 << canon_math._pair_bit(aa, bb)):
+                    adj[aa, bb] = adj[bb, aa] = True
+        for labs in itertools.product(labels_pool, repeat=nv):
+            out.append(canon_math.encode(nv, adj, np.array(labs)))
+    return np.array(out, dtype=np.int64)
+
+
+def _random_codes(nv: int, n: int, seed: int, n_labels: int = 5):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        adj = np.zeros((nv, nv), dtype=bool)
+        for bb in range(1, nv):
+            for aa in range(bb):
+                if rng.random() < 0.5:
+                    adj[aa, bb] = adj[bb, aa] = True
+        labs = rng.integers(0, n_labels, size=nv)
+        out.append(canon_math.encode(nv, adj, labs))
+    return np.array(out, dtype=np.int64)
+
+
+def _oracle(codes):
+    """Host reference: canon + sigma per code, orbits of the CANON code."""
+    canon = np.zeros_like(codes)
+    sigma = np.zeros((len(codes), 8), np.int32)
+    orbits = np.zeros((len(codes), 8), np.int32)
+    for i, row in enumerate(codes):
+        c, s = canon_math.canonicalize_one(row)
+        canon[i] = c
+        sigma[i] = s
+        orbits[i] = canon_math.automorphism_orbits(np.array(c, np.int64))
+    return canon, sigma, orbits
+
+
+def _refine(codes, nvs, use_kernel):
+    canon, sigma, _ = cr.refine_batch(
+        jnp.asarray(codes), jnp.ones((len(codes),), bool), nvs,
+        use_kernel=use_kernel, interpret=True,
+    )
+    # orbit pass runs on canonical codes (Aut(canon) != Aut(quick))
+    _, _, rep = cr.refine_batch(
+        canon, jnp.ones((len(codes),), bool), nvs,
+        with_orbits=True, use_kernel=use_kernel, interpret=True,
+    )
+    return np.asarray(canon), np.asarray(sigma), np.asarray(rep)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True], ids=["jnp", "pallas"])
+@pytest.mark.parametrize("nv", [2, 3, 4])
+def test_exhaustive_small_nv_matches_oracle(nv, use_kernel):
+    codes = _encode_all(nv, labels_pool=(0, 1))
+    want_c, want_s, want_o = _oracle(codes)
+    got_c, got_s, got_o = _refine(codes, (nv,), use_kernel)
+    np.testing.assert_array_equal(got_c, want_c)
+    np.testing.assert_array_equal(got_s, want_s)
+    np.testing.assert_array_equal(got_o, want_o)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True], ids=["jnp", "pallas"])
+@pytest.mark.parametrize("nv", [5, 6, 7, 8])
+def test_seeded_large_nv_matches_oracle(nv, use_kernel):
+    n = 24 if nv < 7 else 6          # 8! perms per row: keep CI sub-minute
+    codes = np.unique(_random_codes(nv, n, seed=nv * 11), axis=0)
+    want_c, want_s, want_o = _oracle(codes)
+    got_c, got_s, got_o = _refine(codes, (nv,), use_kernel)
+    np.testing.assert_array_equal(got_c, want_c)
+    np.testing.assert_array_equal(got_s, want_s)
+    np.testing.assert_array_equal(got_o, want_o)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True], ids=["jnp", "pallas"])
+def test_mixed_nv_batch(use_kernel):
+    codes = np.concatenate([
+        _random_codes(2, 8, seed=1),
+        _random_codes(3, 16, seed=2),
+        _random_codes(4, 16, seed=3),
+        _random_codes(5, 8, seed=4),
+    ])
+    rng = np.random.default_rng(0)
+    codes = codes[rng.permutation(len(codes))]
+    want_c, want_s, _ = _oracle(codes)
+    got_c, got_s, _ = _refine(codes, (2, 3, 4, 5), use_kernel)
+    np.testing.assert_array_equal(got_c, want_c)
+    np.testing.assert_array_equal(got_s, want_s)
+
+
+def test_out_of_nvs_and_invalid_rows_pass_through():
+    codes = np.concatenate([
+        _random_codes(3, 4, seed=9),
+        _random_codes(5, 4, seed=9),      # nv outside nvs: untouched
+    ])
+    valid = np.array([True, True, False, True] + [True] * 4)
+    canon, sigma, rep = cr.refine_batch(
+        jnp.asarray(codes), jnp.asarray(valid), (3,), interpret=True
+    )
+    canon, sigma = np.asarray(canon), np.asarray(sigma)
+    ident = np.arange(8, dtype=np.int32)
+    for i in range(len(codes)):
+        nv = int(codes[i, 0]) & 0xF
+        if valid[i] and nv == 3:
+            want, ws = canon_math.canonicalize_one(codes[i])
+            assert tuple(canon[i]) == want
+            np.testing.assert_array_equal(sigma[i], ws)
+        else:
+            np.testing.assert_array_equal(canon[i], codes[i])
+            np.testing.assert_array_equal(sigma[i], ident)
+
+
+def test_empty_and_single_row_batches():
+    empty = np.zeros((0, 3), np.int64)
+    c, s, r = cr.canonicalize_on_device(empty, interpret=True)
+    assert c.shape == (0, 3) and s.shape == (0, 8) and r.shape == (0, 8)
+    one = _random_codes(4, 1, seed=42)
+    c, s, _ = cr.canonicalize_on_device(one, interpret=True)
+    want, ws = canon_math.canonicalize_one(one[0])
+    assert tuple(c[0]) == want
+    np.testing.assert_array_equal(s[0], ws)
+    # nv <= 1 rows pass through with identity sigma (the host contract)
+    trivial = np.array([[1, 2, 0], [0, 0, 0]], np.int64)
+    c, s, _ = cr.canonicalize_on_device(trivial, interpret=True)
+    np.testing.assert_array_equal(c, trivial)
+    np.testing.assert_array_equal(
+        s, np.tile(np.arange(8, dtype=np.int32), (2, 1))
+    )
+
+
+def test_pallas_route_equals_jnp_route():
+    codes = np.unique(np.concatenate([
+        _random_codes(3, 40, seed=5),
+        _random_codes(4, 40, seed=6),
+        _random_codes(6, 10, seed=7),
+    ]), axis=0)
+    a = _refine(codes, (3, 4, 6), use_kernel=False)
+    b = _refine(codes, (3, 4, 6), use_kernel=True)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_first_minimal_permutation_tie_break():
+    # a fully symmetric pattern (triangle, uniform labels): every
+    # permutation attains the minimum, so sigma must come from the FIRST
+    # one in itertools.permutations order — the identity
+    adj = np.ones((3, 3), dtype=bool)
+    np.fill_diagonal(adj, False)
+    code = np.array(canon_math.encode(3, adj, np.array([2, 2, 2])), np.int64)
+    for use_kernel in (False, True):
+        c, s, rep = _refine(code[None], (3,), use_kernel)
+        assert tuple(c[0]) == tuple(code)
+        np.testing.assert_array_equal(s[0], np.arange(8, dtype=np.int32))
+        # one automorphism orbit: every live position maps to 0
+        np.testing.assert_array_equal(rep[0][:3], np.zeros(3, np.int32))
+
+
+def test_canon_fn_hook_matches_batch_reference():
+    codes = np.unique(_random_codes(4, 60, seed=8), axis=0)
+    fn = cr.make_canon_fn(interpret=True)
+    canon, sigma = fn(codes)
+    want_c, want_s = canon_math._canonicalize_batch(codes)
+    np.testing.assert_array_equal(canon, want_c)
+    np.testing.assert_array_equal(sigma, want_s)

@@ -401,3 +401,39 @@ def test_weighted_bin_rows_past_2_31_exact():
     )
     assert int(n) == 2
     assert int(counts[0]) == 2 * BIG and int(counts[1]) == 3
+
+
+# ---------------------------------------------------------------------------
+# level-2 placement rung (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def test_ladder_canon_placement_downshifts_first():
+    # rung 0 of the aggregate/alpha branch: a lifted level-2 placement
+    # drops to the synchronous host batch before anything else
+    cfg = RunConfig(canonical_placement="device")
+    c1, e1 = faults_lib.apply_degradation(cfg, "aggregate", "crash")
+    assert e1 == "canon_host" and c1.resolve_canonical_placement() == "host"
+    c1b, e1b = faults_lib.apply_degradation(
+        RunConfig(canonical_placement="host_async"), "alpha", "crash"
+    )
+    assert e1b == "canon_host" and c1b.resolve_canonical_placement() == "host"
+    # the NEXT failure proceeds down the pre-existing rungs unchanged
+    c2, e2 = faults_lib.apply_degradation(c1, "aggregate", "crash")
+    assert e2 == "host_aggregate" and c2.device_aggregate is False
+    # unresolved knob (None -> "host" pre-calibration) is a no-op rung:
+    # default-config ladder sequences keep their exact shape
+    c3, e3 = faults_lib.apply_degradation(RunConfig(), "aggregate", "crash")
+    assert e3 == "host_aggregate"
+    assert cfg.canonical_placement == "device"   # inputs never mutated
+
+
+def test_supervised_canon_rung_recovers_bit_identically():
+    clean = _clean()
+    plan = FaultPlan([FaultSpec("aggregate", 2, "crash", times=2)])
+    res = run_supervised(
+        _graph(), MotifsApp(max_size=3),
+        RunConfig(**SMALL, faults=plan, canonical_placement="device",
+                  max_retries=3),
+    )
+    assert res.patterns == clean.patterns
+    assert res.recovery["degradations"][0] == "canon_host"

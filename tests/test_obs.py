@@ -375,7 +375,7 @@ def test_summary_has_bytes_and_phase_walls():
     assert s["total_bytes_to_host"] == res.stats.total_bytes_to_host > 0
     walls = s["phase_walls_s"]
     assert set(walls) == {
-        "t_expand", "t_aggregate", "t_storage", "t_gather",
+        "t_expand", "t_aggregate", "t_canon", "t_storage", "t_gather",
         "t_exchange", "t_checkpoint",
     }
     assert walls["t_expand"] > 0
